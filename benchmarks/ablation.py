@@ -1,0 +1,43 @@
+"""Fig. 10: cache-management ablation — eviction policies (FIFO/Marking/LRU
+vs rank-based) and hierarchical planning on/off; latency-throughput frontier."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (HW1, PAPER_SPECS, Rows, eval_trace,
+                               expert_store_bytes, make_system)
+from repro.core.simulator import ZipMoESim
+
+VARIANTS = [("fifo", dict(plan=False, eviction="fifo")),
+            ("marking", dict(plan=False, eviction="marking")),
+            ("lru", dict(plan=False, eviction="lru")),
+            ("rank", dict(plan=False, eviction="rank")),
+            ("rank+plan", dict(plan=True, eviction="rank"))]
+
+
+def run(rows: Rows):
+    spec = PAPER_SPECS["deepseekv2-lite"]
+    budget = 0.35 * expert_store_bytes(spec)
+    trace = eval_trace(spec, steps=40, seed=6)
+    base = None
+    from benchmarks.common import warm_trace
+    for name, kw in VARIANTS:
+        sim = ZipMoESim(spec, HW1, budget,
+                        warm_trace=warm_trace(spec) if kw["plan"] else None,
+                        plan=kw["plan"], eviction=kw["eviction"])
+        lat = [sim.step(sel) for sel in trace]
+        tpot = float(np.mean(lat[6:]))
+        tput = 1.0 / tpot
+        rows.add(f"fig10/deepseekv2-lite/{name}/tpot", tpot * 1e6,
+                 f"tput={tput:.2f}tok_s")
+        if name == "fifo":
+            base = tpot
+        else:
+            rows.add(f"fig10/deepseekv2-lite/{name}/speedup_vs_fifo", 0.0,
+                     f"{base / tpot:.3f}x")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

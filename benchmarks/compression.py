@@ -1,0 +1,53 @@
+"""Fig. 2 + Fig. 3: exponent-bit entropy / support and lossless compression
+ratios of MoE expert parameters per codec, vs the Shannon bound."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import Rows, timed
+from repro.configs import get_smoke_config
+from repro.core import bitfield
+from repro.core.codec import _REGISTRY, get_codec
+from repro.core.store import iter_expert_groups
+from repro.models import init_params
+
+MODELS = ["deepseekv2-lite", "qwen1.5-moe-a2.7b", "switch-large-128"]
+
+
+def expert_bytes(arch: str, max_groups: int = 12) -> np.ndarray:
+    cfg = get_smoke_config(arch, d_model=256, d_ff=512, vocab_size=1024)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    parts = []
+    for i, (l, e, tensors) in enumerate(iter_expert_groups(params, cfg)):
+        if i >= max_groups:
+            break
+        parts += [np.asarray(t) for t in tensors.values()]
+    return np.concatenate([p.reshape(-1) for p in parts])
+
+
+def run(rows: Rows):
+    for arch in MODELS:
+        w = expert_bytes(arch)
+        exp, sm = bitfield.decompose_np(w)
+        h = bitfield.byte_entropy(exp)
+        supp = bitfield.support_fraction(exp)
+        bound = bitfield.entropy_bound_ratio(w)
+        rows.add(f"fig2/{arch}/exp_entropy_bits", 0.0, f"{h:.3f}")
+        rows.add(f"fig2/{arch}/support_frac", 0.0, f"{supp:.4f}")
+        rows.add(f"fig3/{arch}/shannon_bound", 0.0, f"{bound:.4f}")
+        full = w.tobytes()
+        for codec_name in sorted(_REGISTRY):
+            if codec_name == "raw":
+                continue
+            c = get_codec(codec_name)
+            comp_e, t_e = timed(c.compress, exp.tobytes())
+            ratio = (len(comp_e) + sm.nbytes) / len(full)
+            rows.add(f"fig3/{arch}/{codec_name}_ratio",
+                     t_e * 1e6, f"{ratio:.4f}")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

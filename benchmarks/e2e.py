@@ -1,0 +1,31 @@
+"""Fig. 9: end-to-end latency vs output-token limit."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (HW1, PAPER_SPECS, Rows, eval_trace,
+                               expert_store_bytes, make_system)
+
+SYSTEMS = ["zipmoe", "moe-infinity", "accelerate", "deepspeed"]
+LIMITS = [16, 32, 64]
+
+
+def run(rows: Rows):
+    for model, spec in PAPER_SPECS.items():
+        budget = 0.35 * expert_store_bytes(spec)
+        trace = eval_trace(spec, steps=max(LIMITS), seed=4)
+        for sysname in SYSTEMS:
+            sim = make_system(sysname, spec, HW1, budget)
+            lat = [sim.step(sel) for sel in trace]
+            cum = np.cumsum(lat)
+            for lim in LIMITS:
+                rows.add(f"fig9/{model}/out{lim}/{sysname}/e2e_s", 0.0,
+                         f"{cum[lim-1]:.3f}")
+        for lim in LIMITS:
+            pass  # speedups derivable from rows
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

@@ -1,0 +1,82 @@
+"""§Roofline: assemble the per-cell roofline table from the dry-run JSONs and
+pick the three hillclimb cells (worst roofline fraction, most collective-
+bound, most paper-representative)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Rows
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh="single", variant="baseline"):
+    cells = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh or rec.get("variant", "baseline") != variant:
+            continue
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def roofline_fraction(rec) -> float:
+    """useful-compute time / max(roofline terms) — the score per cell."""
+    t = rec["roofline"]
+    mf_dev = rec["model_flops_per_device"]
+    from repro.launch.mesh import PEAK_FLOPS_BF16
+    t_useful = mf_dev / PEAK_FLOPS_BF16
+    bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return t_useful / bound if bound > 0 else 0.0
+
+
+def run(rows: Rows):
+    cells = load_cells("single")
+    table = []
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec["status"] == "skip":
+            rows.add(f"roofline/{arch}/{shape}", 0.0, f"SKIP: {rec['reason'][:40]}")
+            continue
+        if rec["status"] != "ok":
+            rows.add(f"roofline/{arch}/{shape}", 0.0, "ERROR")
+            continue
+        t = rec["roofline"]
+        frac = roofline_fraction(rec)
+        table.append(((arch, shape), rec, frac))
+        rows.add(f"roofline/{arch}/{shape}",
+                 max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+                 f"comp={t['compute_s']:.2e}s mem={t['memory_s']:.2e}s "
+                 f"coll={t['collective_s']:.2e}s dom={t['dominant']} "
+                 f"frac={frac:.4f} useful={rec['useful_flop_ratio'] or 0:.3f}")
+    if not table:
+        rows.add("roofline/NO_DATA", 0.0, "run launch/dryrun.py --all first")
+        return
+
+    worst = min(table, key=lambda x: x[2])
+    coll = max(table, key=lambda x: (x[1]["roofline"]["collective_s"] /
+                                     max(1e-12, max(x[1]["roofline"]["compute_s"],
+                                                    x[1]["roofline"]["memory_s"]))))
+    # paper-representative: MoE decode (the paper's own workload)
+    rep = None
+    for (arch, shape), rec, frac in table:
+        if arch in ("deepseek-v2-236b", "qwen2-moe-a2.7b") and shape == "decode_32k":
+            rep = ((arch, shape), rec, frac)
+            if arch == "qwen2-moe-a2.7b":
+                break
+    rows.add("roofline/hillclimb/worst_fraction", 0.0,
+             f"{worst[0][0]}/{worst[0][1]} frac={worst[2]:.4f}")
+    rows.add("roofline/hillclimb/most_collective_bound", 0.0,
+             f"{coll[0][0]}/{coll[0][1]}")
+    if rep:
+        rows.add("roofline/hillclimb/paper_representative", 0.0,
+                 f"{rep[0][0]}/{rep[0][1]} frac={rep[2]:.4f}")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

@@ -1,0 +1,64 @@
+"""Theorem 3.1 empirical check: ALG/LB ratio distribution over random task
+sets + the engine-vs-naive makespan gain."""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.core.scheduler import naive_schedule, schedule
+from repro.core.states import CState, lower_bound, make_tasks
+
+STATES = [CState.M, CState.E, CState.S, CState.C]
+
+
+def run(rows: Rows):
+    rnd = random.Random(0)
+    ratios, gains = [], []
+    for _ in range(400):
+        n = rnd.randint(2, 14)
+        L = rnd.choice([2, 3, 4, 6])
+        states = [rnd.choice(STATES) for _ in range(n)]
+        ps = [rnd.uniform(0.02, 1.0) for _ in range(n)]
+        tasks = make_tasks(list(range(n)), states, ps,
+                           n_tensors=rnd.randint(1, 3),
+                           u=rnd.uniform(0.3, 2.0), rho=rnd.uniform(0.2, 0.6),
+                           c=rnd.uniform(0.02, 0.6), K=rnd.choice([2, 4]))
+        _, tl = schedule(tasks, L)
+        lb = lower_bound(tasks, L)
+        ratios.append(tl.makespan / lb)
+        gains.append(naive_schedule(tasks, L).makespan / tl.makespan)
+    rows.add("thm31/alg_over_lb_mean", 0.0, f"{np.mean(ratios):.4f}")
+    rows.add("thm31/alg_over_lb_p99", 0.0,
+             f"{np.percentile(ratios, 99):.4f}")
+    rows.add("thm31/alg_over_lb_max", 0.0, f"{np.max(ratios):.4f}")
+    rows.add("thm31/bound_3_minus_1_over_L", 0.0, "never exceeded"
+             if all(r <= 3 for r in ratios) else "VIOLATED")
+    rows.add("thm31/naive_over_alg_p95", 0.0,
+             f"{np.percentile(gains, 95):.3f}x")
+
+    # straggler mitigation: one of L=4 workers at 25% speed
+    from repro.core.scheduler import build_blocks, simulate
+    infl = []
+    for seed in range(60):
+        rnd2 = random.Random(1000 + seed)
+        n = rnd2.randint(4, 12)
+        tasks = make_tasks(list(range(n)),
+                           [rnd2.choice(STATES) for _ in range(n)],
+                           [rnd2.uniform(0.02, 0.5) for _ in range(n)],
+                           n_tensors=2, u=1.0, rho=0.4, c=0.3, K=4)
+        blocks = build_blocks(tasks, 4)
+        base = simulate(blocks, 4).makespan
+        slow = simulate(blocks, 4, worker_speeds=[0.25, 1, 1, 1]).makespan
+        infl.append(slow / base)
+    rows.add("straggler/makespan_inflation_mean", 0.0,
+             f"{np.mean(infl):.3f}x (one of 4 workers at 25% speed)")
+    rows.add("straggler/makespan_inflation_p95", 0.0,
+             f"{np.percentile(infl, 95):.3f}x")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

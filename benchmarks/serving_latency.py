@@ -1,0 +1,45 @@
+"""Fig. 7: TPOT / TTFT vs memory budget, 4 systems × paper models × 2 HW."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (HW1, HW2, PAPER_SPECS, Rows, eval_trace,
+                               expert_store_bytes, make_system)
+
+SYSTEMS = ["zipmoe", "moe-infinity", "accelerate", "deepspeed"]
+BUDGET_FRACS = [0.2, 0.35, 0.5]
+STEPS = 48
+
+
+def run(rows: Rows):
+    for hw_name, hw in [("hw1", HW1), ("hw2", HW2)]:
+        for model, spec in PAPER_SPECS.items():
+            trace = eval_trace(spec, steps=STEPS)
+            prefill_trace = eval_trace(spec, steps=2, seed=9,
+                                       batch=8)        # batch'd prefill proxy
+            for frac in BUDGET_FRACS:
+                budget = frac * expert_store_bytes(spec)
+                tpots = {}
+                for sysname in SYSTEMS:
+                    sim = make_system(sysname, spec, hw, budget)
+                    lat = [sim.step(sel) for sel in trace]
+                    tpot = float(np.mean(lat[6:]))
+                    sim2 = make_system(sysname, spec, hw, budget, batch=8)
+                    ttft = float(np.mean([sim2.step(sel)
+                                          for sel in prefill_trace]))
+                    tpots[sysname] = tpot
+                    rows.add(f"fig7/{hw_name}/{model}/mem{int(frac*100)}"
+                             f"/{sysname}/tpot", tpot * 1e6, "")
+                    rows.add(f"fig7/{hw_name}/{model}/mem{int(frac*100)}"
+                             f"/{sysname}/ttft", ttft * 1e6, "")
+                best_base = min(v for k, v in tpots.items() if k != "zipmoe")
+                red = 1 - tpots["zipmoe"] / best_base
+                rows.add(f"fig7/{hw_name}/{model}/mem{int(frac*100)}"
+                         f"/tpot_reduction_vs_best_baseline", 0.0,
+                         f"{red:.2%}")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

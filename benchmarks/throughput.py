@@ -1,0 +1,36 @@
+"""Fig. 8: system throughput (tokens/s) vs batch size {1, 4, 16}."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (HW1, PAPER_SPECS, Rows, eval_trace,
+                               expert_store_bytes, make_system)
+
+SYSTEMS = ["zipmoe", "moe-infinity", "accelerate", "deepspeed"]
+BATCHES = [1, 4, 16]
+STEPS = 24
+
+
+def run(rows: Rows):
+    for model, spec in PAPER_SPECS.items():
+        budget = 0.35 * expert_store_bytes(spec)
+        for bs in BATCHES:
+            trace = eval_trace(spec, steps=STEPS, batch=bs, seed=2)
+            tput = {}
+            for sysname in SYSTEMS:
+                sim = make_system(sysname, spec, HW1, budget, batch=bs)
+                lat = [sim.step(sel) for sel in trace]
+                tok_s = bs / float(np.mean(lat[4:]))
+                tput[sysname] = tok_s
+                rows.add(f"fig8/{model}/bs{bs}/{sysname}/tok_s", 0.0,
+                         f"{tok_s:.2f}")
+            gain = tput["zipmoe"] / max(1e-12, max(
+                v for k, v in tput.items() if k != "zipmoe"))
+            rows.add(f"fig8/{model}/bs{bs}/zipmoe_gain_vs_best", 0.0,
+                     f"{gain:.2f}x")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

@@ -1,0 +1,26 @@
+"""Batched request serving example: continuous batching with TTFT/throughput
+metrics over a queue of prompts.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serving.server import BatchServer
+
+cfg = get_smoke_config("granite-8b")
+params = init_params(jax.random.PRNGKey(0), cfg)
+srv = BatchServer(params, cfg, max_batch=4, temperature=0.0)
+
+rng = np.random.default_rng(0)
+for i in range(10):
+    plen = int(rng.choice([8, 8, 8, 16]))         # two prefill buckets
+    srv.submit(rng.integers(0, cfg.vocab_size, plen), max_new_tokens=12)
+
+done = srv.run()
+for r in done[:4]:
+    print(f"req {r.rid}: prompt_len={len(r.prompt)} "
+          f"ttft={r.ttft*1e3:.1f}ms out={r.output[:6]}...")
+print("metrics:", srv.metrics())

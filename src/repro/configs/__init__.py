@@ -1,0 +1,11 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, SHAPE_BY_NAME, reduced
+from repro.configs.registry import (
+    ASSIGNED, PAPER_MODELS, all_cells, get_config, get_smoke_config,
+    shape_applicable,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "SHAPE_BY_NAME", "reduced",
+    "ASSIGNED", "PAPER_MODELS", "all_cells", "get_config", "get_smoke_config",
+    "shape_applicable",
+]

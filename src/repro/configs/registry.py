@@ -1,0 +1,67 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+The 10 assigned architectures plus the paper's own evaluation models.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, SHAPE_BY_NAME, reduced
+
+# arch-id -> module name
+_ARCH_MODULES = {
+    "granite-8b": "granite_8b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen3-14b": "qwen3_14b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mamba2-370m": "mamba2_370m",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "whisper-small": "whisper_small",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    # paper evaluation models
+    "deepseekv2-lite": "deepseekv2_lite",
+    "qwen1.5-moe-a2.7b": "qwen2_moe_a27b",   # identical architecture
+    "switch-large-128": "switch_large_128",
+}
+
+ASSIGNED: List[str] = [
+    "granite-8b", "deepseek-coder-33b", "starcoder2-3b", "qwen3-14b",
+    "qwen2-moe-a2.7b", "deepseek-v2-236b", "mamba2-370m", "jamba-v0.1-52b",
+    "whisper-small", "qwen2-vl-2b",
+]
+
+PAPER_MODELS: List[str] = ["deepseekv2-lite", "qwen1.5-moe-a2.7b", "switch-large-128"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    cfg = mod.CONFIG
+    if cfg.name != arch and arch in PAPER_MODELS:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, name=arch)
+    return cfg
+
+
+def get_smoke_config(arch: str, **overrides) -> ModelConfig:
+    return reduced(get_config(arch), **overrides)
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Is (arch, shape) a runnable cell?  Returns (ok, reason-if-skip)."""
+    shape = SHAPE_BY_NAME[shape_name]
+    if shape_name == "long_500k":
+        if cfg.family not in ("ssm", "hybrid"):
+            return False, ("pure full-attention arch: 512k dense KV decode skipped "
+                           "per assignment (sub-quadratic archs only); see DESIGN.md")
+    return True, ""
+
+
+def all_cells(archs=None) -> List[tuple[str, str]]:
+    """All 40 (arch, shape) cells, including ones marked skip."""
+    archs = archs or ASSIGNED
+    return [(a, s.name) for a in archs for s in SHAPES]

@@ -1,0 +1,103 @@
+"""BF16 bit-field decomposition (§2.2, §3.1 offline initialization step ❶).
+
+A BF16 value is ``(-1)^sign · 2^(exp-127) · 1.mantissa`` with bit layout
+``s eeeeeeee mmmmmmm`` (1+8+7).  ZipMoE splits each element into
+
+* **exponent plane**  — 8 exponent bits, one byte per element (low entropy,
+  compressible);
+* **sign–mantissa plane** — sign bit + 7 mantissa bits packed into one byte
+  (near-random, stored raw).
+
+Both planes are byte-aligned so the split/merge is pure byte arithmetic.
+numpy versions run on the host (offline compression pipeline / CPU workers);
+jnp versions are the oracle for the Pallas recovery kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+try:  # ml_dtypes ships with jax
+    import ml_dtypes
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    BF16 = None
+
+
+# ----------------------------------------------------------------------------
+# numpy (host side)
+# ----------------------------------------------------------------------------
+def decompose_np(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """BF16 ndarray -> (exp_plane u8, sm_plane u8), flattened."""
+    if arr.dtype != BF16:
+        arr = arr.astype(BF16)
+    u = arr.reshape(-1).view(np.uint16)
+    exp = ((u >> 7) & 0xFF).astype(np.uint8)
+    sm = (((u >> 8) & 0x80) | (u & 0x7F)).astype(np.uint8)
+    return exp, sm
+
+
+def reconstruct_np(exp: np.ndarray, sm: np.ndarray, shape=None) -> np.ndarray:
+    """(exp u8, sm u8) -> BF16 ndarray."""
+    e = exp.astype(np.uint16)
+    s = sm.astype(np.uint16)
+    u = ((s & 0x80) << 8) | (e << 7) | (s & 0x7F)
+    out = u.view(BF16)
+    return out.reshape(shape) if shape is not None else out
+
+
+# ----------------------------------------------------------------------------
+# jnp (device-side oracle; the Pallas kernel implements the same splice)
+# ----------------------------------------------------------------------------
+def decompose_jnp(arr: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    u = jnp.asarray(arr, jnp.bfloat16).view(jnp.uint16)
+    exp = ((u >> 7) & 0xFF).astype(jnp.uint8)
+    sm = (((u >> 8) & 0x80) | (u & 0x7F)).astype(jnp.uint8)
+    return exp, sm
+
+
+def reconstruct_jnp(exp: jnp.ndarray, sm: jnp.ndarray) -> jnp.ndarray:
+    e = exp.astype(jnp.uint16)
+    s = sm.astype(jnp.uint16)
+    u = ((s & 0x80) << 8) | (e << 7) | (s & 0x7F)
+    return u.view(jnp.bfloat16)
+
+
+# ----------------------------------------------------------------------------
+# K-sharding of the exponent plane (E-chunks)
+# ----------------------------------------------------------------------------
+def shard_bounds(n: int, k: int) -> List[Tuple[int, int]]:
+    """K contiguous shards covering [0, n) (last shard absorbs the remainder)."""
+    step = n // k
+    return [(i * step, (i + 1) * step if i < k - 1 else n) for i in range(k)]
+
+
+def shard_plane(plane: np.ndarray, k: int) -> List[np.ndarray]:
+    return [plane[a:b] for a, b in shard_bounds(plane.size, k)]
+
+
+# ----------------------------------------------------------------------------
+# entropy measurement (Fig. 2)
+# ----------------------------------------------------------------------------
+def byte_entropy(plane: np.ndarray) -> float:
+    """Shannon entropy (bits/symbol) of a u8 plane."""
+    counts = np.bincount(plane.reshape(-1), minlength=256).astype(np.float64)
+    p = counts / max(1, counts.sum())
+    nz = p[p > 0]
+    return float(-(nz * np.log2(nz)).sum())
+
+
+def support_fraction(plane: np.ndarray) -> float:
+    """Fraction of the 256 symbols actually used (Fig. 2 support set)."""
+    return float((np.bincount(plane.reshape(-1), minlength=256) > 0).mean())
+
+
+def entropy_bound_ratio(arr: np.ndarray) -> float:
+    """Shannon lower bound on compressed size / original size (§2.2):
+    sm plane stays 8 bits, exp plane compresses to its entropy."""
+    exp, sm = decompose_np(arr)
+    h_exp = byte_entropy(exp)
+    return (8.0 + h_exp) / 16.0

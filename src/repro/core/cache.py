@@ -1,0 +1,195 @@
+"""Compression-aware hierarchical cache (§3.4).
+
+Pools in hierarchy order F ≺ C ≺ S ≺ E:
+  F : fully reconstructed tensors          (bytes/expert: 2·n_elems)
+  C : compressed E-chunks + SM-chunks      (sm + e_compressed)
+  S : SM-chunks only                        (sm)
+  E : E-chunks only                         (e_compressed)
+
+Dispatch: an expert with observed rank r goes to the first pool i whose
+cumulative-capacity threshold ``τ_i = Σ_{j⪯i} S_j + δ`` exceeds r.  Overflow
+evicts the pool's least-frequently-activated resident.  Experts beyond every
+threshold are evicted right after execution.
+
+``FlatCache`` provides the FIFO / LRU / Marking baselines for the Fig. 10
+ablation (single full-tensor pool, classic eviction policies).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.states import CState
+from repro.core.workload import FreqTracker
+
+POOL_ORDER = ("F", "C", "S", "E")
+
+# pool residency -> compression state of an expert
+def residency_state(in_f: bool, has_e: bool, has_sm: bool) -> CState:
+    if in_f:
+        return CState.F
+    if has_e and has_sm:
+        return CState.C
+    if has_sm:
+        return CState.S
+    if has_e:
+        return CState.E
+    return CState.M
+
+
+@dataclass
+class PoolEntry:
+    expert: int
+    payload: object = None          # engine attaches real buffers here
+
+
+class HierarchicalCache:
+    """Bookkeeping for one sparse layer's expert cache."""
+
+    def __init__(self, capacities: Dict[str, int], tracker: FreqTracker,
+                 delta: int = 1):
+        self.cap = {p: int(capacities.get(p, 0)) for p in POOL_ORDER}
+        self.tracker = tracker
+        self.delta = delta
+        self.pools: Dict[str, Dict[int, PoolEntry]] = {p: {} for p in POOL_ORDER}
+        self.hits = collections.Counter()
+        self.misses = 0
+
+    # -- state queries --------------------------------------------------------
+    def residency(self, expert: int) -> CState:
+        in_f = expert in self.pools["F"]
+        in_c = expert in self.pools["C"]
+        has_e = in_c or expert in self.pools["E"]
+        has_sm = in_c or expert in self.pools["S"]
+        return residency_state(in_f, has_e, has_sm)
+
+    def thresholds(self) -> Dict[str, int]:
+        t, cum = {}, 0
+        for p in POOL_ORDER:
+            cum += self.cap[p]
+            t[p] = cum + self.delta
+        return t
+
+    def target_pool(self, expert: int) -> Optional[str]:
+        r = self.tracker.rank(expert)
+        for p, tau in self.thresholds().items():
+            if self.cap[p] > 0 and r < tau:
+                return p
+        return None
+
+    # -- mutation ---------------------------------------------------------------
+    def _place(self, expert: int, start_pool: str, payload=None,
+               depth: int = 0) -> Optional[str]:
+        """Insert `expert` at `start_pool` or the first lower pool that admits
+        its rank.  On overflow the *least-frequent* of {residents ∪ incoming}
+        loses and cascades down — the δ-tolerance margin can therefore never
+        churn a hot expert out of the cache entirely."""
+        if depth > len(POOL_ORDER) + 2:
+            return None
+        taus = self.thresholds()
+        r = self.tracker.rank(expert)
+        started = False
+        for p in POOL_ORDER:
+            if p == start_pool:
+                started = True
+            if not started or self.cap[p] <= 0 or r >= taus[p]:
+                continue
+            if len(self.pools[p]) < self.cap[p]:
+                self.pools[p][expert] = PoolEntry(expert, payload)
+                return p
+            victim = self.tracker.least_frequent(list(self.pools[p]))
+            if self.tracker.counts[victim] < self.tracker.counts[expert]:
+                ent = self.pools[p].pop(victim)
+                self.pools[p][expert] = PoolEntry(expert, payload)
+                # demote the displaced resident to the next pool down
+                nxt = POOL_ORDER.index(p) + 1
+                if nxt < len(POOL_ORDER):
+                    self._place(victim, POOL_ORDER[nxt], None, depth + 1)
+                return p
+            # incoming loses: try the next pool down for it
+        return None
+
+    def admit(self, expert: int, payload=None) -> Optional[str]:
+        """Place expert per dispatch rule (called after its execution)."""
+        target = self.target_pool(expert)
+        # drop from any other pool (state change / re-placement)
+        for p in POOL_ORDER:
+            if expert in self.pools[p]:
+                del self.pools[p][expert]
+        if target is None:
+            return None
+        return self._place(expert, target, payload)
+
+    def record_access(self, experts: Sequence[int]) -> Dict[int, CState]:
+        """Look up states for a step's selected experts + update stats."""
+        self.tracker.record(experts)
+        out = {}
+        for e in experts:
+            st = self.residency(e)
+            out[e] = st
+            if st is CState.M:
+                self.misses += 1
+            else:
+                self.hits[st.name] += 1
+        return out
+
+    def occupancy(self) -> Dict[str, int]:
+        return {p: len(self.pools[p]) for p in POOL_ORDER}
+
+
+# ----------------------------------------------------------------------------
+# classic-eviction baselines (Fig. 10 ablation)
+# ----------------------------------------------------------------------------
+class FlatCache:
+    """Single full-tensor pool with FIFO / LRU / Marking / LFU eviction."""
+
+    def __init__(self, capacity: int, policy: str = "lru"):
+        assert policy in ("fifo", "lru", "marking", "lfu")
+        self.capacity = capacity
+        self.policy = policy
+        self.entries: "collections.OrderedDict[int, PoolEntry]" = collections.OrderedDict()
+        self.marks: Set[int] = set()
+        self.freq = collections.Counter()
+        self.hits = 0
+        self.misses = 0
+        import random
+        self._rng = random.Random(0)
+
+    def residency(self, expert: int) -> CState:
+        return CState.F if expert in self.entries else CState.M
+
+    def access(self, expert: int, payload=None) -> bool:
+        """Touch expert; insert on miss.  Returns hit?"""
+        self.freq[expert] += 1
+        if expert in self.entries:
+            self.hits += 1
+            if self.policy == "lru":
+                self.entries.move_to_end(expert)
+            if self.policy == "marking":
+                self.marks.add(expert)
+            return True
+        self.misses += 1
+        if self.capacity <= 0:
+            return False
+        while len(self.entries) >= self.capacity:
+            self._evict()
+        self.entries[expert] = PoolEntry(expert, payload)
+        if self.policy == "marking":
+            self.marks.add(expert)
+        return False
+
+    def _evict(self):
+        if self.policy == "fifo" or self.policy == "lru":
+            self.entries.popitem(last=False)
+        elif self.policy == "lfu":
+            victim = min(self.entries, key=lambda e: self.freq[e])
+            del self.entries[victim]
+        else:  # marking: evict a random unmarked page; new phase if all marked
+            unmarked = [e for e in self.entries if e not in self.marks]
+            if not unmarked:
+                self.marks.clear()
+                unmarked = list(self.entries)
+            victim = self._rng.choice(unmarked)
+            del self.entries[victim]
+            self.marks.discard(victim)

@@ -1,0 +1,128 @@
+"""E-chunk / SM-chunk containers and binary serialization (§3.1 step ❷).
+
+Layout on disk (one ``.bin`` per expert group, mirroring per-expert SSD reads):
+
+    [tensor_0 SM bytes][tensor_0 E-chunk 0]..[tensor_0 E-chunk K-1]
+    [tensor_1 SM bytes] ...
+
+The manifest (JSON) records offsets/sizes so readers can issue exact-range
+reads per chunk — the unit of the scheduler's I/O operations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import bitfield
+from repro.core.codec import Codec
+
+
+@dataclass
+class TensorMeta:
+    name: str
+    shape: Tuple[int, ...]
+    n_elems: int
+    sm_offset: int
+    sm_size: int                     # == n_elems (1 byte/elem)
+    e_offsets: List[int]
+    e_sizes: List[int]               # compressed sizes
+    e_raw_sizes: List[int]           # decompressed sizes (shard lengths)
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d):
+        d = dict(d)
+        d["shape"] = tuple(d["shape"])
+        return TensorMeta(**d)
+
+
+@dataclass
+class GroupMeta:
+    layer: int
+    expert: int
+    file: str
+    tensors: List[TensorMeta]
+
+    @property
+    def key(self) -> Tuple[int, int]:
+        return (self.layer, self.expert)
+
+    @property
+    def sm_bytes(self) -> int:
+        return sum(t.sm_size for t in self.tensors)
+
+    @property
+    def e_bytes(self) -> int:         # compressed
+        return sum(sum(t.e_sizes) for t in self.tensors)
+
+    @property
+    def e_raw_bytes(self) -> int:
+        return sum(sum(t.e_raw_sizes) for t in self.tensors)
+
+    @property
+    def full_bytes(self) -> int:      # reconstructed bf16
+        return sum(2 * t.n_elems for t in self.tensors)
+
+    def to_json(self):
+        return {"layer": self.layer, "expert": self.expert, "file": self.file,
+                "tensors": [t.to_json() for t in self.tensors]}
+
+    @staticmethod
+    def from_json(d):
+        return GroupMeta(d["layer"], d["expert"], d["file"],
+                         [TensorMeta.from_json(t) for t in d["tensors"]])
+
+
+def pack_group(tensors: Dict[str, np.ndarray], codec: Codec, k_shards: int
+               ) -> Tuple[bytes, List[TensorMeta]]:
+    """Decompose + compress one expert group.  Returns (blob, metas)."""
+    blob = bytearray()
+    metas: List[TensorMeta] = []
+    for name, arr in tensors.items():
+        exp, sm = bitfield.decompose_np(np.asarray(arr))
+        sm_off = len(blob)
+        blob += sm.tobytes()
+        e_offs, e_sizes, e_raw = [], [], []
+        for shard in bitfield.shard_plane(exp, k_shards):
+            comp = codec.compress(shard.tobytes())
+            e_offs.append(len(blob))
+            blob += comp
+            e_sizes.append(len(comp))
+            e_raw.append(shard.size)
+        metas.append(TensorMeta(
+            name=name, shape=tuple(arr.shape), n_elems=int(exp.size),
+            sm_offset=sm_off, sm_size=int(sm.size),
+            e_offsets=e_offs, e_sizes=e_sizes, e_raw_sizes=e_raw))
+    return bytes(blob), metas
+
+
+def unpack_tensor(blob_reader, meta: TensorMeta, codec: Codec) -> np.ndarray:
+    """Full read+decompress+reconstruct of one tensor (bypass path)."""
+    sm = np.frombuffer(blob_reader(meta.sm_offset, meta.sm_size), np.uint8)
+    shards = []
+    for off, size, raw in zip(meta.e_offsets, meta.e_sizes, meta.e_raw_sizes):
+        shards.append(np.frombuffer(
+            codec.decompress(blob_reader(off, size), raw), np.uint8))
+    exp = np.concatenate(shards)
+    return bitfield.reconstruct_np(exp, sm, meta.shape)
+
+
+def manifest_to_json(groups: List[GroupMeta], codec_name: str, k_shards: int,
+                     extra: dict = None) -> str:
+    return json.dumps({
+        "codec": codec_name, "k_shards": k_shards,
+        "extra": extra or {},
+        "groups": [g.to_json() for g in groups],
+    })
+
+
+def manifest_from_json(s: str):
+    d = json.loads(s)
+    return (d["codec"], d["k_shards"], d.get("extra", {}),
+            [GroupMeta.from_json(g) for g in d["groups"]])

@@ -1,0 +1,88 @@
+"""Lossless compression backends (§2.2 / §4).
+
+The paper integrates *lz4* and *zstd*.  Offline here, ``zstandard`` is
+available and is the paper's best-ratio codec; ``zlib`` (level 9) stands in
+for LZ4HC (same general-LZ family; see DESIGN.md §7).  ``raw`` is the
+identity codec used by baselines and ablations.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Dict, Tuple
+
+try:
+    import zstandard as zstd
+    _HAVE_ZSTD = True
+except ImportError:  # pragma: no cover
+    _HAVE_ZSTD = False
+
+
+class Codec:
+    name: str = "raw"
+
+    def compress(self, data: bytes) -> bytes:
+        return data
+
+    def decompress(self, data: bytes, size: int) -> bytes:
+        return data
+
+
+class ZlibCodec(Codec):
+    """LZ4HC stand-in (offline container has no lz4 wheel)."""
+    name = "zlib"
+
+    def __init__(self, level: int = 9):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+    def decompress(self, data: bytes, size: int) -> bytes:
+        return zlib.decompress(data)
+
+
+class ZstdCodec(Codec):
+    """(de)compressor objects are NOT thread-safe -> keep them thread-local
+    (the engine decompresses concurrently from L worker threads)."""
+    name = "zstd"
+
+    def __init__(self, level: int = 10):
+        import threading
+        self.level = level
+        self._tl = threading.local()
+
+    def _ctx(self):
+        if not hasattr(self._tl, "c"):
+            self._tl.c = zstd.ZstdCompressor(level=self.level)
+            self._tl.d = zstd.ZstdDecompressor()
+        return self._tl
+
+    def compress(self, data: bytes) -> bytes:
+        return self._ctx().c.compress(data)
+
+    def decompress(self, data: bytes, size: int) -> bytes:
+        return self._ctx().d.decompress(data, max_output_size=size)
+
+
+_REGISTRY: Dict[str, Callable[[], Codec]] = {
+    "raw": Codec,
+    "zlib": ZlibCodec,
+}
+if _HAVE_ZSTD:
+    _REGISTRY["zstd"] = ZstdCodec
+
+DEFAULT_CODEC = "zstd" if _HAVE_ZSTD else "zlib"
+
+
+def get_codec(name: str = None) -> Codec:
+    name = name or DEFAULT_CODEC
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def compression_ratio(codec: Codec, data: bytes) -> float:
+    """compressed/original size (the paper's ρ is measured on exponent bytes)."""
+    if not data:
+        return 1.0
+    return len(codec.compress(data)) / len(data)

@@ -1,0 +1,294 @@
+"""Real threaded ZipMoE runtime (§3.1 runtime half, §4 implementation notes).
+
+One I/O thread (exact-range chunk reads from the ExpertStore, optionally
+bandwidth-throttled), L decompression worker threads (zstd/zlib), and a
+recovery stage (the bf16 bit-splice — on TPU this is the Pallas kernel in
+kernels/recovery.py; on the CPU host we call its interpret-mode oracle or the
+numpy splice).
+
+The engine executes the *same* block schedule that Algorithm 1 constructs:
+the I/O thread walks chunks in block order (E-chunks before SM-chunks), and
+workers take the highest-priority ready decompression op (work-conserving).
+
+Payload semantics per cache pool:
+  F : reconstructed bf16 ndarrays (zero work on hit)
+  C : raw SM bytes + compressed E bytes (decompress + recover on hit)
+  S : raw SM bytes (E-chunk reads + decompress + recover on hit)
+  E : compressed E bytes (SM read + decompress + recover on hit)
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bitfield
+from repro.core.cache import HierarchicalCache, PoolEntry
+from repro.core.scheduler import build_blocks
+from repro.core.states import CState, Task
+from repro.core.store import ExpertStore
+from repro.core.workload import FreqTracker
+
+
+@dataclass
+class ExpertPayload:
+    """What a pool entry holds for one expert (per tensor index)."""
+    sm: Dict[int, bytes] = field(default_factory=dict)
+    e: Dict[Tuple[int, int], bytes] = field(default_factory=dict)   # (tidx, shard)
+    full: Dict[int, np.ndarray] = field(default_factory=dict)
+
+
+@dataclass
+class FetchStats:
+    wall: float = 0.0
+    io_bytes: int = 0
+    dec_ops: int = 0
+    hits: Dict[str, int] = field(default_factory=dict)
+
+
+class ZipMoEEngine:
+    """Expert fetch engine for one model (all layers share the store)."""
+
+    def __init__(self, store: ExpertStore, n_experts: int, n_layers: int, *,
+                 L: int = 4, pool_sizes: Optional[Dict[str, int]] = None,
+                 recover_fn: Optional[Callable] = None, delta: int = 1):
+        self.store = store
+        self.L = L
+        self.recover = recover_fn or (lambda e, sm, shape: bitfield.reconstruct_np(
+            e, np.frombuffer(sm, np.uint8), shape))
+        sizes = pool_sizes or {"F": 4, "C": 4, "S": 8, "E": 8}
+        self.caches: Dict[int, HierarchicalCache] = {}
+        self.trackers: Dict[int, FreqTracker] = {}
+        for l in range(n_layers):
+            tr = FreqTracker(n_experts)
+            self.trackers[l] = tr
+            self.caches[l] = HierarchicalCache(sizes, tr, delta=delta)
+        # profiled constants (rough; refreshed by profile())
+        self.u = 1e-3
+        self.c = 3e-4
+        self.rho = store.rho()
+
+    # ------------------------------------------------------------------
+    def profile(self, layer: int = None, expert: int = None, reps: int = 3):
+        """Measure u (SM read) and c (E-chunk decompress) on this host."""
+        key = next(iter(self.store.groups)) if layer is None else (layer, expert)
+        g = self.store.groups[key]
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            self.store.read_sm(key, 0)
+        self.u = (time.perf_counter() - t0) / reps
+        raw = self.store.read_e(key, 0, 0)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            self.store.decompress_e(key, 0, 0, raw)
+        self.c = (time.perf_counter() - t0) / reps
+        return self.u, self.c
+
+    # ------------------------------------------------------------------
+    def _payload(self, layer: int, expert: int) -> Optional[ExpertPayload]:
+        cache = self.caches[layer]
+        for pool in ("F", "C", "S", "E"):
+            ent = cache.pools[pool].get(expert)
+            if ent is not None:
+                if ent.payload is None:
+                    ent.payload = ExpertPayload()
+                return ent.payload
+        return None
+
+    def fetch_experts(self, layer: int, expert_ids: Sequence[int],
+                      p_times: Optional[Dict[int, float]] = None
+                      ) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
+        """Reconstruct all tensors of the given experts; update the cache."""
+        t_start = time.perf_counter()
+        cache = self.caches[layer]
+        states = cache.record_access(list(expert_ids))
+        payloads = {e: self._payload(layer, e) or ExpertPayload()
+                    for e in expert_ids}
+
+        # ---- build the task set (one task per tensor) --------------------
+        # Effective per-tensor state is derived from what the payload actually
+        # holds (robust to demotions, which keep residency but drop bytes).
+        def tensor_state(pl: ExpertPayload, tidx: int, k: int) -> CState:
+            if tidx in pl.full:
+                return CState.F
+            has_sm = tidx in pl.sm and pl.sm[tidx] is not None
+            has_e = all((tidx, kk) in pl.e and pl.e[(tidx, kk)] is not None
+                        for kk in range(k))
+            if has_sm and has_e:
+                return CState.C
+            if has_sm:
+                return CState.S
+            if has_e:
+                return CState.E
+            return CState.M
+
+        tasks: List[Task] = []
+        metas: Dict[int, Tuple[int, int]] = {}          # uid -> (expert, tidx)
+        uid = 0
+        for e in expert_ids:
+            g = self.store.groups[(layer, e)]
+            for tidx, tm in enumerate(g.tensors):
+                st_t = tensor_state(payloads[e], tidx, len(tm.e_sizes))
+                tasks.append(Task(
+                    expert=e, tensor=tidx, state=st_t,
+                    p=(p_times or {}).get(e, 1e-4),
+                    sm_cost=self.u, e_cost=self.rho * self.u / len(tm.e_sizes),
+                    dec_cost=self.c, k_shards=len(tm.e_sizes), uid=uid))
+                metas[uid] = (e, tidx)
+                uid += 1
+        blocks = build_blocks(tasks, self.L)
+
+        # ---- shared completion state -------------------------------------
+        lock = threading.Lock()
+        cv = threading.Condition(lock)
+        e_data: Dict[Tuple[int, int], bytes] = {}        # (uid, shard) -> compressed
+        sm_data: Dict[int, bytes] = {}                    # uid -> sm bytes
+        dec_out: Dict[Tuple[int, int], np.ndarray] = {}   # (uid, shard) -> u8 plane
+        pending_dec: List[Tuple[int, int, int]] = []      # (prio, uid, shard) ready
+        dec_needed: Dict[int, int] = {}
+        done_tensors: Dict[Tuple[int, int], np.ndarray] = {}
+        stats = FetchStats()
+        prio = {}
+        order = [t for b in blocks for t in b]
+        for i, t in enumerate(order):
+            prio[t.uid] = i
+
+        task_by_uid = {t.uid: t for t in tasks}
+
+        def seed_cached():
+            """Mark cached components available immediately."""
+            for t in tasks:
+                e, tidx = metas[t.uid]
+                pl = payloads[e]
+                if t.state is CState.F:
+                    done_tensors[(e, tidx)] = pl.full[tidx]
+                    continue
+                dec_needed[t.uid] = t.k_shards
+                if not t.needs_sm_io:
+                    sm_data[t.uid] = pl.sm[tidx]
+                if not t.needs_e_io:
+                    for k in range(t.k_shards):
+                        e_data[(t.uid, k)] = pl.e[(tidx, k)]
+                        pending_dec.append((prio[t.uid], t.uid, k))
+        seed_cached()
+        pending_dec.sort()
+
+        n_dec_total = sum(dec_needed.values())
+        dec_done_cnt = [0]
+
+        # ---- I/O thread ----------------------------------------------------
+        def io_thread():
+            for blk in blocks:
+                for t in blk:
+                    if t.needs_e_io:
+                        e, tidx = metas[t.uid]
+                        for k in range(t.k_shards):
+                            data = self.store.read_e((layer, e), tidx, k)
+                            with cv:
+                                e_data[(t.uid, k)] = data
+                                pending_dec.append((prio[t.uid], t.uid, k))
+                                pending_dec.sort()
+                                cv.notify_all()
+                for t in blk:
+                    if t.needs_sm_io:
+                        e, tidx = metas[t.uid]
+                        data = self.store.read_sm((layer, e), tidx)
+                        with cv:
+                            sm_data[t.uid] = data
+                            maybe_finish(t)   # decompression may already be done
+                            cv.notify_all()
+
+        # ---- decompression workers -----------------------------------------
+        def maybe_finish(t: Task):
+            """Called with lock held after a decompression finishes."""
+            u = t.uid
+            if dec_needed.get(u, 1) != 0 or u not in sm_data:
+                return
+            e, tidx = metas[u]
+            shards = [dec_out[(u, k)] for k in range(t.k_shards)]
+            exp = np.concatenate(shards)
+            tm = self.store.groups[(layer, e)].tensors[tidx]
+            arr = self.recover(exp, sm_data[u], tm.shape)
+            done_tensors[(e, tidx)] = arr
+            cv.notify_all()
+
+        def worker():
+            while True:
+                with cv:
+                    while not pending_dec:
+                        if dec_done_cnt[0] >= n_dec_total:
+                            return
+                        cv.wait(timeout=0.2)
+                        if dec_done_cnt[0] >= n_dec_total and not pending_dec:
+                            return
+                    _, u, k = pending_dec.pop(0)
+                    data = e_data[(u, k)]
+                t = task_by_uid[u]
+                e, tidx = metas[u]
+                plane = self.store.decompress_e((layer, e), tidx, k, data)
+                with cv:
+                    dec_out[(u, k)] = plane
+                    dec_needed[u] -= 1
+                    dec_done_cnt[0] += 1
+                    stats.dec_ops += 1
+                    maybe_finish(t)
+                    cv.notify_all()
+
+        threads = [threading.Thread(target=io_thread, daemon=True)]
+        threads += [threading.Thread(target=worker, daemon=True)
+                    for _ in range(self.L)]
+        io0 = self.store.io_bytes
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        # tensors whose state needed no decompression but had SM io (pure-raw)
+        with cv:
+            for t in tasks:
+                key = metas[t.uid]
+                if key in done_tensors:
+                    continue
+                maybe_finish(t)
+        missing = [metas[t.uid] for t in tasks if metas[t.uid] not in done_tensors]
+        assert not missing, f"unreconstructed tensors: {missing}"
+
+        # ---- assemble result + update cache -------------------------------
+        out: Dict[int, Dict[str, np.ndarray]] = {}
+        for e in expert_ids:
+            g = self.store.groups[(layer, e)]
+            out[e] = {tm.name: done_tensors[(e, tidx)]
+                      for tidx, tm in enumerate(g.tensors)}
+        for e in expert_ids:
+            pool = cache.admit(e)
+            if pool is None:
+                continue
+            ent = cache.pools[pool][e]
+            pl = ExpertPayload()
+            g = self.store.groups[(layer, e)]
+            if pool == "F":
+                pl.full = {tidx: done_tensors[(e, tidx)]
+                           for tidx in range(len(g.tensors))}
+            else:
+                for t in tasks:
+                    if t.expert != e:
+                        continue
+                    tidx = metas[t.uid][1]
+                    if pool in ("C", "S"):
+                        smb = sm_data.get(t.uid, payloads[e].sm.get(tidx))
+                        if smb is not None:
+                            pl.sm[tidx] = smb
+                    if pool in ("C", "E"):
+                        for k in range(t.k_shards):
+                            eb = e_data.get((t.uid, k),
+                                            payloads[e].e.get((tidx, k)))
+                            if eb is not None:
+                                pl.e[(tidx, k)] = eb
+            ent.payload = pl
+        stats.wall = time.perf_counter() - t_start
+        stats.io_bytes = self.store.io_bytes - io0
+        stats.hits = {k: v for k, v in cache.hits.items()}
+        return out, stats

@@ -1,0 +1,219 @@
+"""Hierarchical cache-pool planning (§3.4, Appendix C/D; Algorithms 2–4).
+
+Pipeline:
+  1. ``ipf_selection_probs`` — modified iterative proportional fitting (Chen
+     et al., 1994) recovers per-rank Bernoulli selection probabilities q_r
+     whose conditional-on-k distribution is the *maximum-entropy* distribution
+     consistent with the observed inclusion probabilities f_r (Theorem 3.2).
+  2. ``poisson_binomial`` — Algorithm 2: hit-count distribution Φ_S(h) within
+     a pool's contiguous rank interval.
+  3. ``estimate_makespan`` — Algorithm 3: coarse two-bottleneck makespan model
+     (I/O aggregate vs per-thread decompression) for a given hit pattern.
+  4. ``plan_pools`` — Algorithm 4: grid search over pool-memory ratios γ,
+     scoring E[makespan] under the joint conditional hit distribution
+     P(h | Σh = k) = Φ_M(k_rem)/Φ_N(k) · Π_p Φ_p(h_p).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+POOL_ORDER = ("F", "C", "S", "E")
+
+
+# ----------------------------------------------------------------------------
+# Theorem 3.2 machinery: max-entropy selection probabilities via IPF
+# ----------------------------------------------------------------------------
+def esp(weights: np.ndarray, k: int) -> np.ndarray:
+    """Elementary symmetric polynomials R(0..k, weights) via stable DP."""
+    R = np.zeros(k + 1, dtype=np.float64)
+    R[0] = 1.0
+    for w in weights:
+        R[1:k + 1] = R[1:k + 1] + w * R[0:k].copy()
+    return R
+
+
+def esp_without(weights: np.ndarray, R: np.ndarray, i: int, k: int) -> np.ndarray:
+    """R(0..k, weights \\ {i}) by dividing item i out of the full DP.
+
+    The divide-out recurrence is unstable for large w_i (catastrophic
+    cancellation); fall back to a direct DP excluding item i when the result
+    goes negative or non-finite."""
+    w = weights[i]
+    out = np.zeros(k + 1, dtype=np.float64)
+    out[0] = 1.0
+    ok = True
+    for j in range(1, k + 1):
+        out[j] = R[j] - w * out[j - 1]
+        if not np.isfinite(out[j]) or out[j] < 0:
+            ok = False
+            break
+    if ok:
+        return out
+    rest = np.delete(weights, i)
+    return esp(rest, k)
+
+
+def project_feasible(f: np.ndarray, k: int, *, eps: float = 1e-9
+                     ) -> np.ndarray:
+    """Project onto the feasible set of inclusion probabilities:
+    eps <= f_i <= 1-eps and Σf = k (Chen et al. 1994 requirement).
+    Values forced to the upper bound stay there; the free mass rescales."""
+    f = np.clip(np.asarray(f, dtype=np.float64), eps, None)
+    k = float(k)
+    for _ in range(100):
+        hi = f >= 1 - eps
+        f[hi] = 1 - eps
+        free = ~hi
+        target = k - hi.sum() * (1 - eps)
+        s = f[free].sum()
+        if not free.any() or target <= 0 or s <= 0:
+            break
+        f[free] = f[free] * (target / s)
+        if (f[free] < 1 - eps).all():
+            break
+    return np.clip(f, eps, 1 - eps)
+
+
+def ipf_selection_probs(f: np.ndarray, k: int, *, iters: int = 600,
+                        tol: float = 1e-10) -> np.ndarray:
+    """f: inclusion probabilities (Σf = k expected).  Returns q_r ∈ (0,1).
+    Infeasible inputs (f_i ≥ 1 after rescale) are projected first."""
+    k = int(k)
+    f = project_feasible(f, k)
+    n = f.size
+    w = f / (1.0 - f)
+    for _ in range(iters):
+        w = w / np.max(w)            # scale-invariant; keeps the DP in range
+        R = esp(w, k)
+        fi = np.empty(n)
+        for i in range(n):
+            Rwo = esp_without(w, R, i, k)
+            fi[i] = w[i] * Rwo[k - 1] / max(R[k], 1e-300)
+        fi = np.clip(np.nan_to_num(fi, nan=1e-12), 1e-12, None)
+        err = np.max(np.abs(fi - f))
+        w = w * (f / fi)
+        if err < tol:
+            break
+    return np.clip(w / (1.0 + w), 1e-12, 1 - 1e-12)
+
+
+def inclusion_from_q(q: np.ndarray, k: int) -> np.ndarray:
+    """Check helper: implied inclusion probs P(i ∈ S | |S|=k) for given q."""
+    w = q / (1.0 - q)
+    R = esp(w, k)
+    out = np.empty(q.size)
+    for i in range(q.size):
+        Rwo = esp_without(w, R, i, k)
+        out[i] = w[i] * Rwo[k - 1] / R[k]
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 2: Poisson-binomial hit distribution
+# ----------------------------------------------------------------------------
+def poisson_binomial(qs: Sequence[float]) -> np.ndarray:
+    """Φ(h) for h = 0..len(qs): P[#successes = h]."""
+    phi = np.zeros(len(qs) + 1, dtype=np.float64)
+    phi[0] = 1.0
+    for i, q in enumerate(qs):
+        phi[1:i + 2] = phi[1:i + 2] * (1 - q) + phi[0:i + 1] * q
+        phi[0] *= (1 - q)
+    return phi
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 3: makespan estimation for a hit pattern
+# ----------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PlanConsts:
+    u: float            # SM-chunk read delay
+    v: float            # single E-chunk read delay (≈ ρu/K)
+    c: float            # single E-chunk decompression delay
+    L: int              # worker threads
+    K: int              # exponent shards per tensor
+    n_tensors: int      # tensors per expert
+
+
+def estimate_makespan(k: int, h: Dict[str, int], consts: PlanConsts) -> float:
+    n, K, L = consts.n_tensors, consts.K, consts.L
+    hF, hC, hS, hE = (h.get(p, 0) for p in POOL_ORDER)
+    n_sm = n * (k - hF - hC - hS)
+    n_e = n * K * (k - hF - hC - hE)
+    t_io = n_sm * consts.u + n_e * consts.v
+    n_d = n * K * (k - hF)
+    t_dec = (n_e * consts.v + n_d * consts.c) / max(1, L)
+    return max(t_io, t_dec)
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 4: grid-search pool planning
+# ----------------------------------------------------------------------------
+@dataclass
+class Plan:
+    ratios: Dict[str, float]
+    sizes: Dict[str, int]           # experts per pool
+    cost: float
+
+
+def _ratio_grid(active: Sequence[str], step: float):
+    m = int(round(1.0 / step))
+    for parts in itertools.product(range(m + 1), repeat=len(active) - 1):
+        if sum(parts) <= m:
+            last = m - sum(parts)
+            yield dict(zip(active, [p / m for p in parts] + [last / m]))
+
+
+def plan_pools(f: np.ndarray, k: int, mem_budget: float,
+               bytes_per_state: Dict[str, float], consts: PlanConsts, *,
+               active: Sequence[str] = POOL_ORDER, step: float = 0.125,
+               q: Optional[np.ndarray] = None) -> Plan:
+    """Returns the expected-makespan-minimising pool partition.
+
+    bytes_per_state: per-expert residency cost for pools F/C/S/E.
+    """
+    n_experts = f.size
+    q = ipf_selection_probs(f, k) if q is None else np.asarray(q)
+    phi_N = poisson_binomial(q)
+    best: Optional[Plan] = None
+    for ratios in _ratio_grid(list(active), step):
+        sizes = {p: 0 for p in POOL_ORDER}
+        for p in active:
+            sizes[p] = int(ratios[p] * mem_budget / bytes_per_state[p])
+        # map pools to contiguous rank intervals in hierarchy order
+        intervals, u0 = {}, 0
+        for p in POOL_ORDER:
+            s = min(sizes[p], n_experts - u0)
+            sizes[p] = s
+            intervals[p] = (u0, u0 + s)
+            u0 += s
+        phi_p = {p: poisson_binomial(q[a:b]) for p, (a, b) in intervals.items()}
+        phi_M = poisson_binomial(q[u0:])
+        denom = phi_N[k] if k < phi_N.size else 0.0
+        if denom <= 0:
+            continue
+        cost = 0.0
+        ranges = [range(min(sizes[p], k) + 1) for p in POOL_ORDER]
+        for hF in ranges[0]:
+            for hC in ranges[1]:
+                for hS in ranges[2]:
+                    for hE in ranges[3]:
+                        rem = k - hF - hC - hS - hE
+                        if rem < 0 or rem >= phi_M.size:
+                            continue
+                        pr = (phi_M[rem] / denom *
+                              phi_p["F"][hF] * phi_p["C"][hC] *
+                              phi_p["S"][hS] * phi_p["E"][hE])
+                        if pr <= 0:
+                            continue
+                        d = estimate_makespan(
+                            k, {"F": hF, "C": hC, "S": hS, "E": hE}, consts)
+                        cost += pr * d
+        if best is None or cost < best.cost:
+            best = Plan(dict(ratios), dict(sizes), cost)
+    assert best is not None
+    return best

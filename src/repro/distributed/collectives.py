@@ -1,0 +1,75 @@
+"""Collective-traffic accounting from lowered/compiled HLO text.
+
+``cost_analysis()`` does not report collective bytes, so the roofline's
+collective term is derived by parsing the (post-optimization) HLO: sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (per the assignment spec).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\s*\(([^)]*)\)")
+_RESULT_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (plus 'total')."""
+    out: Dict[str, int] = defaultdict(int)
+    done_ops = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, operands = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:120] and f"{kind}-done" in line:
+            # async pair: count the -start only (operands live there)
+            continue
+        b = _shape_bytes(operands)
+        if b == 0:  # operands printed without shapes -> fall back to result
+            mr = _RESULT_RE.search(line)
+            if mr:
+                b = _shape_bytes(mr.group(1))
+        out[kind] += b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m and "-done" not in line.split("(")[0]:
+            out[m.group(1)] += 1
+    return dict(out)

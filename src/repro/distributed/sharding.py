@@ -1,0 +1,208 @@
+"""Per-architecture NamedSharding rules (DP/TP/EP; divisibility-checked).
+
+Walks the parameter pytree with structural context (a dict containing a
+``router`` leaf is a MoE FFN) and assigns one partitioned axis per weight:
+
+* TP: linear layers shard their output feature dim over ``model``; their
+  consumers (``wo``, ``w_down``, ``w_out``) shard the input dim, so each
+  attention/FFN block is a Megatron pair (all-reduce once per block).
+* EP: routed expert stacks [*, E, d, f] shard E over ``model`` when divisible
+  (deepseek-v2: 10/shard, jamba: 1/shard); otherwise fall back to TP inside
+  the expert (qwen2-moe: f=1408 -> 88/shard).
+* Embedding: vocab over ``model`` when divisible, else d_model, else
+  replicated (mamba2's 50280 vocab is not 16-divisible -> d_model).
+* 1-D scales/biases and routers are replicated.
+
+Every rule checks divisibility against the mesh's model-axis size and falls
+back to replication rather than emitting an invalid sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# leaf name -> axis (negative, from the end) to shard over `model`
+_OUT_DIM = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b",
+            "w_gate", "w_up", "w_z", "w_x", "w_B", "w_C", "w_dt"}
+_IN_DIM = {"wo", "w_down", "w_out"}
+_REPLICATED = {"router", "scale", "bias", "A_log", "D", "dt_bias",
+               "gate_norm", "q_norm", "k_norm", "kv_norm", "conv_w", "conv_b",
+               "pos"}
+
+
+def _spec2(shape, model_ax: Optional[int], model: str, msize: int,
+           data_ax: Optional[int] = None, data: str = "data", dsize: int = 1):
+    """Build a PartitionSpec with `model` on one axis and (optionally, FSDP)
+    `data` on another.  Axes are negative (from the end); each placement is
+    divisibility-checked independently."""
+    spec = [None] * len(shape)
+    if model_ax is not None:
+        ax = len(shape) + model_ax
+        if 0 <= ax and shape[ax] > 0 and shape[ax] % msize == 0:
+            spec[ax] = model
+    if data_ax is not None and dsize > 1:
+        ax = len(shape) + data_ax
+        if (0 <= ax and spec[ax] is None and shape[ax] > 0
+                and shape[ax] % dsize == 0):
+            spec[ax] = data
+    return P(*spec)
+
+
+def _leaf_spec(name: str, shape, *, in_moe: bool, ep_ok: bool,
+               model: str, size: int, cfg, fsdp: bool = False,
+               dsize: int = 1) -> P:
+    d_ax = None  # FSDP axis choice per rule below
+    if name in _REPLICATED or len(shape) <= 1:
+        return P()
+    if name == "tok":                       # embedding [V, d]
+        if shape[0] % size == 0:
+            return _spec2(shape, -2, model, size,
+                          -1 if fsdp else None, dsize=dsize)
+        if shape[1] % size == 0:
+            return P(None, model)
+        return P()
+    if name == "w":                         # lm head [d, V]
+        if shape[-1] % size == 0:
+            return _spec2(shape, -1, model, size,
+                          -2 if fsdp else None, dsize=dsize)
+        return _spec2(shape, -2, model, size)
+    if in_moe and name in ("w_gate", "w_up", "w_down") and len(shape) >= 3:
+        if ep_ok and shape[-3] % size == 0:           # EP over experts
+            # FSDP: additionally shard the expert ffn width over data
+            d_ax = (-2 if name == "w_down" else -1) if fsdp else None
+            return _spec2(shape, -3, model, size, d_ax, dsize=dsize)
+        if name == "w_down":
+            return _spec2(shape, -2, model, size,
+                          -1 if fsdp else None, dsize=dsize)
+        return _spec2(shape, -1, model, size,
+                      -2 if fsdp else None, dsize=dsize)
+    if name in _OUT_DIM:
+        return _spec2(shape, -1, model, size,
+                      -2 if fsdp else None, dsize=dsize)
+    if name in _IN_DIM:
+        return _spec2(shape, -2, model, size,
+                      -1 if fsdp else None, dsize=dsize)
+    return P()
+
+
+def needs_fsdp(cfg, model_size: int, *, train: bool,
+               hbm_budget: float = 12e9) -> bool:
+    """Auto policy: 2D-shard (FSDP over `data`) when the 1D-TP state won't
+    fit.  State bytes/param: bf16 weights (+ f32 mu/nu when training)."""
+    per_param = 10.0 if train else 2.0
+    total = cfg.param_counts()["total"]
+    return total * per_param / max(1, model_size) > hbm_budget
+
+
+def param_pspecs(params: Any, cfg, *, model_axis: str = "model",
+                 model_size: int = 16, fsdp: bool = False,
+                 data_size: int = 1) -> Any:
+    """Pytree of PartitionSpec matching `params` (arrays or SDStructs)."""
+    moe_mode = cfg.moe_mode
+    ep_ok = (moe_mode != "tp") and cfg.is_moe and cfg.n_experts % model_size == 0
+
+    def build(node, in_moe, name=""):
+        if isinstance(node, dict):
+            is_moe_ffn = "router" in node
+            return {k: build(v, in_moe or is_moe_ffn, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(build(v, in_moe, name) for v in node)
+        if node is None:
+            return None
+        return _leaf_spec(name, node.shape, in_moe=in_moe, ep_ok=ep_ok,
+                          model=model_axis, size=model_size, cfg=cfg,
+                          fsdp=fsdp, dsize=data_size)
+
+    return build(params, False)
+
+
+def param_shardings(params, cfg, mesh: Mesh, *, train: bool = False,
+                    fsdp: Optional[bool] = None, **kw):
+    size = 1
+    if "model" in mesh.axis_names:
+        size = mesh.shape["model"]
+    dsize = mesh.shape["data"] if "data" in mesh.axis_names else 1
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, size, train=train)
+    specs = param_pspecs(params, cfg, model_size=size, fsdp=fsdp,
+                         data_size=dsize, **kw)
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def data_axes(mesh: Mesh):
+    """Axes used for batch DP: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_pspecs(batch_spec: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    """Input shardings: batch dim over DP axes (mrope positions: dim 1)."""
+    dp = data_axes(mesh)
+    out = {}
+    for name, (shape, _) in batch_spec.items():
+        if name == "mrope_positions":            # [3, B, S]
+            out[name] = (P(None, dp, None) if shape[1] % _dp_size(mesh) == 0
+                         else P())
+        elif shape[0] % _dp_size(mesh) == 0:
+            out[name] = P(dp, *([None] * (len(shape) - 1)))
+        else:
+            out[name] = P(*([None] * len(shape)))
+    return out
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_pspecs(cache, mesh: Mesh, cfg, *, seq_shard: bool = False) -> Any:
+    """KV-cache shardings: batch over DP axes when divisible (else replicate)
+    and the trailing feature dim over `model` when divisible.
+
+    The cache pytree is {"prefix": [per-layer caches], "stack": stacked} —
+    batch sits at dim 0 for prefix leaves and dim 1 for stacked leaves
+    (leading super-block dim), so the walk is structural, not heuristic.
+
+    GQA k/v [*,B,T,H,dh]: B over dp, dh over model (dh=128 -> 8/shard).
+    MLA ckv [*,B,T,C]: B over dp, C over model.  SSM state: B + state dim.
+
+    seq_shard=True (perf lever P2): KV leaves shard the SEQUENCE dim over
+    `model` instead of the feature dim — pairs with the shard_map
+    flash-decode in models/decode_attention.py.
+    """
+    dp = data_axes(mesh)
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    dpsize = _dp_size(mesh)
+
+    def leaf(x, bdim, in_kv):
+        shape = x.shape
+        spec = [None] * len(shape)
+        if bdim < len(shape) and shape[bdim] % dpsize == 0 and shape[bdim] >= dpsize:
+            spec[bdim] = dp
+        if in_kv and seq_shard:
+            tdim = bdim + 1
+            if shape[tdim] % msize == 0:
+                spec[tdim] = "model"
+        elif len(shape) >= 2 and shape[-1] % msize == 0:
+            spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    def walk(node, bdim, in_kv=False):
+        if isinstance(node, dict):
+            return {k: walk(v, bdim, in_kv or k == "kv") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, bdim, in_kv) for v in node)
+        if node is None:
+            return None
+        return leaf(node, bdim, in_kv)
+
+    out = {"prefix": walk(cache["prefix"], 0),
+           "stack": (None if cache.get("stack") is None
+                     else walk(cache["stack"], 1))}
+    return out

@@ -1,0 +1,110 @@
+"""Beyond-paper Pallas kernels for the MoE expert compute hot-spot.
+
+1. ``grouped_gemm`` — batched expert GEMM  x[E,C,d] @ w[E,d,f] -> [E,C,f]
+   with MXU-aligned (128-multiple) tiles and f32 accumulation over the
+   contraction grid axis.
+
+2. ``zip_gemm`` — **fused recovery + GEMM**: the expert weight arrives as the
+   two ZipMoE bit-planes (exp u8, sm u8); the kernel splices them to bf16 on
+   VREGs and immediately feeds the MXU.  This removes the HBM round-trip of
+   the recovered weight (write 2B/elem + read 2B/elem), cutting weight-stream
+   traffic 3× for bandwidth-bound decode GEMMs — napkin math and measured
+   cost-analysis deltas in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ----------------------------------------------------------------------------
+# grouped expert GEMM
+# ----------------------------------------------------------------------------
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_gemm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
+                 block_d: int = 512, block_f: int = 128,
+                 interpret: bool = False) -> jnp.ndarray:
+    """x: [E, C, d] bf16; w: [E, d, f] bf16 -> [E, C, f] bf16."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    block_c, block_d, block_f = (min(block_c, C), min(block_d, D),
+                                 min(block_f, F))
+    assert C % block_c == 0 and D % block_d == 0 and F % block_f == 0
+    grid = (E, C // block_c, F // block_f, D // block_d)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+# ----------------------------------------------------------------------------
+# fused recovery + GEMM
+# ----------------------------------------------------------------------------
+def _zip_gemm_kernel(x_ref, exp_ref, sm_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    e = exp_ref[...].astype(jnp.uint16)
+    s = sm_ref[...].astype(jnp.uint16)
+    u = ((s & jnp.uint16(0x80)) << 8) | (e << 7) | (s & jnp.uint16(0x7F))
+    w = jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def zip_gemm(x: jnp.ndarray, exp: jnp.ndarray, sm: jnp.ndarray, *,
+             block_c: int = 128, block_d: int = 512, block_f: int = 128,
+             interpret: bool = False) -> jnp.ndarray:
+    """x: [C, d] bf16; exp, sm: u8 [d, f] bit-planes -> x @ splice(exp, sm)."""
+    C, D = x.shape
+    _, F = exp.shape
+    block_c, block_d, block_f = (min(block_c, C), min(block_d, D),
+                                 min(block_f, F))
+    assert C % block_c == 0 and D % block_d == 0 and F % block_f == 0
+    grid = (C // block_c, F // block_f, D // block_d)
+    return pl.pallas_call(
+        functools.partial(_zip_gemm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, block_d), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_d, block_f), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_d, block_f), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_c, block_f), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, exp, sm)

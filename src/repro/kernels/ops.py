@@ -1,0 +1,62 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (Python
+emulation of the kernel body — used by CI/tests on CPU); on TPU they compile
+to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import recovery
+from repro.kernels import ref as ref_ops
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    r = (-x.shape[0]) % m
+    return jnp.pad(x, (0, r)) if r else x
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block_m", "block_n",
+                                             "interpret"))
+def recover_bf16(exp: jnp.ndarray, sm: jnp.ndarray, shape=None, *,
+                 block_m: int = None, block_n: int = None,
+                 interpret: bool = None) -> jnp.ndarray:
+    """Flat (or any-shape) u8 planes -> bf16 array of `shape`.
+
+    Pads + reshapes to a 2-D tile-aligned layout, runs the Pallas kernel,
+    slices the result back.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    shape = tuple(shape) if shape is not None else exp.shape
+    n = int(exp.size)
+    bm = block_m or (8 if interpret else recovery.DEFAULT_BLOCK_M)
+    bn = block_n or (128 if interpret else recovery.DEFAULT_BLOCK_N)
+    flat_e = _pad_to(exp.reshape(-1), bm * bn)
+    flat_s = _pad_to(sm.reshape(-1), bm * bn)
+    rows = flat_e.size // bn
+    out = recovery.recover_bf16_2d(
+        flat_e.reshape(rows, bn), flat_s.reshape(rows, bn),
+        block_m=bm, block_n=bn, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def recover_bf16_host(exp_np, sm_np, shape):
+    """Engine hook: numpy planes in, jnp bf16 out (via the kernel)."""
+    import numpy as np
+    out = recover_bf16(jnp.asarray(np.asarray(exp_np)),
+                       jnp.asarray(np.frombuffer(sm_np, np.uint8)
+                                   if isinstance(sm_np, (bytes, bytearray))
+                                   else np.asarray(sm_np)),
+                       tuple(shape))
+    return np.asarray(out)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def recover_bf16_ref(exp: jnp.ndarray, sm: jnp.ndarray) -> jnp.ndarray:
+    """Bit-splice oracle: (exp u8, sm u8) -> bf16, elementwise.
+
+    bf16 layout: s eeeeeeee mmmmmmm.  sm packs the sign in bit 7 and the
+    7 mantissa bits in bits 0..6.
+    """
+    e = exp.astype(jnp.uint16)
+    s = sm.astype(jnp.uint16)
+    u = ((s & 0x80) << 8) | (e << 7) | (s & 0x7F)
+    return jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+
+
+def decompose_bf16_ref(x: jnp.ndarray):
+    """Inverse splice (used by tests): bf16 -> (exp u8, sm u8)."""
+    u = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.bfloat16), jnp.uint16)
+    exp = ((u >> 7) & 0xFF).astype(jnp.uint8)
+    sm = (((u >> 8) & 0x80) | (u & 0x7F)).astype(jnp.uint8)
+    return exp, sm
+
+
+def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Grouped expert GEMM oracle: x [E, C, d] @ w [E, d, f] -> [E, C, f]."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

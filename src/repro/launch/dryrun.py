@@ -1,0 +1,392 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the appropriate step function with production
+shardings onto placeholder host devices (the two env lines above MUST precede
+any jax import — jax locks the device count on first init), compiles it, and
+records:
+
+  * memory_analysis (per-device argument/output/temp/code bytes),
+  * cost_analysis (HLO FLOPs + bytes accessed),
+  * collective operand bytes parsed from the post-SPMD HLO,
+  * the three roofline terms (§Roofline) for the single-pod mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ASSIGNED, SHAPE_BY_NAME, SHAPES, get_config,
+                           shape_applicable)
+from repro.distributed.collectives import collective_bytes, count_collectives
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
+                                        param_shardings)
+from repro.launch.mesh import (CHIPS, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.inputs import batch_spec, cache_structs, make_batch_structs
+from repro.models.model import decode_step, init_params, prefill
+from repro.training.train_step import init_train_state, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _eval_shape_params(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# --- perf-variant presets (§Perf hillclimbing; see EXPERIMENTS.md) ----------
+VARIANTS = {
+    "baseline": {},
+    # P1: split MoE dispatch groups to 2k tokens (capacity ∝ group size)
+    "moegroup2k": {"cfg": {"moe_group_size": 2048}},
+    "moegroup1k": {"cfg": {"moe_group_size": 1024}},
+    # P1b: scatter dispatch — no dense dispatch/combine tensors at all
+    "scatter": {"moe_impl": "scatter"},
+    # P2: sequence-sharded KV cache + shard_map flash-decode
+    "seqkv": {"seq_shard": True, "attn_impl": "seqshard"},
+    # P3: force all-to-all EP activation layout (no FSDP weight gathers)
+    "epconstraint": {"cfg": {"moe_ep_constraint": True}},
+    # P4: pad experts to a mesh-divisible count -> EP all-to-alls replace the
+    # Megatron output all-reduce (qwen2-moe: 60 -> 64 experts)
+    "eppad64": {"cfg": {"moe_pad_to": 64, "moe_group_size": 1024}},
+    # combinations
+    "seqkv+ep": {"seq_shard": True, "attn_impl": "seqshard",
+                 "cfg": {"moe_ep_constraint": True}},
+    "moegroup2k+ep": {"cfg": {"moe_group_size": 2048,
+                              "moe_ep_constraint": True}},
+    "noremat": {"remat": False},
+    # P5: bf16 attention-score operands (f32 accumulate) for memory-bound trains
+    "bf16scores": {"cfg": {"attn_f32_inputs": False}},
+    "bf16scores+moegroup1k": {"cfg": {"attn_f32_inputs": False,
+                                      "moe_group_size": 1024}},
+}
+
+
+def build_lowered(cfg, shape, mesh, *, kind, moe_impl="einsum", remat=True,
+                  unroll=False, extra_opts=None):
+    """Returns the lowered computation for one cell."""
+    opts = extra_opts or {}
+    if opts.get("cfg"):
+        cfg = dataclasses.replace(cfg, **opts["cfg"])
+    moe_impl = opts.get("moe_impl", moe_impl)
+    remat = opts.get("remat", remat)
+    params_s = _eval_shape_params(cfg)
+    p_sh = param_shardings(params_s, cfg, mesh, train=(kind == "train"),
+                           fsdp=opts.get("fsdp"))
+    b_spec = batch_spec(cfg, shape, kind)
+    b_structs = make_batch_structs(cfg, shape, kind)
+    b_sh = {k: NamedSharding(mesh, v)
+            for k, v in batch_pspecs(b_spec, mesh).items()}
+
+    if kind == "train":
+        state_s = jax.eval_shape(lambda p: init_train_state(p), params_s)
+        state_sh = type(state_s)(
+            params=p_sh,
+            opt=type(state_s.opt)(step=_replicated(mesh), mu=p_sh, nu=p_sh),
+            err=None)
+        step_fn = make_train_step(cfg, remat=remat, moe_impl=moe_impl,
+                                  unroll=unroll,
+                                  **{k: v for k, v in opts.items()
+                                     if k in ("grad_compress",)})
+        jf = jax.jit(step_fn, in_shardings=(state_sh, b_sh),
+                     donate_argnums=(0,))
+        return jf.lower(state_s, b_structs)
+
+    if kind == "prefill":
+        jf = jax.jit(lambda p, b: prefill(p, cfg, b, moe_impl=moe_impl,
+                                          unroll=unroll),
+                     in_shardings=(p_sh, b_sh))
+        return jf.lower(params_s, b_structs)
+
+    # decode: one new token against a cache of length seq_len
+    cache_s = cache_structs(cfg, shape.global_batch, shape.seq_len)
+    seq_shard = bool(opts.get("seq_shard"))
+    attn_impl = opts.get("attn_impl", "default")
+    c_sh = cache_pspecs(cache_s, mesh, cfg, seq_shard=seq_shard)
+    batch_axes = None
+    if attn_impl == "seqshard":
+        from repro.distributed.sharding import _dp_size, data_axes
+        if shape.global_batch % _dp_size(mesh) == 0:
+            batch_axes = data_axes(mesh)
+    jf = jax.jit(
+        lambda p, b, c, pos: decode_step(p, cfg, b, c, pos, moe_impl=moe_impl,
+                                         unroll=unroll, attn_impl=attn_impl,
+                                         mesh=mesh, batch_axes=batch_axes),
+        in_shardings=(p_sh, b_sh, c_sh, _replicated(mesh)),
+        donate_argnums=(2,))
+    return jf.lower(params_s, b_structs, cache_s,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ----------------------------------------------------------------------------
+# per-layer cost probes
+# ----------------------------------------------------------------------------
+# XLA's cost_analysis counts a lax.scan body ONCE regardless of trip count
+# (verified in EXPERIMENTS.md §Dry-run methodology).  To get depth-correct
+# FLOPs/bytes/collectives we lower UNROLLED 1- and 2-superblock variants of
+# the model; the difference is the exact per-superblock cost and
+#    total = cost(1 block) + (m - 1) · Δ
+# is exact for homogeneous stacks (which scan requires anyway).
+def _depth_reduced(cfg, n_blocks: int):
+    from repro.models.transformer import stack_period
+    period = stack_period(cfg)
+    kw = dict(n_layers=cfg.first_dense + period * n_blocks)
+    if cfg.encoder_decoder:
+        kw["n_enc_layers"] = n_blocks * (cfg.n_enc_layers // cfg.n_layers)
+    return dataclasses.replace(cfg, **kw)
+
+
+def probe_costs(cfg, shape, mesh, *, kind, moe_impl, remat, extra_opts=None):
+    from repro.models.transformer import stack_layout
+    _, period, m = stack_layout(cfg)
+    probes = {}
+    for nb in (1, 2):
+        cfg_p = _depth_reduced(cfg, nb)
+        lowered = build_lowered(cfg_p, shape, mesh, kind=kind,
+                                moe_impl=moe_impl, remat=remat, unroll=True,
+                                extra_opts=extra_opts)
+        compiled = lowered.compile()
+        cost = _cost_dict(compiled)
+        coll = collective_bytes(compiled.as_text())
+        probes[nb] = {"flops": float(cost.get("flops", 0.0)),
+                      "bytes": float(cost.get("bytes accessed", 0.0)),
+                      "coll": float(coll.get("total", 0))}
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        delta = probes[2][key] - probes[1][key]
+        out[key] = probes[1][key] + (m - 1) * delta
+        out[key + "_per_block"] = delta
+    out["n_blocks"] = m
+    return out
+
+
+def _cost_dict(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def _memory_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    return out
+
+
+def roofline_terms(flops_per_chip, bytes_per_chip, coll_bytes_per_chip,
+                   *, chips):
+    """Three roofline terms in seconds (per §Roofline, single-pod)."""
+    # v5e: 4 ICI links/chip; collective bytes already per-chip from SPMD HLO
+    t_compute = flops_per_chip / PEAK_FLOPS_BF16
+    t_memory = bytes_per_chip / HBM_BW
+    t_coll = coll_bytes_per_chip / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    return terms
+
+
+def model_flops(cfg, shape, kind) -> float:
+    """MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for inference."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    toks = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n * toks
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             moe_impl="einsum", remat=True, variant="baseline",
+             out_dir=None, extra_opts=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    if extra_opts is None and variant in VARIANTS:
+        extra_opts = VARIANTS[variant]
+    ok, reason = shape_applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "kind": shape.kind, "moe_impl": moe_impl}
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        _write(rec, out_dir)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = CHIPS["multi" if mesh_kind == "multi" else "single"]
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = build_lowered(cfg, shape, mesh, kind=shape.kind,
+                                    moe_impl=moe_impl, remat=remat,
+                                    extra_opts=extra_opts)
+            compiled = lowered.compile()
+            mem = _memory_dict(compiled)
+            cost = _cost_dict(compiled)
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            ncoll = count_collectives(hlo)
+            # depth-correct costs via unrolled 1/2-superblock probes
+            probe = probe_costs(cfg, shape, mesh, kind=shape.kind,
+                                moe_impl=moe_impl, remat=remat,
+                                extra_opts=extra_opts)
+        flops_dev = probe["flops"]
+        bytes_dev = probe["bytes"]
+        coll_dev = probe["coll"]
+        mf = model_flops(cfg, shape, shape.kind)
+        terms = roofline_terms(flops_dev, bytes_dev, coll_dev, chips=chips)
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            memory=mem,
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            collective_bytes_per_device=coll_dev,
+            collective_bytes_module=coll,
+            collective_counts=ncoll,
+            probe=probe,
+            module_cost_raw={k: float(cost.get(k, 0.0))
+                             for k in ("flops", "bytes accessed")},
+            roofline=terms,
+            model_flops_global=mf,
+            model_flops_per_device=mf / chips,
+            useful_flop_ratio=(mf / chips / flops_dev) if flops_dev else None,
+            chips=chips,
+        )
+        print(f"[{arch} × {shape_name} × {mesh_kind}] OK "
+              f"compile={rec['compile_s']}s "
+              f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+              f"coll/dev={coll_dev:.3e} "
+              f"dominant={terms['dominant']} "
+              f"useful={rec['useful_flop_ratio'] and round(rec['useful_flop_ratio'], 3)}")
+        print("  memory_analysis:", json.dumps(mem))
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[{arch} × {shape_name} × {mesh_kind}] FAIL: {e}",
+              file=sys.stderr)
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec, out_dir=None):
+    d = os.path.abspath(out_dir or OUT_DIR)
+    os.makedirs(d, exist_ok=True)
+    name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+            + (f"__{rec['variant']}" if rec.get("variant", "baseline")
+               != "baseline" else "") + ".json")
+    with open(os.path.join(d, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run_pp_demo(arch: str = "granite-8b", out_dir=None) -> dict:
+    """Lower the GPipe pipeline (pipe axis = pod) on the multi-pod mesh:
+    proves PP composes with DP×TP at production scale."""
+    from repro.distributed.pipeline import pipeline_forward
+    from repro.models.transformer import stack_layout
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    _, period, m = stack_layout(cfg)
+    assert m % mesh.shape["pod"] == 0, (arch, m)
+    rec = {"arch": arch, "shape": "pp_microbatch", "mesh": "multi",
+           "variant": "pp2", "kind": "pipeline"}
+    t0 = time.time()
+    try:
+        params_s = _eval_shape_params(cfg)
+        stack_s = params_s["decoder"]["stack"]
+        # stage-shard the stack over 'pod'; TP shardings inside the stage
+        # come from the same rules with the leading dim pinned
+        pod_sh = jax.tree.map(
+            lambda a: NamedSharding(mesh, P(*(("pod",) + (None,) * (len(a.shape) - 1)))),
+            stack_s)
+        M, B_mb, S = 8, 8, 2048
+        x_s = jax.ShapeDtypeStruct((M, B_mb, S, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        with mesh:
+            jf = jax.jit(
+                lambda sp, xm: pipeline_forward(sp, xm, cfg, mesh, axis="pod"),
+                in_shardings=(pod_sh, NamedSharding(mesh, P())))
+            lowered = jf.lower(stack_s, x_s)
+            compiled = lowered.compile()
+        cost = _cost_dict(compiled)
+        rec.update(status="ok", compile_s=round(time.time() - t0, 1),
+                   memory=_memory_dict(compiled),
+                   module_cost_raw={k: float(cost.get(k, 0.0))
+                                    for k in ("flops", "bytes accessed")},
+                   collective_counts=count_collectives(compiled.as_text()))
+        print(f"[pp2 {arch}] OK compile={rec['compile_s']}s "
+              f"collectives={rec['collective_counts']}")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}")
+        print(f"[pp2 {arch}] FAIL: {e}", file=sys.stderr)
+    _write(rec, out_dir)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-impl", default="einsum", choices=["einsum", "scatter"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--pp-demo", action="store_true",
+                    help="lower the GPipe pipeline over the pod axis")
+    args = ap.parse_args()
+
+    if args.pp_demo:
+        rec = run_pp_demo(args.arch or "granite-8b", out_dir=args.out_dir)
+        sys.exit(0 if rec["status"] == "ok" else 1)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        cells = [(a, s.name) for a in ASSIGNED for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    n_ok = n_skip = n_err = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, moe_impl=args.moe_impl,
+                           remat=not args.no_remat, variant=args.variant,
+                           out_dir=args.out_dir)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skip"
+            n_err += rec["status"] == "error"
+    print(f"dry-run: {n_ok} ok, {n_skip} skip, {n_err} error")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

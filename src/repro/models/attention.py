@@ -1,0 +1,361 @@
+"""Attention variants: GQA (+qk-norm, RoPE/M-RoPE), MLA (DeepSeek-V2), cross-attn.
+
+All functions are per-layer (params have no leading layer dim) so stacks can be
+driven by ``jax.lax.scan`` in transformer.py.
+
+KV caches
+---------
+GQA  : {"k": [B, T, Hkv, D], "v": [B, T, Hkv, D]}
+MLA  : {"ckv": [B, T, kv_lora], "k_rope": [B, T, rope_dim]}
+cross: {"k": [B, T_enc, H, D], "v": [B, T_enc, H, D]}  (filled once at prefill)
+
+Decode steps receive ``pos`` (traced int32 scalar: index of the new token) and
+attend over cache positions <= pos.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mrope, apply_rope, rms_norm_headwise
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+def _dense(key, shape, dtype, scale=None):
+    scale = scale or (2.0 / (shape[0] + shape[-1])) ** 0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_attn(key, cfg, cross=False):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    if cfg.attn == "mla" and not cross:
+        ks = jax.random.split(key, 6)
+        qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {}
+        if cfg.q_lora_rank:
+            p["wq_a"] = _dense(ks[0], (d, cfg.q_lora_rank), dt)
+            p["q_norm"] = jnp.ones((cfg.q_lora_rank,), jnp.float32)
+            p["wq_b"] = _dense(ks[1], (cfg.q_lora_rank, cfg.n_heads * qk_head), dt)
+        else:
+            p["wq"] = _dense(ks[0], (d, cfg.n_heads * qk_head), dt)
+        p["wkv_a"] = _dense(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dt)
+        p["kv_norm"] = jnp.ones((cfg.kv_lora_rank,), jnp.float32)
+        p["wkv_b"] = _dense(
+            ks[3], (cfg.kv_lora_rank, cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)), dt)
+        p["wo"] = _dense(ks[4], (cfg.n_heads * cfg.v_head_dim, d), dt)
+        return p
+    # GQA / MHA / cross-attention
+    ks = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    kvh = cfg.n_heads if cross else cfg.n_kv_heads
+    p = {
+        "wq": _dense(ks[0], (d, cfg.n_heads * hd), dt),
+        "wk": _dense(ks[1], (d, kvh * hd), dt),
+        "wv": _dense(ks[2], (d, kvh * hd), dt),
+        "wo": _dense(ks[3], (cfg.n_heads * hd, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_kv_cache(cfg, batch, length, dtype=None):
+    """Allocate an (empty) per-layer KV cache pytree (no leading layer dim)."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    if cfg.attn == "mla":
+        return {
+            "ckv": jnp.zeros((batch, length, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((batch, length, cfg.qk_rope_dim), dt),
+        }
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+# ----------------------------------------------------------------------------
+# shared attention core
+# ----------------------------------------------------------------------------
+def _gqa_scores_to_out(q, k, v, mask, *, f32_inputs=True):
+    """q: [B,S,Hq,D]; k,v: [B,T,Hkv,D]; mask: broadcastable to [B,S,T] or None.
+
+    f32_inputs=False feeds bf16 operands with f32 MXU accumulation (perf
+    lever P5: halves attention HBM traffic; softmax stays f32 either way).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if f32_inputs:
+        qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        scores = jnp.einsum("bshgd,bthd->bhgst", qf, kf)
+    else:
+        qf = q.reshape(B, S, Hkv, G, D)
+        scores = jnp.einsum("bshgd,bthd->bhgst", qf, k,
+                            preferred_element_type=jnp.float32)
+        vf = v
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    if f32_inputs:
+        out = jnp.einsum("bhgst,bthd->bshgd", attn, vf)
+    else:
+        out = jnp.einsum("bhgst,bthd->bshgd", attn.astype(q.dtype), vf,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def _causal_mask(S, T, offset=0):
+    """mask[s, t] = t <= s + offset (T is the key length)."""
+    return (jnp.arange(T)[None, :] <= (jnp.arange(S)[:, None] + offset))[None]
+
+
+# ----------------------------------------------------------------------------
+# chunked causal attention (bounded memory for long sequences)
+# ----------------------------------------------------------------------------
+# Full [S, S] score materialisation at 32k+ would need TBs; instead scan over
+# query chunks with scores [B, H, qc, S] — the lax.scan analogue of flash
+# attention's outer loop (a Pallas flash kernel is a TPU-side refinement; the
+# scan form compiles on every backend and has identical FLOPs).
+CHUNK_THRESHOLD = 8192
+Q_CHUNK = 512
+
+
+def _chunked_gqa(q, k, v, q_chunk=Q_CHUNK):
+    """Causal attention, q chunked.  q: [B,S,Hq,D]; k,v: [B,S,Hkv,D]."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    nq = S // q_chunk
+    qc = q.reshape(B, nq, q_chunk, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    kpos = jnp.arange(S)
+
+    def body(_, inp):
+        qi, start = inp                                   # [B,qc,Hkv,G,D], scalar
+        sc = jnp.einsum("bshgd,bthd->bhgst", qi, kf) * scale
+        qpos = start + jnp.arange(q_chunk)
+        mask = kpos[None, :] <= qpos[:, None]             # [qc, S]
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        attn = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhgst,bthd->bshgd", attn, vf)
+        return None, out
+
+    starts = jnp.arange(nq) * q_chunk
+    _, outs = jax.lax.scan(body, None, (qc.transpose(1, 0, 2, 3, 4, 5), starts))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hq, D)
+    return out.astype(q.dtype)
+
+
+def _chunked_mla(q_nope, q_rope, k_nope, k_rope, v, q_chunk=Q_CHUNK):
+    """Causal MLA attention, q chunked.  q_*: [B,S,H,D*]; k_rope: [B,S,Dr]."""
+    B, S, H, Dn = q_nope.shape
+    scale = 1.0 / jnp.sqrt(Dn + q_rope.shape[-1]).astype(jnp.float32)
+    nq = S // q_chunk
+    qn = q_nope.reshape(B, nq, q_chunk, H, Dn).astype(jnp.float32)
+    qr = q_rope.reshape(B, nq, q_chunk, H, -1).astype(jnp.float32)
+    knf = k_nope.astype(jnp.float32)
+    krf = k_rope.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(S)
+
+    def body(_, inp):
+        qni, qri, start = inp
+        sc = (jnp.einsum("bshd,bthd->bhst", qni, knf)
+              + jnp.einsum("bshd,btd->bhst", qri, krf)) * scale
+        qpos = start + jnp.arange(q_chunk)
+        mask = kpos[None, :] <= qpos[:, None]
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        attn = jax.nn.softmax(sc, axis=-1)
+        return None, jnp.einsum("bhst,bthd->bshd", attn, vf)
+
+    starts = jnp.arange(nq) * q_chunk
+    _, outs = jax.lax.scan(
+        body, None, (qn.transpose(1, 0, 2, 3, 4), qr.transpose(1, 0, 2, 3, 4),
+                     starts))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, -1)
+    return out.astype(q_nope.dtype)
+
+
+# ----------------------------------------------------------------------------
+# GQA forward (full sequence: train / prefill)
+# ----------------------------------------------------------------------------
+def gqa_forward(p, x, cfg, positions, *, causal=True, mrope_positions=None,
+                return_cache=False):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(p["q_norm"], q)
+        k = rms_norm_headwise(p["k_norm"], k)
+    if cfg.pos == "rope":
+        if cfg.mrope and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    if causal and S >= CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        out = _chunked_gqa(q, k, v)
+    else:
+        mask = _causal_mask(S, S) if causal else None
+        out = _gqa_scores_to_out(q, k, v, mask,
+                                 f32_inputs=cfg.attn_f32_inputs)
+    y = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def gqa_decode(p, x, cfg, cache, pos, *, mrope_positions=None):
+    """x: [B, 1, d]; cache k/v: [B, T, Hkv, D]; pos: int32 scalar (new index)."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    T = cache["k"].shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(p["q_norm"], q)
+        k = rms_norm_headwise(p["k_norm"], k)
+    if cfg.pos == "rope":
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        if cfg.mrope and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, posv, cfg.rope_theta)
+            k = apply_rope(k, posv, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    mask = (jnp.arange(T)[None, :] <= pos)[None, None]         # [1,1,1,T]->bcast [B,S,T]
+    out = _gqa_scores_to_out(q, ck, cv, mask[:, 0])
+    y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ----------------------------------------------------------------------------
+def _mla_q(p, x, cfg):
+    B, S, _ = x.shape
+    qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm_headwise(p["q_norm"], x @ p["wq_a"])
+        q = cq @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, cfg.n_heads, qk_head)
+    return jnp.split(q, [cfg.qk_nope_dim], axis=-1)           # q_nope, q_rope
+
+
+def _mla_kv_latent(p, x, cfg, positions):
+    ckv_full = x @ p["wkv_a"]                                  # [B,S,kv_lora+rope]
+    ckv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+    ckv = rms_norm_headwise(p["kv_norm"], ckv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_forward(p, x, cfg, positions, *, causal=True, return_cache=False):
+    B, S, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv, k_rope = _mla_kv_latent(p, x, cfg, positions)
+    kv = (ckv @ p["wkv_b"]).reshape(B, S, cfg.n_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    if causal and S >= CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        out = _chunked_mla(q_nope, q_rope, k_nope, k_rope, v)
+    else:
+        scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim).astype(jnp.float32)
+        sc = (jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+        if causal:
+            sc = jnp.where(_causal_mask(S, S), sc, NEG_INF)
+        attn = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", attn,
+                         v.astype(jnp.float32)).astype(x.dtype)
+    y = out.reshape(B, S, cfg.n_heads * cfg.v_head_dim) @ p["wo"]
+    if return_cache:
+        return y, {"ckv": ckv, "k_rope": k_rope}
+    return y
+
+
+def mla_decode(p, x, cfg, cache, pos, *, absorb=True):
+    """MLA decode over the latent cache.
+
+    absorb=True uses the matrix-absorption trick (score/value projections folded
+    into the query / output), avoiding re-materialising per-token K/V from the
+    latent — the standard MLA serving optimisation.
+    """
+    B = x.shape[0]
+    T = cache["ckv"].shape[1]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg)                         # [B,1,H,*]
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    ckv_new, k_rope_new = _mla_kv_latent(p, x, cfg, posv)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+    mask = (jnp.arange(T)[None, None, None, :] <= pos)         # [1,1,1,T]
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim).astype(jnp.float32)
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, cfg.n_heads,
+                               cfg.qk_nope_dim + cfg.v_head_dim)
+    w_k = wkv_b[:, :, :cfg.qk_nope_dim]                        # [C,H,Dn]
+    w_v = wkv_b[:, :, cfg.qk_nope_dim:]                        # [C,H,Dv]
+    if absorb:
+        # q_c[b,1,h,c] = q_nope · w_k ;  scores over latent directly
+        q_c = jnp.einsum("bshd,chd->bshc", q_nope.astype(jnp.float32),
+                         w_k.astype(jnp.float32))
+        sc = (jnp.einsum("bshc,btc->bhst", q_c, ckv.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+        sc = jnp.where(mask, sc, NEG_INF)
+        attn = jax.nn.softmax(sc, axis=-1)
+        o_c = jnp.einsum("bhst,btc->bshc", attn, ckv.astype(jnp.float32))
+        out = jnp.einsum("bshc,chd->bshd", o_c, w_v.astype(jnp.float32)).astype(x.dtype)
+    else:
+        kv = jnp.einsum("btc,chd->bthd", ckv.astype(jnp.float32),
+                        wkv_b.astype(jnp.float32))
+        k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+        sc = (jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32), k_nope)
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+        sc = jnp.where(mask, sc, NEG_INF)
+        attn = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", attn, v).astype(x.dtype)
+    y = out.reshape(B, 1, cfg.n_heads * cfg.v_head_dim) @ p["wo"]
+    return y, {"ckv": ckv, "k_rope": k_rope}
+
+
+# ----------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ----------------------------------------------------------------------------
+def cross_attn_cache(p, enc_out, cfg):
+    """Precompute encoder K/V once (prefill)."""
+    B, T, _ = enc_out.shape
+    hd = cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, T, cfg.n_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, T, cfg.n_heads, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attn(p, x, cfg, kv):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    out = _gqa_scores_to_out(q, kv["k"], kv["v"], None)
+    return out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]

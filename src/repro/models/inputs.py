@@ -1,0 +1,67 @@
+"""Batch construction: real arrays (smoke tests / examples) and
+ShapeDtypeStruct stand-ins (dry-run) from one shared spec."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import init_cache
+
+
+def batch_spec(cfg, shape, kind=None) -> Dict[str, Any]:
+    """Dict of (shape, dtype) tuples for the given cell.  kind defaults to
+    shape.kind; pass "prefill"/"decode"/"train" to override."""
+    kind = kind or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    spec: Dict[str, Any] = {}
+    if kind in ("train", "prefill"):
+        if cfg.embed_inputs:
+            spec["tokens"] = ((B, S), jnp.int32)
+        else:
+            spec["embeds"] = ((B, S, d), jnp.dtype(cfg.dtype))
+        if cfg.mrope:
+            spec["mrope_positions"] = ((3, B, S), jnp.int32)
+        if cfg.encoder_decoder:
+            spec["enc_embeds"] = ((B, cfg.enc_seq_len, d), jnp.dtype(cfg.dtype))
+        if kind == "train":
+            spec["labels"] = ((B, S), jnp.int32)
+    else:  # decode: one new token against a cache of length S
+        if cfg.embed_inputs:
+            spec["tokens"] = ((B, 1), jnp.int32)
+        else:
+            spec["embeds"] = ((B, 1, d), jnp.dtype(cfg.dtype))
+        if cfg.mrope:
+            spec["mrope_positions"] = ((3, B, 1), jnp.int32)
+    return spec
+
+
+def make_batch(cfg, shape, kind=None, seed=0) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch (CPU smoke tests, examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, (shp, dt) in batch_spec(cfg, shape, kind).items():
+        if jnp.issubdtype(dt, jnp.integer):
+            if name == "mrope_positions":
+                out[name] = jnp.asarray(
+                    np.broadcast_to(np.arange(shp[-1], dtype=np.int32), shp))
+            else:
+                out[name] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, size=shp, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(rng.standard_normal(shp) * 0.02, dtype=dt)
+    return out
+
+
+def make_batch_structs(cfg, shape, kind=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
+    return {name: jax.ShapeDtypeStruct(shp, dt)
+            for name, (shp, dt) in batch_spec(cfg, shape, kind).items()}
+
+
+def cache_structs(cfg, batch: int, length: int):
+    """ShapeDtypeStruct pytree matching init_cache (via eval_shape)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, length))

@@ -1,0 +1,143 @@
+"""Core neural-net building blocks (pure JAX, functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Normalisation
+# ----------------------------------------------------------------------------
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(scale, x, eps=1e-6):
+    """qk-norm: RMSNorm over the last (head) dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ----------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))                 # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, D]; positions3: [3, B, S] (temporal, height, width channels).
+    `sections` gives the number of frequency pairs per channel (sums to D/2).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    secs = list(sections)
+    if sum(secs) != half:  # rescale sections for non-default head dims
+        base = [s / sum(sections) for s in sections]
+        secs = [int(round(b * half)) for b in base]
+        secs[-1] = half - secs[0] - secs[1]
+    freqs = jnp.asarray(rope_freqs(d, theta))                  # [D/2]
+    # choose the position channel per frequency band
+    chan = jnp.concatenate([
+        jnp.full((secs[0],), 0), jnp.full((secs[1],), 1), jnp.full((secs[2],), 2)
+    ]).astype(jnp.int32)                                       # [D/2]
+    # angles[b, s, i] = positions3[chan[i], b, s] * freqs[i]
+    p = jnp.transpose(positions3, (1, 2, 0)).astype(jnp.float32)  # [B, S, 3]
+    angles = p[..., chan] * freqs                              # [B, S, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Dense MLP (SwiGLU or GELU)
+# ----------------------------------------------------------------------------
+def init_mlp(key, cfg, d_ff=None, d=None):
+    d = d or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    std = (2.0 / (d + d_ff)) ** 0.5
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": (jax.random.normal(k1, (d, d_ff)) * std).astype(dt),
+            "w_up": (jax.random.normal(k2, (d, d_ff)) * std).astype(dt),
+            "w_down": (jax.random.normal(k3, (d_ff, d)) * std).astype(dt),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": (jax.random.normal(k1, (d, d_ff)) * std).astype(dt),
+        "w_down": (jax.random.normal(k2, (d_ff, d)) * std).astype(dt),
+    }
+
+
+def apply_mlp(p, x, cfg):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ----------------------------------------------------------------------------
+# Embedding / LM head
+# ----------------------------------------------------------------------------
+def init_embed(key, cfg):
+    dt = dtype_of(cfg)
+    p = {}
+    if cfg.embed_inputs:
+        p["tok"] = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)
+    if cfg.pos == "learned":
+        k2 = jax.random.fold_in(key, 1)
+        p["pos"] = (jax.random.normal(
+            k2, (max(cfg.enc_seq_len, 32768) if cfg.encoder_decoder else 32768,
+                 cfg.d_model)) * 0.02).astype(dt)
+    return p
+
+
+def init_lm_head(key, cfg):
+    dt = dtype_of(cfg)
+    return {"w": (jax.random.normal(key, (cfg.d_model, cfg.vocab_size)) * 0.02).astype(dt)}
+
+
+def apply_lm_head(p, x):
+    return x @ p["w"]

@@ -1,0 +1,186 @@
+"""Mamba2 block: SSD (state-space duality) chunked prefill + recurrent decode.
+
+Follows the minimal SSD formulation of Dao & Gu (arXiv:2405.21060):
+within-chunk quadratic ("attention-like") term + inter-chunk recurrent state
+pass via ``lax.scan``.  Decode is a single recurrence step carrying
+``state [B, H, P, N]`` plus a small conv ring buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+def init_mamba(key, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    std = (2.0 / (d + di)) ** 0.5
+
+    def dense(k, shape, s=std):
+        return (jax.random.normal(k, shape) * s).astype(dt)
+
+    return {
+        "w_z": dense(ks[0], (d, di)),
+        "w_x": dense(ks[1], (d, di)),
+        "w_B": dense(ks[2], (d, g * n)),
+        "w_C": dense(ks[3], (d, g * n)),
+        "w_dt": dense(ks[4], (d, h)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (w, di + 2 * g * n)) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((di + 2 * g * n,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),                 # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "w_out": dense(ks[6], (di, d)),
+    }
+
+
+def init_ssm_cache(cfg, batch, dtype=None):
+    dtt = dtype or jnp.dtype(cfg.dtype)
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * g * n), dtt),
+    }
+
+
+# ----------------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------------
+def _proj(p, x, cfg):
+    """x [B,L,d] -> z [B,L,di], xbc [B,L,di+2gn] (pre-conv), dt [B,L,h] (raw)."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    B_ = x @ p["w_B"]
+    C_ = x @ p["w_C"]
+    xbc = jnp.concatenate([xs, B_, C_], axis=-1)
+    dt = (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, cfg):
+    """Depthwise causal conv, width w, over [B, L, C] (silu activation)."""
+    w = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv_w"][i] for i in range(w))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _split_xbc(y, cfg):
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    xs, B_, C_ = jnp.split(y, [di, di + g * n], axis=-1)
+    return xs, B_, C_
+
+
+def _bc_heads(t, cfg):
+    """[ ..., g*n] -> [..., H, n] by broadcasting groups over heads."""
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    t = t.reshape(t.shape[:-1] + (g, n))
+    return jnp.repeat(t, h // g, axis=-2)
+
+
+def _gate_out(p, y, z, cfg):
+    """RMSNorm(y * silu(z)) @ w_out."""
+    gated = (y * jax.nn.silu(z.astype(jnp.float32)))
+    ms = jnp.mean(jnp.square(gated), axis=-1, keepdims=True)
+    gated = gated * jax.lax.rsqrt(ms + 1e-6) * p["gate_norm"]
+    return gated.astype(p["w_out"].dtype) @ p["w_out"]
+
+
+# ----------------------------------------------------------------------------
+# full-sequence SSD (train / prefill)
+# ----------------------------------------------------------------------------
+def mamba_forward(p, x, cfg, *, return_cache=False):
+    B, L, _ = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    cl = min(cfg.ssm_chunk, L)
+    assert L % cl == 0, f"seq {L} not divisible by chunk {cl}"
+    nc = L // cl
+
+    z, xbc_pre, dt_raw = _proj(p, x, cfg)
+    xbc = _causal_conv(p, xbc_pre, cfg)
+    xs, B_, C_ = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt_raw)                                # [B,L,h] f32
+    A = -jnp.exp(p["A_log"])                                    # [h]
+
+    xh = xs.reshape(B, L, h, pdim).astype(jnp.float32)
+    Bh = _bc_heads(B_, cfg).astype(jnp.float32)                 # [B,L,h,n]
+    Ch = _bc_heads(C_, cfg).astype(jnp.float32)
+    xdt = xh * dt[..., None]                                    # [B,L,h,p]
+
+    # chunked views
+    def ck(t):
+        return t.reshape((B, nc, cl) + t.shape[2:])
+    xdt_c, B_c, C_c = ck(xdt), ck(Bh), ck(Ch)
+    dA = (dt * A).reshape(B, nc, cl, h)                         # [B,nc,cl,h]
+    dA_cs = jnp.cumsum(dA, axis=2)                              # inclusive cumsum
+    dA_tot = dA_cs[:, :, -1, :]                                 # [B,nc,h]
+
+    # ---- within-chunk (quadratic) term ----
+    # Lmat[b,c,h,i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j else 0
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]    # [B,nc,i,j,h]
+    ltri = jnp.tril(jnp.ones((cl, cl), bool))
+    Lmat = jnp.where(ltri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", C_c, B_c) * Lmat
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt_c)
+
+    # ---- chunk boundary states ----
+    decay_states = jnp.exp(dA_tot[:, :, None, :] - dA_cs)       # [B,nc,cl,h]
+    S_c = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", B_c, decay_states, xdt_c)
+
+    # ---- inter-chunk recurrence ----
+    def step(state, inp):
+        s_chunk, da_tot = inp                                   # [B,h,p,n], [B,h]
+        prev = state
+        new = prev * jnp.exp(da_tot)[:, :, None, None] + s_chunk
+        return new, prev                                        # emit the *entering* state
+    init = jnp.zeros((B, h, pdim, n), jnp.float32)
+    final_state, S_in = jax.lax.scan(
+        step, init, (S_c.transpose(1, 0, 2, 3, 4), dA_tot.transpose(1, 0, 2)))
+    S_in = S_in.transpose(1, 0, 2, 3, 4)                        # [B,nc,h,p,n]
+
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", C_c, S_in, jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(B, L, h, pdim)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, L, cfg.d_inner)
+    out = _gate_out(p, y, z, cfg)
+
+    if return_cache:
+        # final SSD state + conv tail for continued decoding
+        conv_tail = xbc_pre[:, -(cfg.ssm_conv - 1):, :]
+        return out, {"state": final_state, "conv": conv_tail}
+    return out
+
+
+# ----------------------------------------------------------------------------
+# single-token decode
+# ----------------------------------------------------------------------------
+def mamba_decode(p, x, cfg, cache):
+    """x: [B, 1, d]; cache: {"state": [B,H,P,N] f32, "conv": [B,w-1,C]}."""
+    B = x.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xbc_pre, dt_raw = _proj(p, x, cfg)                       # [B,1,*]
+    window = jnp.concatenate([cache["conv"], xbc_pre], axis=1)  # [B,w,C]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    y = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)       # [B,1,C]
+    xs, B_, C_ = _split_xbc(y, cfg)
+    dt = jax.nn.softplus(dt_raw)[:, 0]                          # [B,h]
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, h, pdim).astype(jnp.float32)
+    Bh = _bc_heads(B_[:, 0], cfg).astype(jnp.float32)           # [B,h,n]
+    Ch = _bc_heads(C_[:, 0], cfg).astype(jnp.float32)
+    dA = jnp.exp(dt * A)                                        # [B,h]
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bhp,bh,bhn->bhpn", xh, dt, Bh)
+    yh = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xh * p["D"][None, :, None]
+    yf = yh.reshape(B, 1, cfg.d_inner)
+    out = _gate_out(p, yf, z, cfg)
+    new_conv = window[:, 1:, :]
+    return out, {"state": state, "conv": new_conv}

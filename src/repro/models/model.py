@@ -1,0 +1,156 @@
+"""Model facade: init / train_loss / prefill / decode_step for every family.
+
+Batch dict conventions (all jnp arrays; ShapeDtypeStructs in the dry-run):
+  decoder-only, embed_inputs=True :  {"tokens": [B,S] i32, "labels": [B,S] i32}
+  vlm (embed_inputs=False)        :  {"embeds": [B,S,d] bf16,
+                                      "mrope_positions": [3,B,S] i32,
+                                      "labels": [B,S] i32}
+  enc-dec (audio)                 :  {"enc_embeds": [B,Se,d] bf16 (stub frontend),
+                                      "tokens": [B,S] i32, "labels": [B,S] i32}
+Decode:
+  {"tokens": [B,1]} or {"embeds": [B,1,d]} plus cache pytree and pos scalar.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import (apply_lm_head, apply_norm, init_embed,
+                                 init_lm_head, init_norm)
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+def init_params(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"embed": init_embed(ks[0], cfg)}
+    if cfg.encoder_decoder:
+        import dataclasses
+        enc_cfg = dataclasses.replace(
+            cfg, n_layers=cfg.n_enc_layers, first_dense=0,
+            n_experts=0, top_k=0, n_shared_experts=0)  # encoder is dense
+        p["encoder"] = tfm.init_stack(ks[1], enc_cfg)
+        p["enc_norm"] = init_norm(cfg)
+        p["decoder"] = tfm.init_stack(ks[2], cfg, decoder_cross=True)
+    else:
+        p["decoder"] = tfm.init_stack(ks[2], cfg)
+    p["final_norm"] = init_norm(cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_lm_head(ks[3], cfg)
+    return p
+
+
+def init_cache(cfg, batch: int, length: int):
+    return tfm.init_stack_cache(cfg, batch, length,
+                                decoder_cross=cfg.encoder_decoder)
+
+
+def _enc_config(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, n_layers=cfg.n_enc_layers, first_dense=0,
+                               n_experts=0, top_k=0, n_shared_experts=0)
+
+
+# ----------------------------------------------------------------------------
+# input embedding
+# ----------------------------------------------------------------------------
+def _embed_tokens(p, cfg, tokens):
+    return p["embed"]["tok"][tokens]
+
+
+def _add_learned_pos(p, x, offset=0):
+    S = x.shape[1]
+    return x + jax.lax.dynamic_slice_in_dim(p["embed"]["pos"], offset, S, 0)[None]
+
+
+def _decoder_inputs(p, cfg, batch, mode):
+    if cfg.embed_inputs:
+        x = _embed_tokens(p, cfg, batch["tokens"])
+    else:
+        x = batch["embeds"]
+    if cfg.pos == "learned":
+        x = _add_learned_pos(p, x)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mrope = batch.get("mrope_positions") if cfg.mrope else None
+    return x, positions, mrope
+
+
+def _encode(p, cfg, batch):
+    enc_cfg = _enc_config(cfg)
+    x = batch["enc_embeds"]
+    if cfg.pos == "learned":
+        x = _add_learned_pos(p, x)
+    B, Se = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+    x, _, _ = tfm.apply_stack(p["encoder"], x, enc_cfg, mode="full",
+                              positions=positions, causal=False)
+    return apply_norm(p["enc_norm"], x, cfg)
+
+
+# ----------------------------------------------------------------------------
+# forward passes
+# ----------------------------------------------------------------------------
+def forward(p, cfg, batch, *, mode="full", remat=False, moe_impl="einsum",
+            unroll=False):
+    """Full-sequence pass.  Returns (logits, cache_or_None, aux_loss)."""
+    enc_out = _encode(p, cfg, batch) if cfg.encoder_decoder else None
+    x, positions, mrope = _decoder_inputs(p, cfg, batch, mode)
+    x, cache, aux = tfm.apply_stack(
+        p["decoder"], x, cfg, mode=mode, positions=positions,
+        mrope_positions=mrope, enc_out=enc_out, remat=remat,
+        moe_impl=moe_impl, unroll=unroll)
+    x = apply_norm(p["final_norm"], x, cfg)
+    w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]["w"]
+    logits = x @ w
+    return logits, (cache if mode == "prefill" else None), aux
+
+
+def train_loss(p, cfg, batch, *, remat=True, moe_impl="einsum",
+               aux_weight=0.01, unroll=False):
+    logits, _, aux = forward(p, cfg, batch, mode="full", remat=remat,
+                             moe_impl=moe_impl, unroll=unroll)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+def prefill(p, cfg, batch, *, moe_impl="einsum", unroll=False):
+    """Returns (logits [B,S,V], cache)."""
+    logits, cache, _ = forward(p, cfg, batch, mode="prefill",
+                               moe_impl=moe_impl, unroll=unroll)
+    return logits, cache
+
+
+def decode_step(p, cfg, batch, cache, pos, *, moe_impl="einsum",
+                unroll=False, attn_impl="default", mesh=None,
+                batch_axes=None):
+    """One decode step.  batch: {"tokens": [B,1]} (or embeds).  pos: i32 scalar.
+
+    Returns (logits [B,1,V], new_cache).
+    """
+    enc_out = None  # cross-attn K/V comes from the cache in decode mode
+    if cfg.embed_inputs:
+        x = _embed_tokens(p, cfg, batch["tokens"])
+    else:
+        x = batch["embeds"]
+    if cfg.pos == "learned":
+        S_max = p["embed"]["pos"].shape[0]
+        pe = jax.lax.dynamic_slice_in_dim(
+            p["embed"]["pos"], jnp.minimum(pos, S_max - 1), 1, 0)
+        x = x + pe[None]
+    mrope = batch.get("mrope_positions") if cfg.mrope else None
+    x, cache, _ = tfm.apply_stack(
+        p["decoder"], x, cfg, mode="decode", cache=cache, pos=pos,
+        mrope_positions=mrope, enc_out=enc_out, moe_impl=moe_impl,
+        unroll=unroll, attn_impl=attn_impl, mesh=mesh, batch_axes=batch_axes)
+    x = apply_norm(p["final_norm"], x, cfg)
+    w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]["w"]
+    return x @ w, cache

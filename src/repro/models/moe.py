@@ -1,0 +1,178 @@
+"""Mixture-of-Experts layer (router + shared/routed experts).
+
+Two dispatch implementations, both GSPMD-shardable:
+
+* ``einsum``  — GShard/Switch-style grouped dense dispatch/combine einsums with
+  per-group expert capacity.  Tokens are split into G groups (the batch dim for
+  full-sequence passes); dispatch tensors are [G, s, E, c] with
+  c = s·k·cf/E, so compiled FLOPs track *active* parameters and the dispatch
+  overhead is bounded.  This is the classic, collectively-friendly lowering
+  (dispatch/combine einsums become all-to-alls under EP sharding).
+* ``scatter`` — scatter-add dispatch / gather combine.  No dense dispatch
+  tensor at all (saves the 2·G·s·E·c dispatch FLOPs + bytes); used by the
+  beyond-paper perf configuration.
+
+Routing variants:
+* ``router_norm_topk=True`` (Qwen-MoE): softmax → top-k → renormalise.
+* default (DeepSeek-V2): softmax over all experts, keep top-k probs as-is.
+
+The routed expert stacks are [E, d, f] arrays: EP shards E over ``model`` when
+divisible, otherwise TP shards f (see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp, apply_mlp
+
+
+def _e_pad(cfg) -> int:
+    """Stored expert count: n_experts padded up for mesh-divisible EP."""
+    return max(cfg.n_experts, cfg.moe_pad_to or 0)
+
+
+def init_moe(key, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    d, e, f = cfg.d_model, _e_pad(cfg), cfg.d_expert
+    std = (2.0 / (d + f)) ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, cfg.n_experts)) * 0.02
+                   ).astype(jnp.float32),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * std).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * std).astype(dt),
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[1], (e, d, f)) * std).astype(dt)
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(jax.random.fold_in(key, 7), cfg,
+                               d_ff=cfg.d_expert * cfg.n_shared_experts)
+    return p
+
+
+def group_capacity(s: int, cfg) -> int:
+    """Per-group expert capacity, MXU-aligned."""
+    cap = -(-s * cfg.top_k * int(cfg.capacity_factor * 100) // (100 * cfg.n_experts))
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def route(router_w, x, cfg):
+    """x: [..., d] -> (top_p [...,k], top_i [...,k], probs [...,E])."""
+    logits = x.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_norm_topk:
+        top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+    return top_p, top_i, probs
+
+
+def _positions(top_i, cfg, G, s):
+    """Per-(group, expert) queue positions for every routing slot.
+
+    top_i: [G, s, k] -> pos [G, s, k] (int32), keep [G, s, k] (bool within cap).
+    Slot-major ordering (all slot-0 choices first) matches Switch convention.
+    """
+    E, k = _e_pad(cfg), cfg.top_k
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.int32)             # [G,s,k,E]
+    ohf = oh.transpose(0, 2, 1, 3).reshape(G, k * s, E)        # [G, ks, E]
+    pos_f = jnp.cumsum(ohf, axis=1) - ohf                      # [G, ks, E]
+    pos_f = pos_f.reshape(G, k, s, E).transpose(0, 2, 1, 3)    # [G, s, k, E]
+    pos = jnp.sum(pos_f * oh, axis=-1)                         # [G, s, k]
+    return pos
+
+
+def _moe_ffn(p, xin, cfg):
+    """xin: [E, ..., d] -> [E, ..., d] through the per-expert MLP."""
+    if "w_gate" in p:
+        h = jax.nn.silu(jnp.einsum("e...d,edf->e...f", xin, p["w_gate"]))
+        h = h * jnp.einsum("e...d,edf->e...f", xin, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("e...d,edf->e...f", xin, p["w_up"]))
+    return jnp.einsum("e...f,efd->e...d", h, p["w_down"])
+
+
+def _apply_einsum(p, xg, cfg, capacity):
+    """xg: [G, s, d] grouped tokens."""
+    G, s, d = xg.shape
+    E, k, C = _e_pad(cfg), cfg.top_k, capacity                 # padded experts
+    top_p, top_i, probs = route(p["router"], xg, cfg)          # [G,s,k]
+    pos = _positions(top_i, cfg, G, s)
+    keep = (pos < C).astype(jnp.float32)                       # [G,s,k]
+    # collapse the k slots (expert ids per token are distinct):
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.float32)           # [G,s,k,E]
+    keep_e = jnp.einsum("gske,gsk->gse", oh, keep)             # [G,s,E] in {0,1}
+    pos_e = jnp.einsum("gske,gsk->gse", oh, pos.astype(jnp.float32) * keep)
+    gate_e = jnp.einsum("gske,gsk->gse", oh, top_p * keep)
+    pos_oh = jax.nn.one_hot(pos_e.astype(jnp.int32), C, dtype=jnp.float32)  # [G,s,E,C]
+    disp = (keep_e[..., None] * pos_oh).astype(xg.dtype)       # [G,s,E,C]
+    comb = (gate_e[..., None] * pos_oh).astype(xg.dtype)
+    xin = jnp.einsum("gsec,gsd->egcd", disp, xg)               # [E,G,C,d]
+    if cfg.moe_ep_constraint:
+        # force the all-to-all EP layout: experts stay sharded, tokens move —
+        # stops GSPMD from all-gathering FSDP'd expert weights (lever P3)
+        from jax.sharding import PartitionSpec as _P
+        xin = jax.lax.with_sharding_constraint(
+            xin, _P("model", None, None, None))
+    eout = _moe_ffn(p, xin, cfg)                               # [E,G,C,d]
+    if cfg.moe_ep_constraint:
+        from jax.sharding import PartitionSpec as _P
+        eout = jax.lax.with_sharding_constraint(
+            eout, _P("model", None, None, None))
+    y = jnp.einsum("gsec,egcd->gsd", comb, eout)
+    return y, (top_i, probs)
+
+
+def _apply_scatter(p, xg, cfg, capacity):
+    """Scatter/gather dispatch: no dense [G,s,E,C] tensors."""
+    G, s, d = xg.shape
+    E, k, C = _e_pad(cfg), cfg.top_k, capacity
+    top_p, top_i, probs = route(p["router"], xg, cfg)
+    pos = _positions(top_i, cfg, G, s)
+    keep = (pos < C)
+    posc = jnp.where(keep, pos, 0)
+    gidx = jnp.arange(G)[:, None, None]                        # [G,1,1]
+    upd = (xg[:, :, None, :] * keep[..., None].astype(xg.dtype))  # [G,s,k,d]
+    xin = jnp.zeros((E, G, C, d), xg.dtype)
+    xin = xin.at[top_i, gidx, posc].add(upd, mode="drop")
+    eout = _moe_ffn(p, xin, cfg)                               # [E,G,C,d]
+    gath = eout[top_i, gidx, posc]                             # [G,s,k,d]
+    w = (top_p * keep.astype(jnp.float32)).astype(xg.dtype)
+    y = jnp.einsum("gskd,gsk->gsd", gath, w)
+    return y, (top_i, probs)
+
+
+def apply_moe(p, x, cfg, *, impl="einsum", capacity=None):
+    """x: [B, S, d] -> [B, S, d].
+
+    Dispatch groups default to the batch dim (G=B, s=S — GShard style).  With
+    ``cfg.moe_group_size=g`` the sequence is additionally split into chunks of
+    g tokens: per-group capacity C ∝ g, so the dense dispatch/combine einsum
+    FLOPs and bytes drop linearly in g (see EXPERIMENTS.md §Perf, lever P1).
+    """
+    B, S, d = x.shape
+    g = cfg.moe_group_size
+    if impl == "einsum" and g and S > g and S % g == 0:
+        xg = x.reshape(B * (S // g), g, d)
+        s_eff = g
+    else:
+        xg = x
+        s_eff = S
+    C = capacity or group_capacity(s_eff, cfg)
+    if impl == "scatter":
+        y, aux = _apply_scatter(p, xg, cfg, C)
+    else:
+        y, aux = _apply_einsum(p, xg, cfg, C)
+    y = y.reshape(B, S, d)
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    return y, aux
+
+
+def load_balance_loss(probs, top_i, cfg):
+    """Switch aux loss: E · Σ_e f_e · P_e (f = routed fraction, P = mean prob)."""
+    E = cfg.n_experts
+    frac = jnp.mean(jax.nn.one_hot(top_i, E, dtype=jnp.float32),
+                    axis=tuple(range(top_i.ndim)))
+    mean_p = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return E * jnp.sum(frac * mean_p)

@@ -1,0 +1,298 @@
+"""Layer-stack orchestration: scan-over-layers for every architecture family.
+
+Every decoder layer is  ``x += mixer(norm(x));  x += ffn(norm(x))`` where
+mixer ∈ {attention, mamba} and ffn ∈ {mlp, moe, none}.  Layers are grouped
+into *super-blocks* of ``period`` sub-layers so that heterogeneous stacks
+(jamba's 1:7 attn:mamba interleave, switch's alternating dense/MoE) still scan:
+the super-block structure repeats, so super-block params stack cleanly and
+``jax.lax.scan`` drives the depth dimension with O(1) HLO size.
+
+Caches are pytrees mirroring the stack structure:
+``{"prefix": [c_0, ...], "stack": stacked_superblock_cache}`` where stacked
+leaves carry a leading ``m = (n_layers - first_dense) / period`` dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+# ----------------------------------------------------------------------------
+# structural helpers
+# ----------------------------------------------------------------------------
+def _lcm(a, b):
+    import math
+    return a * b // math.gcd(a, b)
+
+
+def stack_period(cfg) -> int:
+    p = 1
+    if cfg.is_moe and cfg.moe_every > 1:
+        p = _lcm(p, cfg.moe_every)
+    if cfg.family == "hybrid":
+        p = _lcm(p, cfg.attn_every)
+    return p
+
+
+def stack_layout(cfg):
+    """(prefix_indices, period, n_superblocks)."""
+    prefix = list(range(cfg.first_dense))
+    period = stack_period(cfg)
+    rest = cfg.n_layers - cfg.first_dense
+    assert rest % period == 0, (cfg.name, rest, period)
+    return prefix, period, rest // period
+
+
+def mixer_kind(cfg, idx: int) -> str:
+    if cfg.family == "ssm":
+        return "mamba"
+    if cfg.family == "hybrid" and not cfg.attn_layer(idx):
+        return "mamba"
+    return "attn"
+
+
+def ffn_kind(cfg, idx: int) -> str:
+    if cfg.moe_layer(idx):
+        return "moe"
+    if cfg.d_ff == 0:
+        return "none"
+    return "mlp"
+
+
+# ----------------------------------------------------------------------------
+# single layer
+# ----------------------------------------------------------------------------
+def init_layer(key, cfg, idx: int, *, decoder_cross: bool = False) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg)}
+    if mixer_kind(cfg, idx) == "attn":
+        p["attn"] = attn_lib.init_attn(ks[0], cfg)
+    else:
+        p["mamba"] = mamba_lib.init_mamba(ks[0], cfg)
+    fk = ffn_kind(cfg, idx)
+    if fk != "none":
+        p["norm2"] = init_norm(cfg)
+        p["ffn"] = (moe_lib.init_moe(ks[1], cfg) if fk == "moe"
+                    else init_mlp(ks[1], cfg))
+    if decoder_cross:
+        p["norm_x"] = init_norm(cfg)
+        p["xattn"] = attn_lib.init_attn(ks[2], cfg, cross=True)
+    return p
+
+
+def init_layer_cache(cfg, idx: int, batch: int, length: int, *,
+                     decoder_cross: bool = False):
+    c: Dict[str, Any] = {}
+    if mixer_kind(cfg, idx) == "attn":
+        c["kv"] = attn_lib.init_kv_cache(cfg, batch, length)
+    else:
+        c["ssm"] = mamba_lib.init_ssm_cache(cfg, batch)
+    if decoder_cross:
+        dt = jnp.dtype(cfg.dtype)
+        c["xkv"] = {
+            "k": jnp.zeros((batch, cfg.enc_seq_len, cfg.n_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((batch, cfg.enc_seq_len, cfg.n_heads, cfg.head_dim), dt),
+        }
+    return c
+
+
+def apply_layer(p, x, cfg, idx: int, *, mode: str, positions=None, pos=None,
+                cache=None, enc_out=None, mrope_positions=None, causal=True,
+                moe_impl="einsum", attn_impl="default", mesh=None,
+                batch_axes=None):
+    """One layer.  mode: full | prefill | decode.  Returns (x, new_cache, aux)."""
+    new_cache: Dict[str, Any] = {}
+    aux = None
+    h = apply_norm(p["norm1"], x, cfg)
+    if "attn" in p:
+        if mode == "decode":
+            if attn_impl == "seqshard":
+                from repro.models import decode_attention as da
+                y, kv = (da.mla_decode_seqsharded(
+                    p["attn"], h, cfg, cache["kv"], pos, mesh,
+                    batch_axes=batch_axes)
+                    if cfg.attn == "mla" else
+                    da.gqa_decode_seqsharded(
+                        p["attn"], h, cfg, cache["kv"], pos, mesh,
+                        batch_axes=batch_axes,
+                        mrope_positions=mrope_positions))
+            else:
+                y, kv = attn_lib.mla_decode(p["attn"], h, cfg, cache["kv"],
+                                            pos) \
+                    if cfg.attn == "mla" else \
+                    attn_lib.gqa_decode(p["attn"], h, cfg, cache["kv"], pos,
+                                        mrope_positions=mrope_positions)
+            new_cache["kv"] = kv
+        elif mode == "prefill":
+            if cfg.attn == "mla":
+                y, kv = attn_lib.mla_forward(p["attn"], h, cfg, positions,
+                                             causal=causal, return_cache=True)
+            else:
+                y, kv = attn_lib.gqa_forward(p["attn"], h, cfg, positions,
+                                             causal=causal, return_cache=True,
+                                             mrope_positions=mrope_positions)
+            new_cache["kv"] = kv
+        else:
+            y = (attn_lib.mla_forward(p["attn"], h, cfg, positions, causal=causal)
+                 if cfg.attn == "mla" else
+                 attn_lib.gqa_forward(p["attn"], h, cfg, positions, causal=causal,
+                                      mrope_positions=mrope_positions))
+    else:
+        if mode == "decode":
+            y, sc = mamba_lib.mamba_decode(p["mamba"], h, cfg, cache["ssm"])
+            new_cache["ssm"] = sc
+        elif mode == "prefill":
+            y, sc = mamba_lib.mamba_forward(p["mamba"], h, cfg, return_cache=True)
+            new_cache["ssm"] = sc
+        else:
+            y = mamba_lib.mamba_forward(p["mamba"], h, cfg)
+    x = x + y
+
+    if "xattn" in p:
+        hx = apply_norm(p["norm_x"], x, cfg)
+        if mode == "decode":
+            xkv = cache["xkv"]
+        else:
+            xkv = attn_lib.cross_attn_cache(p["xattn"], enc_out, cfg)
+        x = x + attn_lib.cross_attn(p["xattn"], hx, cfg, xkv)
+        if mode == "prefill":
+            new_cache["xkv"] = xkv
+        elif mode == "decode":
+            new_cache["xkv"] = xkv
+
+    if "ffn" in p:
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if "router" in p["ffn"]:
+            y2, (top_i, probs) = moe_lib.apply_moe(p["ffn"], h2, cfg, impl=moe_impl)
+            aux = moe_lib.load_balance_loss(probs, top_i, cfg)  # scalar
+        else:
+            y2 = apply_mlp(p["ffn"], h2, cfg)
+        x = x + y2
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------------
+# stacks
+# ----------------------------------------------------------------------------
+def init_stack(key, cfg, *, decoder_cross: bool = False):
+    """Returns {"prefix": [per-layer params], "stack": stacked super-blocks}."""
+    prefix, period, m = stack_layout(cfg)
+    out: Dict[str, Any] = {"prefix": [], "stack": None}
+    for i in prefix:
+        out["prefix"].append(init_layer(jax.random.fold_in(key, i), cfg, i,
+                                        decoder_cross=decoder_cross))
+    blocks = []
+    for b in range(m):
+        blk = {}
+        for j in range(period):
+            idx = cfg.first_dense + b * period + j
+            blk[f"sub_{j}"] = init_layer(jax.random.fold_in(key, 1000 + idx),
+                                         cfg, idx, decoder_cross=decoder_cross)
+        blocks.append(blk)
+    if blocks:
+        out["stack"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return out
+
+
+def init_stack_cache(cfg, batch: int, length: int, *, decoder_cross=False):
+    prefix, period, m = stack_layout(cfg)
+    out: Dict[str, Any] = {"prefix": [], "stack": None}
+    for i in prefix:
+        out["prefix"].append(init_layer_cache(cfg, i, batch, length,
+                                              decoder_cross=decoder_cross))
+    blocks = []
+    for b in range(m):
+        blk = {}
+        for j in range(period):
+            idx = cfg.first_dense + b * period + j
+            blk[f"sub_{j}"] = init_layer_cache(cfg, idx, batch, length,
+                                               decoder_cross=decoder_cross)
+        blocks.append(blk)
+    if blocks:
+        out["stack"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return out
+
+
+def _superblock(params_blk, x, cfg, *, mode, cache_blk=None, remat=False, **kw):
+    """Apply one super-block (period sub-layers, python-unrolled)."""
+    _, period, _ = stack_layout(cfg)
+    new_cache = {}
+    aux_sum = jnp.zeros((), jnp.float32)
+    for j in range(period):
+        idx = cfg.first_dense + j          # structural idx within the period
+        c = cache_blk[f"sub_{j}"] if cache_blk is not None else None
+        x, nc, aux = apply_layer(params_blk[f"sub_{j}"], x, cfg, idx,
+                                 mode=mode, cache=c, **kw)
+        new_cache[f"sub_{j}"] = nc
+        if aux is not None:
+            aux_sum = aux_sum + aux
+    return x, new_cache, aux_sum
+
+
+def apply_stack(params, x, cfg, *, mode: str, cache=None, remat=False,
+                moe_impl="einsum", unroll=False, collect_aux=False, **kw):
+    """Run the full layer stack.  Returns (x, new_cache, aux_loss_scalar).
+
+    unroll=True python-loops over super-blocks instead of lax.scan (used by
+    the dry-run's per-layer cost probes; also a perf knob for short stacks).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix = []
+    for i, lp in enumerate(params["prefix"]):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = apply_layer(lp, x, cfg, i, mode=mode, cache=c,
+                                 moe_impl=moe_impl, **kw)
+        new_prefix.append(nc)
+        if aux is not None:
+            aux_total = aux_total + aux
+
+    new_stack = None
+    if params["stack"] is not None and unroll:
+        _, _, m = stack_layout(cfg)
+        blocks_out = []
+        for b in range(m):
+            blk_params = jax.tree.map(lambda t: t[b], params["stack"])
+            blk_cache = (jax.tree.map(lambda t: t[b], cache["stack"])
+                         if cache is not None and cache.get("stack") is not None
+                         else None)
+            x, nc, aux = _superblock(blk_params, x, cfg, mode=mode,
+                                     cache_blk=blk_cache, moe_impl=moe_impl,
+                                     **kw)
+            aux_total = aux_total + aux
+            blocks_out.append(nc)
+        if mode in ("prefill", "decode"):
+            new_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks_out)
+        return x, {"prefix": new_prefix, "stack": new_stack}, aux_total
+
+    if params["stack"] is not None:
+        if mode == "full":
+            def body(carry, blk_params):
+                h, a = carry
+                h, _, aux = _superblock(blk_params, h, cfg, mode="full",
+                                        moe_impl=moe_impl, **kw)
+                return (h, a + aux), None
+            f = jax.checkpoint(body) if remat else body
+            (x, aux_total), _ = jax.lax.scan(f, (x, aux_total), params["stack"])
+        elif mode == "prefill":
+            def body_p(carry, blk_params):
+                h, nc, _ = _superblock(blk_params, carry, cfg, mode="prefill",
+                                       moe_impl=moe_impl, **kw)
+                return h, nc
+            x, new_stack = jax.lax.scan(body_p, x, params["stack"])
+        else:  # decode
+            def body_d(carry, xs):
+                blk_params, blk_cache = xs
+                h, nc, _ = _superblock(blk_params, carry, cfg, mode="decode",
+                                       cache_blk=blk_cache, moe_impl=moe_impl, **kw)
+                return h, nc
+            x, new_stack = jax.lax.scan(body_d, x, (params["stack"], cache["stack"]))
+
+    return x, {"prefix": new_prefix, "stack": new_stack}, aux_total

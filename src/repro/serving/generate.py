@@ -1,0 +1,60 @@
+"""Prefill + decode generation loops (greedy / temperature sampling)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import decode_step, prefill
+from repro.serving.kv_cache import grow_cache
+
+
+def sample_tokens(logits, key, temperature: float = 0.0):
+    """logits: [B, V] -> [B] int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1).astype(jnp.int32)
+
+
+def make_steps(cfg, *, moe_impl="einsum"):
+    pf = jax.jit(lambda p, b: prefill(p, cfg, b, moe_impl=moe_impl))
+    dec = jax.jit(lambda p, b, c, pos: decode_step(p, cfg, b, c, pos,
+                                                   moe_impl=moe_impl),
+                  donate_argnums=(2,))
+    return pf, dec
+
+
+def generate(params, cfg, prompt: jnp.ndarray, *, max_new_tokens: int = 32,
+             temperature: float = 0.0, seed: int = 0,
+             extra_inputs: Optional[Dict] = None, steps=None
+             ) -> Tuple[np.ndarray, Dict[str, float]]:
+    """prompt: [B, S] int32.  Returns (tokens [B, S+new], timing metrics)."""
+    import time
+    B, S = prompt.shape
+    pf, dec = steps or make_steps(cfg)
+    batch = {"tokens": prompt, **(extra_inputs or {})}
+    key = jax.random.PRNGKey(seed)
+
+    t0 = time.perf_counter()
+    logits, cache = pf(params, batch)
+    cache = grow_cache(cfg, cache, B, S + max_new_tokens)
+    next_tok = sample_tokens(logits[:, -1], key, temperature)
+    next_tok.block_until_ready()
+    ttft = time.perf_counter() - t0
+
+    out = [next_tok]
+    t1 = time.perf_counter()
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        db = {"tokens": next_tok[:, None], **(extra_inputs or {})}
+        lg, cache = dec(params, db, cache, jnp.int32(S + i))
+        next_tok = sample_tokens(lg[:, -1], sub, temperature)
+        out.append(next_tok)
+    jax.block_until_ready(out[-1])
+    tpot = (time.perf_counter() - t1) / max(1, max_new_tokens - 1)
+    tokens = jnp.concatenate([prompt, jnp.stack(out, axis=1)], axis=1)
+    return np.asarray(tokens), {"ttft_s": ttft, "tpot_s": tpot}

@@ -1,0 +1,58 @@
+"""KV-cache utilities: allocation, growth, merging, memory accounting."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import init_cache
+
+
+def grow_cache(cfg, cache, batch: int, new_len: int):
+    """Copy `cache` (prefill output, seq length S) into buffers of `new_len`.
+
+    Sequence-length-free leaves (SSM states, cross-attn KV) pass through.
+    """
+    target = init_cache(cfg, batch, new_len)
+
+    def merge(dst, src):
+        if dst.shape != src.shape:
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0,) * dst.ndim)
+        return src.astype(dst.dtype)
+
+    return jax.tree.map(merge, target, cache)
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def unstack_layers(params_or_cache, cfg):
+    """Stacked decoder tree -> flat per-layer list (python-loop serving)."""
+    from repro.models.transformer import stack_layout
+    prefix, period, m = stack_layout(cfg)
+    tree = params_or_cache
+    out = list(tree["prefix"])
+    if tree.get("stack") is not None:
+        for b in range(m):
+            for j in range(period):
+                out.append(jax.tree.map(lambda x: x[b], tree["stack"][f"sub_{j}"]))
+    return out
+
+
+def restack_layers(layers, cfg, template):
+    """Inverse of unstack_layers (used to write back updated caches)."""
+    from repro.models.transformer import stack_layout
+    prefix, period, m = stack_layout(cfg)
+    n_pre = len(prefix)
+    out = {"prefix": list(layers[:n_pre]), "stack": None}
+    if template.get("stack") is not None:
+        blocks = {}
+        for j in range(period):
+            per_block = [layers[n_pre + b * period + j] for b in range(m)]
+            blocks[f"sub_{j}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_block)
+        out["stack"] = blocks
+    return out

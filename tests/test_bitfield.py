@@ -1,0 +1,68 @@
+"""Property tests for the BF16 bit-field decomposition (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitfield
+
+try:
+    import ml_dtypes
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:
+    BF16 = None
+
+
+def _to_bf16(xs):
+    return np.asarray(xs, dtype=np.float32).astype(BF16)
+
+
+@given(st.lists(st.floats(allow_nan=True, allow_infinity=True, width=32),
+                min_size=1, max_size=256))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_bitexact(xs):
+    arr = _to_bf16(xs)
+    exp, sm = bitfield.decompose_np(arr)
+    back = bitfield.reconstruct_np(exp, sm, arr.shape)
+    assert np.array_equal(arr.view(np.uint16), back.view(np.uint16))
+
+
+@given(st.integers(0, 2 ** 16 - 1))
+@settings(max_examples=300, deadline=None)
+def test_all_bit_patterns(u16):
+    arr = np.array([u16], np.uint16).view(BF16)
+    exp, sm = bitfield.decompose_np(arr)
+    back = bitfield.reconstruct_np(exp, sm, arr.shape)
+    assert np.array_equal(arr.view(np.uint16), back.view(np.uint16))
+
+
+@given(st.integers(1, 1000), st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_shard_bounds_cover(n, k):
+    bounds = bitfield.shard_bounds(n, k)
+    assert len(bounds) == k
+    assert bounds[0][0] == 0 and bounds[-1][1] == n
+    for (a0, b0), (a1, b1) in zip(bounds, bounds[1:]):
+        assert b0 == a1 and a0 < b0 or (a0 == b0)
+
+
+def test_entropy_of_gaussian_weights(rng):
+    w = _to_bf16(rng.standard_normal(200_000) * 0.02)
+    exp, sm = bitfield.decompose_np(w)
+    h_exp = bitfield.byte_entropy(exp)
+    h_sm = bitfield.byte_entropy(sm)
+    # the paper's Fig. 2 observation: exponents ~2.5-2.7 bits, sm near-random
+    assert 2.0 < h_exp < 3.5
+    assert h_sm > 7.5
+    assert bitfield.support_fraction(exp) < 0.25
+    assert 0.6 < bitfield.entropy_bound_ratio(w) < 0.75
+
+
+def test_jnp_matches_np(rng):
+    import jax.numpy as jnp
+    x = _to_bf16(rng.standard_normal(1024))
+    e1, s1 = bitfield.decompose_np(x)
+    e2, s2 = bitfield.decompose_jnp(jnp.asarray(x))
+    assert np.array_equal(e1, np.asarray(e2))
+    assert np.array_equal(s1, np.asarray(s2))
+    back = bitfield.reconstruct_jnp(jnp.asarray(e1), jnp.asarray(s1))
+    assert np.array_equal(np.asarray(back).view(np.uint16), x.view(np.uint16))

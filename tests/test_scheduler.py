@@ -1,0 +1,132 @@
+"""Cache-affinity scheduler tests: Theorem 3.1 bound, work-conservation,
+brute-force comparison (hypothesis property tests)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (brute_force_best, build_blocks,
+                                  compute_dominant, naive_schedule, schedule,
+                                  simulate)
+from repro.core.states import CState, Task, lower_bound, make_tasks
+
+STATES = [CState.M, CState.E, CState.S, CState.C]
+
+
+@st.composite
+def instances(draw, max_n=9):
+    n = draw(st.integers(1, max_n))
+    L = draw(st.sampled_from([2, 3, 4, 6]))
+    K = draw(st.sampled_from([2, 4]))
+    states = [draw(st.sampled_from(STATES)) for _ in range(n)]
+    ps = [draw(st.floats(0.01, 2.0)) for _ in range(n)]
+    u = draw(st.floats(0.1, 2.0))
+    rho = draw(st.floats(0.1, 0.8))
+    c = draw(st.floats(0.01, 1.0))
+    nt = draw(st.integers(1, 3))
+    tasks = make_tasks(list(range(n)), states, ps, n_tensors=nt, u=u,
+                       rho=rho, c=c, K=K)
+    return tasks, L
+
+
+@given(instances())
+@settings(max_examples=150, deadline=None)
+def test_theorem_3_1_bound(inst):
+    """ALG <= (3 - 1/L) * LB <= (3 - 1/L) * OPT (Lemma B.3 lower bound)."""
+    tasks, L = inst
+    _, tl = schedule(tasks, L)
+    lb = lower_bound(tasks, L)
+    assert tl.makespan <= (3 - 1 / L) * lb + 1e-9
+
+
+@given(instances())
+@settings(max_examples=60, deadline=None)
+def test_all_tasks_scheduled_once(inst):
+    tasks, L = inst
+    blocks = build_blocks(tasks, L)
+    uids = [t.uid for b in blocks for t in b]
+    live = [t.uid for t in tasks if t.state is not CState.F]
+    assert sorted(uids) == sorted(live)
+
+
+@st.composite
+def tiny_instances(draw):
+    n = draw(st.integers(2, 5))
+    L = draw(st.sampled_from([2, 3]))
+    states = [draw(st.sampled_from(STATES)) for _ in range(n)]
+    ps = [draw(st.floats(0.01, 1.0)) for _ in range(n)]
+    tasks = make_tasks(list(range(n)), states, ps, n_tensors=1,
+                       u=draw(st.floats(0.2, 1.5)),
+                       rho=draw(st.floats(0.2, 0.6)),
+                       c=draw(st.floats(0.02, 0.6)), K=2)
+    return tasks, L
+
+
+@given(tiny_instances())
+@settings(max_examples=25, deadline=None)
+def test_close_to_bruteforce(inst):
+    tasks, L = inst
+    _, tl = schedule(tasks, L)
+    best = brute_force_best(tasks, L)
+    assert tl.makespan <= (3 - 1 / L) * best + 1e-9
+
+
+def test_f_state_tasks_free():
+    tasks = make_tasks([0, 1], [CState.F, CState.F], [0.3, 0.4])
+    blocks, tl = schedule(tasks, 2)
+    # no I/O, no decompression: makespan = serialised expert exec
+    assert tl.io_end == 0.0
+    assert abs(tl.makespan - 0.7) < 1e-9
+
+
+def test_type_ii_overlap_beats_naive():
+    """The paper's core scenario: SM-cached tasks hide under Type-I I/O."""
+    n = 8
+    states = [CState.M if i % 2 == 0 else CState.C for i in range(n)]
+    # misses have long exec, C-hits short: naive order interleaves poorly
+    ps = [0.2] * n
+    tasks = make_tasks(list(range(n)), states, ps, n_tensors=2,
+                       u=1.0, rho=0.4, c=0.3, K=4)
+    random.Random(3).shuffle(tasks)
+    _, tl = schedule(tasks, 3)
+    nv = naive_schedule(tasks, 3)
+    assert tl.makespan <= nv.makespan + 1e-9
+
+
+def test_compute_dominant_definition():
+    # pure-compute block (C states) with tiny e_cost is compute-dominant
+    tasks = make_tasks([0, 1, 2, 3], [CState.C] * 4, [0.1] * 4,
+                       n_tensors=2, u=1.0, rho=0.01, c=2.0, K=2)
+    assert compute_dominant(tasks, 2)
+    # pure-I/O block (M states, tiny decompression) is not
+    tasks2 = make_tasks([0], [CState.M], [0.1], u=5.0, rho=0.5, c=0.001, K=2)
+    assert not compute_dominant(tasks2, 2)
+
+
+def test_simulation_work_conserving():
+    """No worker idles while a ready op exists."""
+    tasks = make_tasks(list(range(5)), [CState.C] * 5, [0.1] * 5,
+                       n_tensors=1, u=1.0, rho=0.4, c=0.5, K=4)
+    tl = simulate([tasks], 2, record_events=True)
+    dec = sorted([e for e in tl.events if e[0].startswith("dec")],
+                 key=lambda e: e[2])
+    # all ops ready at t=0 (C state): workers must run back-to-back
+    per_worker = {}
+    for kind, uid, s, e in dec:
+        per_worker.setdefault(kind, []).append((s, e))
+    for ops in per_worker.values():
+        for (s0, e0), (s1, e1) in zip(ops, ops[1:]):
+            assert abs(s1 - e0) < 1e-9
+
+
+def test_straggler_bounded_degradation():
+    """One 4x-slower worker must not blow past the work-conservation bound:
+    makespan(straggler) <= makespan(uniform) + extra-serial-time of the ops
+    the slow worker actually ran (and never worse than losing the worker)."""
+    tasks = make_tasks(list(range(8)), [CState.C] * 8, [0.05] * 8,
+                       n_tensors=2, u=1.0, rho=0.4, c=0.4, K=4)
+    blocks = build_blocks(tasks, 4)
+    base = simulate(blocks, 4).makespan
+    slow = simulate(blocks, 4, worker_speeds=[0.25, 1, 1, 1]).makespan
+    only3 = simulate(blocks, 3).makespan
+    assert base <= slow <= only3 * 1.34 + 1e-9   # 0.25x worker ~ losing it

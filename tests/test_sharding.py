@@ -1,0 +1,113 @@
+"""Sharding-rule tests: divisibility, EP/TP selection, FSDP policy,
+collective-bytes HLO parsing.  Spec-level (no multi-device needed)."""
+import numpy as np
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed.collectives import collective_bytes, count_collectives
+from repro.distributed.sharding import needs_fsdp, param_pspecs
+from repro.models import init_params
+
+
+def _shape_tree(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_specs_divisible(arch):
+    """Every partitioned axis must divide evenly by its mesh axis size."""
+    cfg = get_config(arch)
+    tree = _shape_tree(cfg)
+    specs = param_pspecs(tree, cfg, model_size=16, fsdp=True, data_size=16)
+
+    def check(node, spec):
+        if isinstance(node, dict):
+            for k in node:
+                check(node[k], spec[k])
+        elif isinstance(node, (list, tuple)):
+            for a, b in zip(node, spec):
+                check(a, b)
+        elif node is None:
+            return
+        else:
+            for ax, s in enumerate(spec):
+                if s is None:
+                    continue
+                size = {"model": 16, "data": 16}[s]
+                assert node.shape[ax] % size == 0, (arch, node.shape, spec)
+
+    check(tree, specs)
+
+
+def test_ep_selected_when_divisible():
+    cfg = get_config("deepseek-v2-236b")       # 160 experts % 16 == 0
+    tree = _shape_tree(cfg)
+    specs = param_pspecs(tree, cfg, model_size=16)
+    sub = specs["decoder"]["stack"]["sub_0"]["ffn"]["w_up"]
+    assert sub[-3] == "model", sub             # experts axis sharded
+
+
+def test_tp_fallback_when_not_divisible():
+    cfg = get_config("qwen2-moe-a2.7b")        # 60 experts % 16 != 0
+    tree = _shape_tree(cfg)
+    specs = param_pspecs(tree, cfg, model_size=16)
+    sub = specs["decoder"]["stack"]["sub_0"]["ffn"]["w_up"]
+    assert sub[-3] is None and sub[-1] == "model", sub
+
+
+def test_mamba_vocab_not_divisible_falls_back():
+    cfg = get_config("mamba2-370m")            # vocab 50280 % 16 != 0
+    tree = _shape_tree(cfg)
+    specs = param_pspecs(tree, cfg, model_size=16)
+    assert specs["embed"]["tok"] == P(None, "model")   # d_model instead
+
+
+def test_fsdp_policy():
+    assert needs_fsdp(get_config("deepseek-v2-236b"), 16, train=True)
+    assert needs_fsdp(get_config("deepseek-v2-236b"), 16, train=False)
+    assert not needs_fsdp(get_config("starcoder2-3b"), 16, train=True)
+    assert not needs_fsdp(get_config("granite-8b"), 16, train=False)
+
+
+def test_collective_parse():
+    hlo = """
+  %ar = f32[256,1024]{1,0} all-reduce(f32[256,1024]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[4096]{0} all-gather(bf16[256]{0} %p), dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(f32[256]{0} %y), dimensions={0}
+  %cp = u8[128]{0} collective-permute(u8[128]{0} %z), source_target_pairs={{0,1}}
+  %nothing = f32[2]{0} add(f32[2]{0} %a, f32[2]{0} %b)
+"""
+    cb = collective_bytes(hlo)
+    assert cb["all-reduce"] == 256 * 1024 * 4
+    assert cb["all-gather"] == 256 * 2
+    assert cb["reduce-scatter"] == 256 * 4
+    assert cb["collective-permute"] == 128
+    assert cb["total"] == sum(v for k, v in cb.items() if k != "total")
+    cnt = count_collectives(hlo)
+    assert cnt == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                   "collective-permute": 1}
+
+
+def test_small_mesh_lowering():
+    """End-to-end pjit lowering on a tiny in-process mesh (1 device)."""
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config, ShapeConfig
+    from repro.distributed.sharding import batch_pspecs, param_shardings
+    from repro.models.inputs import batch_spec, make_batch_structs
+    from repro.models.model import train_loss
+
+    cfg = get_smoke_config("granite-8b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeConfig("t", 64, 2, "train")
+    params_s = _shape_tree(cfg)
+    p_sh = param_shardings(params_s, cfg, mesh)
+    from jax.sharding import NamedSharding
+    b_sh = {k: NamedSharding(mesh, v) for k, v in
+            batch_pspecs(batch_spec(cfg, shape, "train"), mesh).items()}
+    lowered = jax.jit(lambda p, b: train_loss(p, cfg, b),
+                      in_shardings=(p_sh, b_sh)).lower(
+        params_s, make_batch_structs(cfg, shape, "train"))
+    compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None

@@ -1,0 +1,91 @@
+"""Serving-simulator tests: ZipMoE vs baselines, planning gain, ablations."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import AccelerateSim, DeepSpeedSim, MoEInfinitySim
+from repro.core.simulator import (HW, MoESpec, ZipMoESim, exec_time,
+                                  make_layer_trace, profile_consts, run_decode)
+
+SPEC = MoESpec(n_layers=8, n_experts=32, top_k=4, d_model=1024, d_expert=1024)
+HWC = HW()
+BUDGET = 8 * 6 * SPEC.expert_bytes_full      # ~6 full experts per layer
+
+
+def _trace(steps=40, seed=1, alpha=1.2, batch=1):
+    return make_layer_trace(SPEC.n_layers, SPEC.n_experts, SPEC.top_k, steps,
+                            alpha=alpha, seed=seed, batch=batch)
+
+
+def _warm(seed=7):
+    return [s[0] for s in make_layer_trace(1, SPEC.n_experts, SPEC.top_k, 400,
+                                           alpha=1.2, seed=seed)]
+
+
+def test_zipmoe_beats_baselines():
+    trace = _trace()
+    tp = {}
+    for name, sim in {
+        "zip": ZipMoESim(SPEC, HWC, BUDGET, warm_trace=_warm(), plan=True),
+        "acc": AccelerateSim(SPEC, HWC, BUDGET),
+        "ds": DeepSpeedSim(SPEC, HWC, BUDGET),
+        "moei": MoEInfinitySim(SPEC, HWC, BUDGET),
+    }.items():
+        tp[name] = float(np.mean(run_decode(sim, trace)[5:]))
+    assert tp["zip"] < tp["acc"], tp
+    assert tp["zip"] < tp["ds"], tp
+    assert tp["zip"] < tp["moei"], tp
+
+
+def test_planning_improves_or_equals():
+    trace = _trace(seed=2)
+    zp = ZipMoESim(SPEC, HWC, BUDGET, warm_trace=_warm(), plan=True)
+    zn = ZipMoESim(SPEC, HWC, BUDGET, plan=False)
+    lp = float(np.mean(run_decode(zp, trace)[5:]))
+    ln = float(np.mean(run_decode(zn, trace)[5:]))
+    assert lp <= ln * 1.05, (lp, ln)
+
+
+def test_rank_eviction_beats_fifo():
+    trace = _trace(seed=3, steps=60)
+    res = {}
+    for ev in ("rank", "fifo", "lru", "marking"):
+        sim = ZipMoESim(SPEC, HWC, BUDGET, plan=False, eviction=ev)
+        res[ev] = float(np.mean(run_decode(sim, trace)[10:]))
+    assert res["rank"] <= min(res["fifo"], res["marking"]) * 1.05, res
+
+
+def test_more_memory_is_faster():
+    trace = _trace(seed=4)
+    lats = []
+    for budget in (BUDGET / 4, BUDGET, BUDGET * 4):
+        sim = ZipMoESim(SPEC, HWC, budget, warm_trace=_warm(), plan=True)
+        lats.append(float(np.mean(run_decode(sim, trace)[5:])))
+    assert lats[0] >= lats[1] >= lats[2] * 0.95, lats
+
+
+def test_deepspeed_memory_agnostic():
+    trace = _trace(seed=5, steps=10)
+    a = float(np.mean(run_decode(DeepSpeedSim(SPEC, HWC, BUDGET), trace)))
+    b = float(np.mean(run_decode(DeepSpeedSim(SPEC, HWC, BUDGET * 8), trace)))
+    assert abs(a - b) < 1e-9                    # paper's Fig. 7 observation
+
+
+def test_batch_amplifies_zipmoe_gain():
+    """Paper §5: more experts per step -> more parallelisable decompression."""
+    t1 = _trace(seed=6, batch=1)
+    t8 = _trace(seed=6, batch=8)
+    z1 = ZipMoESim(SPEC, HWC, BUDGET, plan=False)
+    a1 = AccelerateSim(SPEC, HWC, BUDGET)
+    z8 = ZipMoESim(SPEC, HWC, BUDGET, plan=False)
+    a8 = AccelerateSim(SPEC, HWC, BUDGET)
+    g1 = np.mean(run_decode(a1, t1)[3:]) / np.mean(run_decode(z1, t1)[3:])
+    g8 = np.mean(run_decode(a8, t8)[3:]) / np.mean(run_decode(z8, t8)[3:])
+    assert g8 > g1 * 0.9, (g1, g8)
+
+
+def test_profile_consts_scaling():
+    c = profile_consts(SPEC, HWC)
+    assert c.u > c.v                            # SM chunk >> one E chunk
+    assert c.u == pytest.approx(SPEC.tensor_elems / HWC.storage_bw)
+    assert exec_time(SPEC, HWC, tokens=2) == \
+        pytest.approx(2 * exec_time(SPEC, HWC, tokens=1))
