@@ -1,0 +1,39 @@
+"""Version-compat shims for JAX API drift.
+
+``shard_map`` moved twice (jax.experimental.shard_map -> jax.shard_map) and
+renamed its replication-check kwarg (``check_rep`` in jax<=0.5,
+``check_vma`` from 0.7).  All repo call sites go through :func:`shard_map`
+here, which inspects the installed signature once and translates.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                # jax>=0.7 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:              # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+try:
+    _SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+except (TypeError, ValueError):     # pragma: no cover - exotic wrappers
+    _SHARD_MAP_PARAMS = frozenset({"check_vma"})
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """`jax.shard_map` with the replication-check kwarg spelled portably.
+
+    ``check_vma`` follows the modern spelling; on installs that only know
+    ``check_rep`` the flag is forwarded under that name (same semantics).
+    """
+    kwargs = {}
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+        # otherwise: neither kwarg exists; run with the default checks
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

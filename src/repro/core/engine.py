@@ -1,14 +1,23 @@
 """Real threaded ZipMoE runtime (§3.1 runtime half, §4 implementation notes).
 
-One I/O thread (exact-range chunk reads from the ExpertStore, optionally
-bandwidth-throttled), L decompression worker threads (zstd/zlib), and a
-recovery stage (the bf16 bit-splice — on TPU this is the Pallas kernel in
-kernels/recovery.py; on the CPU host we call its interpret-mode oracle or the
-numpy splice).
+One persistent I/O thread (exact-range chunk reads from the ExpertStore,
+optionally bandwidth-throttled), L persistent decompression worker threads
+(zstd/zlib), and a recovery stage (the bf16 bit-splice — on TPU this is the
+Pallas kernel in kernels/recovery.py; on the CPU host we call its
+interpret-mode oracle or the numpy splice).
 
 The engine executes the *same* block schedule that Algorithm 1 constructs:
 the I/O thread walks chunks in block order (E-chunks before SM-chunks), and
 workers take the highest-priority ready decompression op (work-conserving).
+
+Fetches are asynchronous: :meth:`prefetch_experts` enqueues a fetch job on
+the persistent pool and returns a :class:`FetchHandle` future immediately, so
+the serving layer can overlap the next MoE layer's expert reconstruction with
+the current layer's attention/FFN compute.  :meth:`fetch_experts` is the
+blocking wrapper (``prefetch_experts(...).result()``).  Speculative prefetch
+jobs (router predictions seeded from ``FreqTracker`` history) skip the
+frequency/hit accounting so mispredictions don't pollute the workload model;
+the serving layer records the *actual* access via :meth:`note_access`.
 
 Payload semantics per cache pool:
   F : reconstructed bf16 ndarrays (zero work on hit)
@@ -18,7 +27,9 @@ Payload semantics per cache pool:
 """
 from __future__ import annotations
 
-import queue
+import collections
+import heapq
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -50,6 +61,66 @@ class FetchStats:
     hits: Dict[str, int] = field(default_factory=dict)
 
 
+class _FetchJob:
+    """All shared state of one in-flight fetch (owned by the engine pool)."""
+
+    def __init__(self, seq: int, layer: int, expert_ids: List[int],
+                 speculative: bool):
+        self.seq = seq
+        self.layer = layer
+        self.expert_ids = expert_ids
+        self.speculative = speculative
+        self.urgency = 1 if speculative else 0    # demand fetches go first
+        self.t_submit = time.perf_counter()
+        self.t_ready: Optional[float] = None
+        self.tasks: List[Task] = []
+        self.blocks: List[List[Task]] = []
+        self.metas: Dict[int, Tuple[int, int]] = {}       # uid -> (expert, tidx)
+        self.task_by_uid: Dict[int, Task] = {}
+        self.prio: Dict[int, int] = {}
+        self.payloads: Dict[int, ExpertPayload] = {}
+        self.e_data: Dict[Tuple[int, int], bytes] = {}    # (uid, shard)
+        self.sm_data: Dict[int, bytes] = {}               # uid -> sm bytes
+        self.dec_out: Dict[Tuple[int, int], np.ndarray] = {}
+        self.dec_needed: Dict[int, int] = {}
+        self.done_tensors: Dict[Tuple[int, int], np.ndarray] = {}
+        self.claimed: set = set()                         # uids being recovered
+        self.n_done = 0
+        self.n_total = 0
+        self.stats = FetchStats()
+        self.done_ev = threading.Event()
+
+
+class FetchHandle:
+    """Future for one expert fetch; ``result()`` blocks until reconstruction
+    finishes, assembles the tensor dict, and updates the cache pools."""
+
+    def __init__(self, engine: "ZipMoEEngine", job: _FetchJob):
+        self._engine = engine
+        self._job = job
+        self._result: Optional[Tuple[Dict, FetchStats]] = None
+        self.wait_s = 0.0          # time result() actually blocked
+
+    @property
+    def layer(self) -> int:
+        return self._job.layer
+
+    @property
+    def expert_ids(self) -> List[int]:
+        return list(self._job.expert_ids)
+
+    def done(self) -> bool:
+        return self._job.done_ev.is_set()
+
+    def result(self) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
+        if self._result is None:
+            t0 = time.perf_counter()
+            self._job.done_ev.wait()
+            self.wait_s = time.perf_counter() - t0
+            self._result = self._engine._collect(self._job)
+        return self._result
+
+
 class ZipMoEEngine:
     """Expert fetch engine for one model (all layers share the store)."""
 
@@ -71,6 +142,41 @@ class ZipMoEEngine:
         self.u = 1e-3
         self.c = 3e-4
         self.rho = store.rho()
+
+        # ---- persistent worker pool (one I/O thread + L decompressors) ----
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)   # guards the queues below
+        # demand (urgent) fetches are served before speculative prefetches so
+        # a misprediction fallback never queues behind background warming
+        self._io_urgent: "collections.deque[_FetchJob]" = collections.deque()
+        self._io_spec: "collections.deque[_FetchJob]" = collections.deque()
+        self._dec_ready: List[Tuple[int, int, int, int, int]] = []
+        #                 (urgency, seq, prio, uid, shard)
+        self._io_busy = False
+        self._jobs: Dict[int, _FetchJob] = {}      # seq -> live job
+        self._seq = itertools.count()
+        self._stop = False
+        self._threads = [threading.Thread(target=self._io_loop, daemon=True,
+                                          name="zipmoe-io")]
+        self._threads += [threading.Thread(target=self._dec_loop, daemon=True,
+                                           name=f"zipmoe-dec{i}")
+                          for i in range(self.L)]
+        for th in self._threads:
+            th.start()
+
+    def shutdown(self):
+        """Stop the pool.  In-flight jobs are finished first."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for th in self._threads:
+            th.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
 
     # ------------------------------------------------------------------
     def profile(self, layer: int = None, expert: int = None, reps: int = 3):
@@ -99,15 +205,43 @@ class ZipMoEEngine:
                 return ent.payload
         return None
 
+    def predict_topk(self, layer: int, k: int) -> List[int]:
+        """Most-frequent k experts of `layer` per the runtime FreqTracker —
+        the prefetch seed when the next layer's router hasn't run yet."""
+        order = self.trackers[layer].experts_by_rank()
+        return [int(e) for e in order[:k]]
+
+    def note_access(self, layer: int, expert_ids: Sequence[int]):
+        """Record an *actual* router selection served from a speculative
+        prefetch (tracker counts + hit/miss stats)."""
+        return self.caches[layer].record_access(list(expert_ids))
+
+    # ------------------------------------------------------------------
     def fetch_experts(self, layer: int, expert_ids: Sequence[int],
                       p_times: Optional[Dict[int, float]] = None
                       ) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
-        """Reconstruct all tensors of the given experts; update the cache."""
-        t_start = time.perf_counter()
+        """Blocking fetch: reconstruct all tensors of the given experts."""
+        return self.prefetch_experts(layer, expert_ids, p_times).result()
+
+    def prefetch_experts(self, layer: int, expert_ids: Sequence[int],
+                         p_times: Optional[Dict[int, float]] = None, *,
+                         speculative: bool = False) -> FetchHandle:
+        """Enqueue an asynchronous fetch on the persistent pool.
+
+        Returns immediately; the I/O thread and the L decompression workers
+        reconstruct the experts in the background while the caller computes.
+        With ``speculative=True`` the access is NOT recorded in the frequency
+        tracker / hit stats (predictions must not feed the workload model);
+        pair it with :meth:`note_access` once the router's true selection is
+        known.
+        """
+        ids = sorted({int(e) for e in expert_ids})
+        job = _FetchJob(next(self._seq), layer, ids, speculative)
         cache = self.caches[layer]
-        states = cache.record_access(list(expert_ids))
-        payloads = {e: self._payload(layer, e) or ExpertPayload()
-                    for e in expert_ids}
+        if not speculative:
+            cache.record_access(ids)
+        job.payloads = {e: self._payload(layer, e) or ExpertPayload()
+                        for e in ids}
 
         # ---- build the task set (one task per tensor) --------------------
         # Effective per-tensor state is derived from what the payload actually
@@ -126,143 +260,177 @@ class ZipMoEEngine:
                 return CState.E
             return CState.M
 
-        tasks: List[Task] = []
-        metas: Dict[int, Tuple[int, int]] = {}          # uid -> (expert, tidx)
         uid = 0
-        for e in expert_ids:
+        for e in ids:
             g = self.store.groups[(layer, e)]
             for tidx, tm in enumerate(g.tensors):
-                st_t = tensor_state(payloads[e], tidx, len(tm.e_sizes))
-                tasks.append(Task(
+                st_t = tensor_state(job.payloads[e], tidx, len(tm.e_sizes))
+                job.tasks.append(Task(
                     expert=e, tensor=tidx, state=st_t,
                     p=(p_times or {}).get(e, 1e-4),
                     sm_cost=self.u, e_cost=self.rho * self.u / len(tm.e_sizes),
                     dec_cost=self.c, k_shards=len(tm.e_sizes), uid=uid))
-                metas[uid] = (e, tidx)
+                job.metas[uid] = (e, tidx)
                 uid += 1
-        blocks = build_blocks(tasks, self.L)
+        job.n_total = len(job.tasks)
+        job.blocks = build_blocks(job.tasks, self.L)
+        job.task_by_uid = {t.uid: t for t in job.tasks}
+        for i, t in enumerate(t for b in job.blocks for t in b):
+            job.prio[t.uid] = i
 
-        # ---- shared completion state -------------------------------------
-        lock = threading.Lock()
-        cv = threading.Condition(lock)
-        e_data: Dict[Tuple[int, int], bytes] = {}        # (uid, shard) -> compressed
-        sm_data: Dict[int, bytes] = {}                    # uid -> sm bytes
-        dec_out: Dict[Tuple[int, int], np.ndarray] = {}   # (uid, shard) -> u8 plane
-        pending_dec: List[Tuple[int, int, int]] = []      # (prio, uid, shard) ready
-        dec_needed: Dict[int, int] = {}
-        done_tensors: Dict[Tuple[int, int], np.ndarray] = {}
-        stats = FetchStats()
-        prio = {}
-        order = [t for b in blocks for t in b]
-        for i, t in enumerate(order):
-            prio[t.uid] = i
+        # ---- seed cached components; publish the job to the pool ---------
+        seeded: List[Tuple[int, int, int, int]] = []
+        for t in job.tasks:
+            e, tidx = job.metas[t.uid]
+            pl = job.payloads[e]
+            if t.state is CState.F:
+                job.done_tensors[(e, tidx)] = pl.full[tidx]
+                job.n_done += 1
+                continue
+            job.dec_needed[t.uid] = t.k_shards
+            if not t.needs_sm_io:
+                job.sm_data[t.uid] = pl.sm[tidx]
+            if not t.needs_e_io:
+                for k in range(t.k_shards):
+                    job.e_data[(t.uid, k)] = pl.e[(tidx, k)]
+                    seeded.append((job.urgency, job.seq, job.prio[t.uid],
+                                   t.uid, k))
 
-        task_by_uid = {t.uid: t for t in tasks}
+        if job.n_done == job.n_total:            # pure F-pool hit: no work
+            job.t_ready = time.perf_counter()
+            job.done_ev.set()
+            return FetchHandle(self, job)
 
-        def seed_cached():
-            """Mark cached components available immediately."""
-            for t in tasks:
-                e, tidx = metas[t.uid]
-                pl = payloads[e]
-                if t.state is CState.F:
-                    done_tensors[(e, tidx)] = pl.full[tidx]
-                    continue
-                dec_needed[t.uid] = t.k_shards
-                if not t.needs_sm_io:
-                    sm_data[t.uid] = pl.sm[tidx]
-                if not t.needs_e_io:
+        with self._cv:
+            self._jobs[job.seq] = job
+            for item in seeded:
+                heapq.heappush(self._dec_ready, item)
+            (self._io_spec if job.speculative else self._io_urgent).append(job)
+            self._cv.notify_all()
+        return FetchHandle(self, job)
+
+    # ---- persistent I/O thread -------------------------------------------
+    def _io_loop(self):
+        while True:
+            with self._cv:
+                while not (self._io_urgent or self._io_spec) and not self._stop:
+                    self._cv.wait()
+                if not (self._io_urgent or self._io_spec) and self._stop:
+                    return
+                job = (self._io_urgent.popleft() if self._io_urgent
+                       else self._io_spec.popleft())
+                self._io_busy = True
+            self._io_run_job(job)
+            with self._cv:
+                self._io_busy = False
+                self._cv.notify_all()
+
+    def _io_run_job(self, job: _FetchJob):
+        layer = job.layer
+        for blk in job.blocks:
+            # a speculative job yields to demand fetches at block boundaries
+            while job.speculative:
+                with self._cv:
+                    urgent = (self._io_urgent.popleft()
+                              if self._io_urgent else None)
+                if urgent is None:
+                    break
+                self._io_run_job(urgent)
+            for t in blk:
+                if t.needs_e_io:
+                    e, tidx = job.metas[t.uid]
                     for k in range(t.k_shards):
-                        e_data[(t.uid, k)] = pl.e[(tidx, k)]
-                        pending_dec.append((prio[t.uid], t.uid, k))
-        seed_cached()
-        pending_dec.sort()
+                        data = self.store.read_e((layer, e), tidx, k)
+                        with self._cv:
+                            job.stats.io_bytes += len(data)
+                            job.e_data[(t.uid, k)] = data
+                            heapq.heappush(
+                                self._dec_ready,
+                                (job.urgency, job.seq, job.prio[t.uid],
+                                 t.uid, k))
+                            self._cv.notify_all()
+            for t in blk:
+                if t.needs_sm_io:
+                    e, tidx = job.metas[t.uid]
+                    data = self.store.read_sm((layer, e), tidx)
+                    with self._cv:
+                        job.stats.io_bytes += len(data)
+                        job.sm_data[t.uid] = data
+                        ready = self._claim_if_ready(job, t)
+                    if ready:              # decompression already finished
+                        self._finish_tensor(job, t)
 
-        n_dec_total = sum(dec_needed.values())
-        dec_done_cnt = [0]
+    # ---- persistent decompression workers --------------------------------
+    def _drained_locked(self) -> bool:
+        """With the lock held: stopping AND no work can still appear —
+        workers may only exit then, or an in-flight fetch would strand."""
+        return (self._stop and not self._dec_ready and not self._io_urgent
+                and not self._io_spec and not self._io_busy)
 
-        # ---- I/O thread ----------------------------------------------------
-        def io_thread():
-            for blk in blocks:
-                for t in blk:
-                    if t.needs_e_io:
-                        e, tidx = metas[t.uid]
-                        for k in range(t.k_shards):
-                            data = self.store.read_e((layer, e), tidx, k)
-                            with cv:
-                                e_data[(t.uid, k)] = data
-                                pending_dec.append((prio[t.uid], t.uid, k))
-                                pending_dec.sort()
-                                cv.notify_all()
-                for t in blk:
-                    if t.needs_sm_io:
-                        e, tidx = metas[t.uid]
-                        data = self.store.read_sm((layer, e), tidx)
-                        with cv:
-                            sm_data[t.uid] = data
-                            maybe_finish(t)   # decompression may already be done
-                            cv.notify_all()
+    def _dec_loop(self):
+        while True:
+            with self._cv:
+                while not self._dec_ready and not self._drained_locked():
+                    self._cv.wait()
+                if not self._dec_ready:
+                    return
+                _, seq, _, uid, k = heapq.heappop(self._dec_ready)
+                job = self._jobs[seq]
+                data = job.e_data[(uid, k)]
+            t = job.task_by_uid[uid]
+            e, tidx = job.metas[uid]
+            plane = self.store.decompress_e((job.layer, e), tidx, k, data)
+            with self._cv:
+                job.dec_out[(uid, k)] = plane
+                job.dec_needed[uid] -= 1
+                job.stats.dec_ops += 1
+                ready = self._claim_if_ready(job, t)
+                self._cv.notify_all()
+            if ready:
+                self._finish_tensor(job, t)
 
-        # ---- decompression workers -----------------------------------------
-        def maybe_finish(t: Task):
-            """Called with lock held after a decompression finishes."""
-            u = t.uid
-            if dec_needed.get(u, 1) != 0 or u not in sm_data:
-                return
-            e, tidx = metas[u]
-            shards = [dec_out[(u, k)] for k in range(t.k_shards)]
-            exp = np.concatenate(shards)
-            tm = self.store.groups[(layer, e)].tensors[tidx]
-            arr = self.recover(exp, sm_data[u], tm.shape)
-            done_tensors[(e, tidx)] = arr
-            cv.notify_all()
+    # ---- recovery + completion -------------------------------------------
+    def _claim_if_ready(self, job: _FetchJob, t: Task) -> bool:
+        """With the pool lock held: claim `t` for recovery iff all of its
+        inputs are in and nobody else claimed it."""
+        u = t.uid
+        if job.dec_needed.get(u, 1) != 0 or u not in job.sm_data:
+            return False
+        if u in job.claimed:
+            return False
+        job.claimed.add(u)
+        return True
 
-        def worker():
-            while True:
-                with cv:
-                    while not pending_dec:
-                        if dec_done_cnt[0] >= n_dec_total:
-                            return
-                        cv.wait(timeout=0.2)
-                        if dec_done_cnt[0] >= n_dec_total and not pending_dec:
-                            return
-                    _, u, k = pending_dec.pop(0)
-                    data = e_data[(u, k)]
-                t = task_by_uid[u]
-                e, tidx = metas[u]
-                plane = self.store.decompress_e((layer, e), tidx, k, data)
-                with cv:
-                    dec_out[(u, k)] = plane
-                    dec_needed[u] -= 1
-                    dec_done_cnt[0] += 1
-                    stats.dec_ops += 1
-                    maybe_finish(t)
-                    cv.notify_all()
+    def _finish_tensor(self, job: _FetchJob, t: Task):
+        """Bit-splice recovery, off the pool lock (claimed by one thread)."""
+        u = t.uid
+        e, tidx = job.metas[u]
+        shards = [job.dec_out[(u, k)] for k in range(t.k_shards)]
+        exp = np.concatenate(shards)
+        tm = self.store.groups[(job.layer, e)].tensors[tidx]
+        arr = self.recover(exp, job.sm_data[u], tm.shape)
+        with self._cv:
+            job.done_tensors[(e, tidx)] = arr
+            job.n_done += 1
+            if job.n_done == job.n_total:
+                job.t_ready = time.perf_counter()
+                self._jobs.pop(job.seq, None)
+                job.done_ev.set()
 
-        threads = [threading.Thread(target=io_thread, daemon=True)]
-        threads += [threading.Thread(target=worker, daemon=True)
-                    for _ in range(self.L)]
-        io0 = self.store.io_bytes
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
-        # tensors whose state needed no decompression but had SM io (pure-raw)
-        with cv:
-            for t in tasks:
-                key = metas[t.uid]
-                if key in done_tensors:
-                    continue
-                maybe_finish(t)
-        missing = [metas[t.uid] for t in tasks if metas[t.uid] not in done_tensors]
+    # ---- result assembly + cache update (caller's thread) ----------------
+    def _collect(self, job: _FetchJob
+                 ) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
+        layer = job.layer
+        missing = [job.metas[t.uid] for t in job.tasks
+                   if job.metas[t.uid] not in job.done_tensors]
         assert not missing, f"unreconstructed tensors: {missing}"
-
-        # ---- assemble result + update cache -------------------------------
+        cache = self.caches[layer]
         out: Dict[int, Dict[str, np.ndarray]] = {}
-        for e in expert_ids:
+        for e in job.expert_ids:
             g = self.store.groups[(layer, e)]
-            out[e] = {tm.name: done_tensors[(e, tidx)]
+            out[e] = {tm.name: job.done_tensors[(e, tidx)]
                       for tidx, tm in enumerate(g.tensors)}
-        for e in expert_ids:
+        for e in job.expert_ids:
             pool = cache.admit(e)
             if pool is None:
                 continue
@@ -270,25 +438,25 @@ class ZipMoEEngine:
             pl = ExpertPayload()
             g = self.store.groups[(layer, e)]
             if pool == "F":
-                pl.full = {tidx: done_tensors[(e, tidx)]
+                pl.full = {tidx: job.done_tensors[(e, tidx)]
                            for tidx in range(len(g.tensors))}
             else:
-                for t in tasks:
+                for t in job.tasks:
                     if t.expert != e:
                         continue
-                    tidx = metas[t.uid][1]
+                    tidx = job.metas[t.uid][1]
                     if pool in ("C", "S"):
-                        smb = sm_data.get(t.uid, payloads[e].sm.get(tidx))
+                        smb = job.sm_data.get(t.uid,
+                                              job.payloads[e].sm.get(tidx))
                         if smb is not None:
                             pl.sm[tidx] = smb
                     if pool in ("C", "E"):
                         for k in range(t.k_shards):
-                            eb = e_data.get((t.uid, k),
-                                            payloads[e].e.get((tidx, k)))
+                            eb = job.e_data.get(
+                                (t.uid, k), job.payloads[e].e.get((tidx, k)))
                             if eb is not None:
                                 pl.e[(tidx, k)] = eb
             ent.payload = pl
-        stats.wall = time.perf_counter() - t_start
-        stats.io_bytes = self.store.io_bytes - io0
-        stats.hits = {k: v for k, v in cache.hits.items()}
-        return out, stats
+        job.stats.wall = (job.t_ready or time.perf_counter()) - job.t_submit
+        job.stats.hits = {k: v for k, v in cache.hits.items()}
+        return out, job.stats

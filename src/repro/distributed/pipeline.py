@@ -26,11 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
+from repro.compat import shard_map
 from repro.models.transformer import _superblock, stack_layout
 
 

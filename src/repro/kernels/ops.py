@@ -51,6 +51,35 @@ def recover_bf16(exp: jnp.ndarray, sm: jnp.ndarray, shape=None, *,
     return out.reshape(-1)[:n].reshape(shape)
 
 
+@functools.partial(jax.jit, static_argnames=("block_c", "block_d", "block_f",
+                                             "interpret"))
+def grouped_expert_gemm(x: jnp.ndarray, w: jnp.ndarray, *,
+                        block_c: int = 128, block_d: int = 512,
+                        block_f: int = 128,
+                        interpret: bool = None) -> jnp.ndarray:
+    """Jit-cached ``moe_gemm.grouped_gemm``: x [E,C,d] @ w [E,d,f] -> [E,C,f].
+
+    The raw ``pallas_call`` builds a fresh jaxpr per invocation; routing this
+    through jit makes repeated decode-step shapes hit the compile cache.
+    """
+    from repro.kernels import moe_gemm
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return moe_gemm.grouped_gemm(x, w, block_c=block_c, block_d=block_d,
+                                 block_f=block_f, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_d", "block_f",
+                                             "interpret"))
+def fused_zip_gemm(x: jnp.ndarray, exp: jnp.ndarray, sm: jnp.ndarray, *,
+                   block_c: int = 128, block_d: int = 512,
+                   block_f: int = 128, interpret: bool = None) -> jnp.ndarray:
+    """Jit-cached ``moe_gemm.zip_gemm``: recovery fused into the GEMM."""
+    from repro.kernels import moe_gemm
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return moe_gemm.zip_gemm(x, exp, sm, block_c=block_c, block_d=block_d,
+                             block_f=block_f, interpret=interpret)
+
+
 def recover_bf16_host(exp_np, sm_np, shape):
     """Engine hook: numpy planes in, jnp bf16 out (via the kernel)."""
     import numpy as np

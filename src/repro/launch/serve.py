@@ -4,9 +4,13 @@ params.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-moe-a2.7b \\
       --mode zipmoe --requests 8 --max-new 16
 
---mode resident : standard in-memory serving (BatchServer)
---mode zipmoe   : routed experts live ONLY in the compressed store; every MoE
-                  layer fetches through cache pools + the Alg-1 scheduler.
+--mode resident     : standard in-memory serving (BatchServer)
+--mode zipmoe       : routed experts live ONLY in the compressed store; every
+                      MoE layer fetches through cache pools + the Alg-1
+                      scheduler, with overlapped prefetch (--no-prefetch to
+                      compare against the synchronous path).
+--mode zipmoe-batch : continuous batching (BatchServer) over the compressed
+                      store end-to-end, with per-request TTFT/TPOT.
 """
 from __future__ import annotations
 
@@ -28,7 +32,10 @@ from repro.serving.zipserve import ZipServer
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-moe-a2.7b")
-    ap.add_argument("--mode", default="zipmoe", choices=["resident", "zipmoe"])
+    ap.add_argument("--mode", default="zipmoe",
+                    choices=["resident", "zipmoe", "zipmoe-batch"])
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable overlapped expert prefetch")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -58,7 +65,21 @@ def main():
     print(f"store: {store_dir} ratio={store.ratio():.3f} rho={store.rho():.3f}")
     zs = ZipServer(params, cfg, store_dir, L=args.workers,
                    pool_sizes={"F": 2, "C": 2, "S": 4, "E": 8},
-                   bandwidth_gbps=args.bandwidth_gbps)
+                   bandwidth_gbps=args.bandwidth_gbps,
+                   prefetch=not args.no_prefetch)
+
+    if args.mode == "zipmoe-batch":
+        srv = BatchServer(None, cfg, max_batch=args.batch,
+                          max_len=args.prompt_len + args.max_new,
+                          zip_server=zs)
+        for _ in range(args.requests):
+            srv.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
+                       args.max_new)
+        srv.run()
+        print("metrics:", srv.metrics())
+        zs.close()
+        return
+
     B = args.batch
     S = args.prompt_len
     caches = zs.init_cache(B, S + args.max_new)
@@ -75,6 +96,12 @@ def main():
             hits[k] = hits.get(k, 0) + v
     print("cache hits by state:", hits,
           "misses:", sum(c.misses for c in zs.engine.caches.values()))
+    ov = zs.overlap_summary()
+    print(f"overlap: hidden={ov['hidden_fetch_s']*1e3:.1f}ms of "
+          f"{ov['total_fetch_s']*1e3:.1f}ms fetch "
+          f"(frac={ov['hidden_frac']:.2f}, pred_hits={ov['pred_hits']} "
+          f"misses={ov['pred_misses']})")
+    zs.close()
 
 
 if __name__ == "__main__":

@@ -21,11 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:                                # jax>=0.7 moved shard_map to jax.*
-    shard_map = jax.shard_map
-except AttributeError:              # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
+from repro.compat import shard_map
 from repro.models.layers import apply_mrope, apply_rope, rms_norm_headwise
 
 NEG_INF = -1e30

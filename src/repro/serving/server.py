@@ -2,7 +2,9 @@
 
 Minimal but real: a request queue, a fixed decode-slot pool, per-request
 TTFT/TPOT accounting, prompt-length bucketing for prefill batching.  Drives
-either the resident-params path (make_steps) or the ZipMoE path (ZipServer).
+either the resident-params path (make_steps) or the compressed-store path
+(pass a ``ZipServer``): the same epoch loop then schedules router-driven
+expert reconstruction + overlapped prefetch end-to-end.
 """
 from __future__ import annotations
 
@@ -15,7 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import prefill
 from repro.serving.generate import make_steps, sample_tokens
 from repro.serving.kv_cache import grow_cache
 
@@ -30,25 +31,42 @@ class Request:
     done: Optional[float] = None
     output: List[int] = field(default_factory=list)
 
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time-per-output-token after the first token."""
+        if self.ttft is None or self.done is None or len(self.output) < 2:
+            return None
+        return (self.done - (self.submitted + self.ttft)) / (len(self.output) - 1)
+
 
 class BatchServer:
     """Epoch-style continuous batching: group same-length requests, prefill
     together, decode in lockstep until all finish, refilling free slots."""
 
     def __init__(self, params, cfg, *, max_batch: int = 8, max_len: int = 256,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, zip_server=None):
         self.params, self.cfg = params, cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature
-        self.pf, self.dec = make_steps(cfg)
+        self.zip = zip_server
+        if zip_server is None:
+            self.pf, self.dec = make_steps(cfg)
         self.queue: "collections.deque[Request]" = collections.deque()
         self.finished: List[Request] = []
         self._rid = 0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        """Enqueue a request.  Prompts that leave no room for even one new
+        token under ``max_len`` are rejected; oversized ``max_new_tokens``
+        are clamped so S + new never overflows the KV allocation."""
+        prompt = np.asarray(prompt, np.int32)
+        S = len(prompt)
+        if S < 1 or S + 1 > self.max_len:
+            raise ValueError(
+                f"prompt length {S} must be in [1, max_len={self.max_len})")
+        max_new_tokens = max(1, min(max_new_tokens, self.max_len - S))
         self._rid += 1
-        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        self.queue.append(Request(self._rid, prompt, max_new_tokens))
         return self._rid
 
     def _take_batch(self) -> List[Request]:
@@ -73,27 +91,52 @@ class BatchServer:
             self._serve_batch(batch)
         return self.finished
 
+    # -- one epoch -------------------------------------------------------
+    def _prefill(self, prompts: np.ndarray, max_new: int):
+        """Returns (last-position logits [B, V], decode cache, decode fn)."""
+        B, S = prompts.shape
+        if self.zip is not None:
+            # compressed-store path: the prompt streams through the ZipMoE
+            # decode step (engine prefetch overlaps reconstruction with it)
+            cache = self.zip.init_cache(B, S + max_new)
+            logits = None
+            for i in range(S):
+                logits, cache = self.zip.decode_step(
+                    jnp.asarray(prompts[:, i:i + 1]), cache, i)
+
+            def dec(tok, cache, pos):
+                return self.zip.decode_step(tok, cache, pos)
+        else:
+            logits, cache = self.pf(self.params, {"tokens": jnp.asarray(prompts)})
+            cache = grow_cache(self.cfg, cache, B, S + max_new)
+
+            def dec(tok, cache, pos):
+                return self.dec(self.params, {"tokens": tok}, cache,
+                                jnp.int32(pos))
+        return logits[:, -1], cache, dec
+
     def _serve_batch(self, batch: List[Request]):
-        B = len(batch)
         S = len(batch[0].prompt)
-        prompts = jnp.asarray(np.stack([r.prompt for r in batch]))
-        key = jax.random.PRNGKey(0)
-        logits, cache = self.pf(self.params, {"tokens": prompts})
+        prompts = np.stack([r.prompt for r in batch])
         max_new = max(r.max_new_tokens for r in batch)
-        cache = grow_cache(self.cfg, cache, B, S + max_new)
-        tok = sample_tokens(logits[:, -1], key, self.temperature)
+        key = jax.random.PRNGKey(0)
+        logits, cache, dec = self._prefill(prompts, max_new)
+        tok = sample_tokens(logits, key, self.temperature)
         tok.block_until_ready()
         now = time.perf_counter()
-        for r in batch:
+        alive = set()
+        for b, r in enumerate(batch):
             r.ttft = now - r.submitted
-            r.output.append(int(tok[list(batch).index(r)]))
-        alive = set(range(B))
+            r.output.append(int(tok[b]))
+            if len(r.output) >= r.max_new_tokens:
+                r.done = now
+            else:
+                alive.add(b)
         for i in range(max_new - 1):
             if not alive:
                 break
             key, sub = jax.random.split(key)
-            lg, cache = self.dec(self.params, {"tokens": tok[:, None]},
-                                 cache, jnp.int32(S + i))
+            lg, cache = dec(tok[:, None], cache, S + i)
             tok = sample_tokens(lg[:, -1], sub, self.temperature)
             now = time.perf_counter()
             for b in list(alive):
@@ -113,9 +156,16 @@ class BatchServer:
         if not self.finished:
             return {}
         ttfts = [r.ttft for r in self.finished if r.ttft is not None]
+        tpots = [r.tpot_s for r in self.finished if r.tpot_s is not None]
         total_toks = sum(len(r.output) for r in self.finished)
         span = (max(r.done for r in self.finished) -
                 min(r.submitted for r in self.finished))
-        return {"n_requests": len(self.finished),
-                "mean_ttft_s": float(np.mean(ttfts)),
-                "throughput_tok_s": total_toks / max(span, 1e-9)}
+        m = {"n_requests": len(self.finished),
+             "mean_ttft_s": float(np.mean(ttfts)),
+             "throughput_tok_s": total_toks / max(span, 1e-9)}
+        if tpots:
+            m["mean_tpot_s"] = float(np.mean(tpots))
+        if self.zip is not None:
+            m.update({f"overlap_{k}": v
+                      for k, v in self.zip.overlap_summary().items()})
+        return m

@@ -6,11 +6,29 @@ top-k selection is handed to the ZipMoE engine, which reconstructs exactly
 those experts (cache pools + Algorithm-1 scheduling + parallel zstd
 decompression + bit-splice recovery) before the FFN runs.
 
+Two beyond-loop mechanisms turn the I/O-bound sync path compute-centric
+(DESIGN.md §3):
+
+* **Overlapped prefetch** — after layer i's router runs, the *next* MoE
+  layer's likely experts (FreqTracker top-k history) are enqueued on the
+  engine's persistent I/O+worker pool as a speculative fetch, so chunk reads
+  and decompression hide under layer i's FFN and layer i+1's attention.  On a
+  router misprediction the missing experts fall back to a blocking fetch;
+  hit/miss and hidden-vs-blocking wall time land in ``overlap_stats``.
+* **Grouped expert FFN** — instead of a Python loop over batch × top-k, the
+  step's tokens are gathered by expert into one [E_active, C, d] batch and
+  pushed through ``kernels/moe_gemm.grouped_gemm`` (interpret mode on CPU
+  hosts, Mosaic on TPU).  With ``fused_recovery=True`` the engine hands back
+  the raw bit-planes and ``zip_gemm`` splices them to bf16 on VREGs inside
+  the GEMM, skipping the recovered weight's HBM round-trip.
+
 ``ZipServer.decode_step`` is validated against the fully-resident
 ``models.decode_step`` (bit-equal routing; identical logits up to dtype
-noise) in tests/test_zipserve.py.
+noise) in tests/test_engine_zipserve.py, and the prefetch / grouped-FFN
+paths against the synchronous / per-expert-loop paths in
+tests/test_overlap_serving.py.
 
-Scale note (DESIGN.md §2): on a TPU pod the serving path keeps experts
+Scale note (DESIGN.md §6): on a TPU pod the serving path keeps experts
 HBM-resident and EP-sharded; this host-driven path is the memory-constrained
 single-host mode the paper targets, and doubles as the correctness harness
 for the store/engine/scheduler stack.
@@ -18,33 +36,64 @@ for the store/engine/scheduler stack.
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import ZipMoEEngine
+from repro.core.engine import FetchHandle, ZipMoEEngine
 from repro.core.store import ExpertStore
+from repro.kernels.ops import fused_zip_gemm, grouped_expert_gemm
 from repro.models import attention as attn_lib
 from repro.models import mamba as mamba_lib
-from repro.models import transformer as tfm
 from repro.models.layers import apply_mlp, apply_norm
 from repro.models.model import init_cache
+from repro.models.moe import route
 from repro.serving.kv_cache import unstack_layers
+
+
+@dataclass
+class BitPlanes:
+    """A tensor kept as its ZipMoE bit-planes (fused-recovery mode)."""
+    exp: np.ndarray          # u8, flat
+    sm: np.ndarray           # u8, flat
+    shape: Tuple[int, ...]
+
+
+def _planes_recover(exp: np.ndarray, sm, shape) -> BitPlanes:
+    """Engine recover hook that skips the splice: zip_gemm fuses it."""
+    sm_arr = (np.frombuffer(sm, np.uint8)
+              if isinstance(sm, (bytes, bytearray)) else np.asarray(sm))
+    return BitPlanes(np.asarray(exp), sm_arr, tuple(shape))
+
+
+def _pick_block(dim: int, cap: int) -> int:
+    """Largest legal Pallas block: `cap` when it divides, else the whole dim."""
+    return cap if dim % cap == 0 else dim
 
 
 class ZipServer:
     def __init__(self, params, cfg, store_path: str, *, L: int = 4,
                  pool_sizes: Optional[Dict[str, int]] = None,
                  bandwidth_gbps: Optional[float] = None,
-                 use_pallas_recovery: bool = False):
+                 use_pallas_recovery: bool = False,
+                 prefetch: bool = True, prefetch_width: Optional[int] = None,
+                 ffn_impl: str = "grouped", fused_recovery: bool = False):
+        assert ffn_impl in ("grouped", "loop")
         self.cfg = cfg
+        self.prefetch = prefetch
+        self.prefetch_width = prefetch_width
+        self.ffn_impl = ffn_impl
+        self.fused_recovery = fused_recovery
         self.layers = unstack_layers(params["decoder"], cfg)
         self.globals = {k: v for k, v in params.items() if k != "decoder"}
         store = ExpertStore(store_path, bandwidth_gbps=bandwidth_gbps)
         recover = None
-        if use_pallas_recovery:
+        if fused_recovery:
+            recover = _planes_recover
+        elif use_pallas_recovery:
             from repro.kernels.ops import recover_bf16_host
             recover = recover_bf16_host
         self.engine = ZipMoEEngine(
@@ -56,23 +105,116 @@ class ZipServer:
             if "ffn" in lp and "router" in lp["ffn"]:
                 for name in ("w_gate", "w_up", "w_down"):
                     lp["ffn"].pop(name, None)
+        self._moe_layers = [i for i, lp in enumerate(self.layers)
+                            if "ffn" in lp and "router" in lp["ffn"]]
+        self._pending: Dict[int, Tuple[FetchHandle, frozenset]] = {}
+        self._last_ids: Dict[int, List[int]] = {}
         self.stats: List[Dict] = []
+        self.overlap_stats = {
+            "pred_hits": 0, "pred_misses": 0, "sync_fetches": 0,
+            "fetch_wall_s": 0.0,     # background wall time of prefetched jobs
+            "fetch_wait_s": 0.0,     # of which the decode thread was blocked
+            "blocking_s": 0.0,       # sync / fallback fetch wall time
+        }
+
+    def close(self):
+        self.engine.shutdown()
 
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, length: int):
         caches = unstack_layers(init_cache(self.cfg, batch, length), self.cfg)
         return caches
 
-    def _zip_moe_ffn(self, lp, x, layer_idx: int):
-        """x: [B, 1, d].  Router -> engine fetch -> weighted expert FFN."""
-        cfg = self.cfg
-        ffn = lp["ffn"]
-        from repro.models.moe import route
-        top_p, top_i, _ = route(ffn["router"], x, cfg)       # [B,1,k]
-        ids = sorted({int(e) for e in np.asarray(top_i).reshape(-1)})
+    # ------------------------------------------------------------------
+    # expert acquisition: prefetch consumption + blocking fallback
+    # ------------------------------------------------------------------
+    def _next_moe_layer(self, layer_idx: int) -> Optional[int]:
+        """The MoE layer whose fetch can overlap from `layer_idx` on
+        (wrapping to the first MoE layer of the next decode step)."""
+        if not self._moe_layers:
+            return None
+        for j in self._moe_layers:
+            if j > layer_idx:
+                return j
+        return self._moe_layers[0]
+
+    def _issue_prefetch(self, layer_idx: int, batch: int):
+        """Speculatively enqueue the predicted experts of `layer_idx`.
+
+        Prediction = the layer's previous-step selection (temporal locality)
+        topped up with the FreqTracker's most-frequent experts; a miss falls
+        back to a queue-jumping demand fetch."""
+        if layer_idx is None or layer_idx in self._pending:
+            return
+        width = self.prefetch_width or min(self.cfg.n_experts,
+                                           batch * self.cfg.top_k
+                                           + self.cfg.top_k)
+        pred = list(self._last_ids.get(layer_idx, ()))
+        for e in self.engine.predict_topk(layer_idx, width):
+            if len(pred) >= width:
+                break
+            if e not in pred:
+                pred.append(e)
+        h = self.engine.prefetch_experts(layer_idx, pred, speculative=True)
+        self._pending[layer_idx] = (h, frozenset(pred))
+
+    def _acquire_experts(self, layer_idx: int, ids: List[int]):
+        """Expert weights for `ids`, consuming a pending prefetch if any.
+
+        Returns (weights, io_bytes, blocked_s) where blocked_s is the wall
+        time the decode thread actually spent waiting on reconstruction.
+        """
+        ov = self.overlap_stats
+        pend = self._pending.pop(layer_idx, None)
+        if pend is None:
+            weights, fstats = self.engine.fetch_experts(layer_idx, ids)
+            ov["sync_fetches"] += 1
+            ov["blocking_s"] += fstats.wall
+            return weights, fstats.io_bytes, fstats.wall
+        handle, predicted = pend
+        covered = [e for e in ids if e in predicted]
+        missing = [e for e in ids if e not in predicted]
+        # request the mispredicted experts BEFORE waiting on the speculative
+        # job: the demand fetch jumps the engine's I/O queue and overlaps
+        # with the speculative job's tail
+        h2 = (self.engine.prefetch_experts(layer_idx, missing)
+              if missing else None)
         t0 = time.perf_counter()
-        weights, fstats = self.engine.fetch_experts(layer_idx, ids)
-        fetch_s = time.perf_counter() - t0
+        weights, fstats = handle.result()
+        ov["fetch_wall_s"] += fstats.wall
+        ov["fetch_wait_s"] += handle.wait_s
+        io_bytes = fstats.io_bytes
+        # actual access accounting for everything the prediction served
+        # (the demand fallback records its own accesses at submit)
+        self.engine.note_access(layer_idx, covered)
+        if h2 is not None:
+            ov["pred_misses"] += 1
+            extra, fs2 = h2.result()
+            weights = {**weights, **extra}
+            io_bytes += fs2.io_bytes
+            # the fallback ran concurrently with the speculative tail: only
+            # the time actually blocked in result() is un-hidden
+            ov["fetch_wall_s"] += fs2.wall
+            ov["fetch_wait_s"] += h2.wait_s
+        else:
+            ov["pred_hits"] += 1
+        blocked = time.perf_counter() - t0
+        return weights, io_bytes, blocked
+
+    def overlap_summary(self) -> Dict[str, float]:
+        """Fetch time hidden under compute / total fetch wall time."""
+        ov = self.overlap_stats
+        total = ov["fetch_wall_s"] + ov["blocking_s"]
+        hidden = ov["fetch_wall_s"] - ov["fetch_wait_s"]
+        return {**ov, "total_fetch_s": total, "hidden_fetch_s": hidden,
+                "hidden_frac": hidden / total if total > 0 else 0.0}
+
+    # ------------------------------------------------------------------
+    # expert FFN implementations
+    # ------------------------------------------------------------------
+    def _ffn_loop(self, x, top_p, top_i, weights):
+        """Reference per-batch/per-slot loop (validation oracle)."""
+        cfg = self.cfg
         B = x.shape[0]
         y = jnp.zeros_like(x)
         for b in range(B):
@@ -87,10 +229,120 @@ class ZipServer:
                 acc = acc + top_p[b, 0, slot].astype(x.dtype) * \
                     (h @ jnp.asarray(w["w_down"]))
             y = y.at[b:b + 1].set(acc)
+        return y
+
+    def _gather_by_expert(self, top_p, top_i, ids):
+        """Token->expert assignment tables for the grouped batch.
+
+        Returns (gather [Ea, C] int32 token rows, padded with B;
+                 gates [Ea, C] f32 routing weights).
+        """
+        cfg = self.cfg
+        ti = np.asarray(top_i)
+        tp = np.asarray(top_p, np.float32)
+        B = ti.shape[0]
+        ti = ti.reshape(B, cfg.top_k)
+        tp = tp.reshape(B, cfg.top_k)
+        row = {e: r for r, e in enumerate(ids)}
+        assign: List[List[Tuple[int, float]]] = [[] for _ in ids]
+        for b in range(B):
+            for slot in range(cfg.top_k):
+                assign[row[int(ti[b, slot])]].append((b, float(tp[b, slot])))
+        C = max(1, max(len(a) for a in assign))
+        C = -(-C // 8) * 8                     # MXU sublane alignment
+        gather = np.full((len(ids), C), B, np.int32)   # B = zero-pad token
+        gates = np.zeros((len(ids), C), np.float32)
+        for r, a in enumerate(assign):
+            for c, (b, g) in enumerate(a):
+                gather[r, c] = b
+                gates[r, c] = g
+        return gather, gates
+
+    def _ffn_grouped(self, x, top_p, top_i, weights, ids):
+        """Gather-by-expert batched FFN on the grouped-GEMM kernel."""
+        B, _, d = x.shape
+        gather, gates = self._gather_by_expert(top_p, top_i, ids)
+        xf = x.reshape(B, d)
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+        xg = xpad[gather]                                   # [Ea, C, d]
+
+        def stack(name):
+            return jnp.stack([jnp.asarray(weights[e][name]) for e in ids])
+
+        C = xg.shape[1]
+        gg = lambda a, w: grouped_expert_gemm(
+            a, w, block_c=_pick_block(C, 128), block_d=_pick_block(a.shape[-1], 512),
+            block_f=_pick_block(w.shape[-1], 128))
+        if "w_gate" in weights[ids[0]]:
+            h = jax.nn.silu(gg(xg, stack("w_gate"))) * gg(xg, stack("w_up"))
+        else:
+            h = jax.nn.gelu(gg(xg, stack("w_up")))
+        eout = gg(h, stack("w_down"))                       # [Ea, C, d]
+        comb = jnp.zeros((B + 1, d), jnp.float32).at[
+            jnp.asarray(gather.reshape(-1))].add(
+            jnp.asarray(gates.reshape(-1, 1)) *
+            eout.reshape(-1, d).astype(jnp.float32))
+        return comb[:B].astype(x.dtype).reshape(B, 1, d)
+
+    def _ffn_zip_gemm(self, x, top_p, top_i, weights, ids):
+        """Fused recovery+GEMM: expert weights stay as bit-planes; zip_gemm
+        splices them to bf16 on VREGs right before the MXU."""
+        B, _, d = x.shape
+        gather, gates = self._gather_by_expert(top_p, top_i, ids)
+        xf = x.reshape(B, d).astype(jnp.bfloat16)
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+
+        def zg(a, planes: BitPlanes):
+            D, F = planes.shape
+            return fused_zip_gemm(
+                a, jnp.asarray(planes.exp).reshape(D, F),
+                jnp.asarray(planes.sm).reshape(D, F),
+                block_c=_pick_block(a.shape[0], 128),
+                block_d=_pick_block(D, 512), block_f=_pick_block(F, 128))
+
+        comb = jnp.zeros((B + 1, d), jnp.float32)
+        for r, e in enumerate(ids):
+            w = weights[e]
+            xe = xpad[gather[r]]                            # [C, d]
+            if "w_gate" in w:
+                h = jax.nn.silu(zg(xe, w["w_gate"])) * zg(xe, w["w_up"])
+            else:
+                h = jax.nn.gelu(zg(xe, w["w_up"]))
+            out = zg(h.astype(jnp.bfloat16), w["w_down"])   # [C, d]
+            comb = comb.at[jnp.asarray(gather[r])].add(
+                jnp.asarray(gates[r][:, None]) * out.astype(jnp.float32))
+        return comb[:B].astype(x.dtype).reshape(B, 1, d)
+
+    def _zip_moe_ffn(self, lp, x, layer_idx: int):
+        """x: [B, 1, d].  Router -> engine fetch -> grouped expert FFN."""
+        cfg = self.cfg
+        ffn = lp["ffn"]
+        top_p, top_i, _ = route(ffn["router"], x, cfg)       # [B,1,k]
+        ids = sorted({int(e) for e in np.asarray(top_i).reshape(-1)})
+        B = x.shape[0]
+        self._last_ids[layer_idx] = ids
+        if self.prefetch:
+            # overlap the next MoE layer's reconstruction with this layer's
+            # FFN and the following layers' attention compute
+            self._issue_prefetch(self._next_moe_layer(layer_idx), B)
+        t0 = time.perf_counter()
+        weights, io_bytes, blocked_s = self._acquire_experts(layer_idx, ids)
+        fetch_s = time.perf_counter() - t0
+        if self.prefetch:
+            # steady state: re-issue this layer's prefetch for the NEXT decode
+            # step, so each speculative job gets a full step of compute to
+            # hide under (one-layer lookahead alone is too short a window)
+            self._issue_prefetch(layer_idx, B)
+        if self.fused_recovery:
+            y = self._ffn_zip_gemm(x, top_p, top_i, weights, ids)
+        elif self.ffn_impl == "loop":
+            y = self._ffn_loop(x, top_p, top_i, weights)
+        else:
+            y = self._ffn_grouped(x, top_p, top_i, weights, ids)
         if "shared" in ffn:
             y = y + apply_mlp(ffn["shared"], x, cfg)
         self.stats.append({"layer": layer_idx, "fetch_s": fetch_s,
-                           "io_bytes": fstats.io_bytes,
+                           "blocked_s": blocked_s, "io_bytes": io_bytes,
                            "n_experts": len(ids)})
         return y
 
@@ -142,4 +394,5 @@ class ZipServer:
             t_steps.append(time.perf_counter() - t0)
             out.append(np.asarray(tok))
         return np.concatenate(out, axis=1), caches, {
-            "tpot_s": float(np.mean(t_steps)), "steps_s": t_steps}
+            "tpot_s": float(np.mean(t_steps)), "steps_s": t_steps,
+            "overlap": self.overlap_summary()}

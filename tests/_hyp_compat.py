@@ -1,0 +1,41 @@
+"""Collection-safe hypothesis import for the property-test modules.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt) that some
+offline CI hosts cannot install.  Importing it unguarded makes the whole
+module fail *collection* with ModuleNotFoundError, taking the fixed-example
+tests in the same file down with it.  Modules instead do::
+
+    from _hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is present these are the real objects.  When absent, ``given``
+degrades to a skip marker (so every property test skips cleanly and the
+deterministic fallback tests still run) and ``st``/``settings`` are inert
+stand-ins that keep module-level strategy expressions importable.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # offline host: skip, don't error
+    HAVE_HYPOTHESIS = False
+
+    class _StubStrategies:
+        """Accepts any strategy expression; every strategy is None."""
+
+        @staticmethod
+        def composite(fn):
+            return lambda *a, **k: None
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StubStrategies()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda fn: fn

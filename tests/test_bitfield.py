@@ -1,7 +1,8 @@
 """Property tests for the BF16 bit-field decomposition (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp_compat import given, settings, st
 
 from repro.core import bitfield
 
@@ -43,6 +44,33 @@ def test_shard_bounds_cover(n, k):
     assert bounds[0][0] == 0 and bounds[-1][1] == n
     for (a0, b0), (a1, b1) in zip(bounds, bounds[1:]):
         assert b0 == a1 and a0 < b0 or (a0 == b0)
+
+
+def test_all_bit_patterns_exhaustive():
+    """Fixed-example fallback: every u16 pattern at once (no hypothesis)."""
+    arr = np.arange(2 ** 16, dtype=np.uint16).view(BF16)
+    exp, sm = bitfield.decompose_np(arr)
+    back = bitfield.reconstruct_np(exp, sm, arr.shape)
+    assert np.array_equal(arr.view(np.uint16), back.view(np.uint16))
+
+
+def test_roundtrip_special_values_fixed():
+    specials = [0.0, -0.0, 1.0, -1.0, 1e-40, -1e-40, 3.4e38, float("inf"),
+                float("-inf"), float("nan"), 2.0 ** -126, 0.02, -65504.0]
+    arr = _to_bf16(specials)
+    exp, sm = bitfield.decompose_np(arr)
+    back = bitfield.reconstruct_np(exp, sm, arr.shape)
+    assert np.array_equal(arr.view(np.uint16), back.view(np.uint16))
+
+
+def test_shard_bounds_cover_fixed():
+    for n in (1, 2, 7, 8, 100, 1000):
+        for k in (1, 2, 3, 8):
+            bounds = bitfield.shard_bounds(n, k)
+            assert len(bounds) == k
+            assert bounds[0][0] == 0 and bounds[-1][1] == n
+            for (a0, b0), (a1, b1) in zip(bounds, bounds[1:]):
+                assert b0 == a1 and a0 < b0 or (a0 == b0)
 
 
 def test_entropy_of_gaussian_weights(rng):

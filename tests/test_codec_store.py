@@ -1,7 +1,8 @@
 """Codec + expert-store tests: lossless roundtrip, ratios, range reads."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp_compat import given, settings, st
 
 import jax
 
@@ -17,6 +18,18 @@ from repro.models import init_params
 def test_codec_roundtrip(name, data):
     c = get_codec(name)
     assert c.decompress(c.compress(data), len(data)) == data
+
+
+@pytest.mark.parametrize("name", sorted(_REGISTRY))
+def test_codec_roundtrip_fixed(name):
+    """Fixed-example fallback for the hypothesis roundtrip property."""
+    c = get_codec(name)
+    rng = np.random.default_rng(0)
+    payloads = [b"", b"\x00", b"a" * 4096,
+                bytes(rng.integers(0, 256, 2048, dtype=np.uint8)),
+                bytes(rng.integers(0, 8, 4096, dtype=np.uint8))]
+    for data in payloads:
+        assert c.decompress(c.compress(data), len(data)) == data
 
 
 def test_codec_threadsafe():

@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from _hyp_compat import given, settings, st
 
 from repro.core import bitfield
 from repro.kernels.moe_gemm import grouped_gemm, zip_gemm
@@ -48,6 +49,20 @@ def test_recover_kernel_bit_patterns(u16):
     out = recover_bf16(jnp.asarray(e), jnp.asarray(s), (128,))
     assert np.array_equal(np.asarray(out).view(np.uint16),
                           arr.view(np.uint16))
+
+
+def test_recover_kernel_bit_patterns_fixed():
+    """Fixed-example fallback: special/boundary u16 patterns (no hypothesis)."""
+    import ml_dtypes
+    # canonical-payload NaNs only: XLA canonicalizes NaN payloads (e.g.
+    # 0xFFFF -> 0xFFC0) in the bf16 bitcast, so arbitrary payloads can't
+    # survive the device roundtrip bit-exactly
+    patterns = [0x0000, 0x8000, 0x0001, 0x007F, 0x0080, 0x3F80, 0xBF80,
+                0x7F80, 0xFF80, 0x7FC0, 0xFFC0, 0x7F7F, 0x0100, 0x8001]
+    arr = np.asarray(patterns * 16, np.uint16).view(ml_dtypes.bfloat16)
+    e, s = bitfield.decompose_np(arr)
+    out = recover_bf16(jnp.asarray(e), jnp.asarray(s), arr.shape)
+    assert np.array_equal(np.asarray(out).view(np.uint16), arr.view(np.uint16))
 
 
 def test_recover_host_hook(rng):

@@ -1,0 +1,169 @@
+"""Overlap-aware serving tests: prefetched decode vs synchronous decode,
+grouped-GEMM expert FFN vs the per-expert loop, and continuous batching
+(BatchServer) driving the compressed-store path (ZipServer) end-to-end."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.engine import ZipMoEEngine
+from repro.core.store import ExpertStore, build_store
+from repro.models import init_params
+from repro.serving.server import BatchServer
+from repro.serving.zipserve import ZipServer
+
+POOLS = {"F": 2, "C": 2, "S": 2, "E": 2}
+
+
+@pytest.fixture(scope="module")
+def moe2_setup(tmp_path_factory):
+    """2-layer MoE config + compressed store (the acceptance-criteria config)."""
+    cfg = get_smoke_config("qwen2-moe-a2.7b", n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store2"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+def _decode_logits(zs, cfg, steps=5, B=2, S=12, seed=0):
+    """Greedy-decode `steps` tokens; returns stacked f32 logits."""
+    tokens = jnp.asarray(
+        np.random.default_rng(seed).integers(0, cfg.vocab_size, (B, 1)),
+        jnp.int32)
+    caches = zs.init_cache(B, S + steps)
+    out = []
+    tok = tokens
+    for i in range(steps):
+        lg, caches = zs.decode_step(tok, caches, S - 1 + i)
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(lg, np.float32))
+    return np.stack(out)
+
+
+def test_engine_prefetch_future_bitexact(moe2_setup):
+    """prefetch_experts() must reconstruct exactly what fetch_experts() does."""
+    cfg, params, d = moe2_setup
+    store = ExpertStore(d)
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts, n_layers=cfg.n_layers,
+                       L=3, pool_sizes={"F": 0, "C": 0, "S": 0, "E": 0})
+    try:
+        ref, _ = eng.fetch_experts(0, [0, 1, 2, 3])
+        h = eng.prefetch_experts(0, [0, 1, 2, 3], speculative=True)
+        out, stats = h.result()
+        for e in ref:
+            for name in ref[e]:
+                assert np.array_equal(
+                    np.asarray(ref[e][name], np.float32),
+                    np.asarray(out[e][name], np.float32)), (e, name)
+        assert stats.wall > 0
+    finally:
+        eng.shutdown()
+
+
+def test_prefetched_decode_identical_to_sync(moe2_setup):
+    """Overlapped prefetch is a pure latency optimisation: logits bit-equal."""
+    cfg, params, d = moe2_setup
+    zs_sync = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=False)
+    zs_pre = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=True)
+    try:
+        ref = _decode_logits(zs_sync, cfg)
+        out = _decode_logits(zs_pre, cfg)
+        assert np.array_equal(ref, out)
+        ov = zs_pre.overlap_summary()
+        # predictions were actually issued and consumed
+        assert ov["pred_hits"] + ov["pred_misses"] > 0
+        assert zs_sync.overlap_summary()["fetch_wall_s"] == 0.0
+    finally:
+        zs_sync.close()
+        zs_pre.close()
+
+
+def test_grouped_ffn_matches_loop(moe2_setup):
+    """Gather-by-expert grouped GEMM == per-batch/per-slot loop (dtype tol)."""
+    cfg, params, d = moe2_setup
+    zs_loop = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS,
+                        prefetch=False, ffn_impl="loop")
+    zs_grp = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS,
+                       prefetch=False, ffn_impl="grouped")
+    try:
+        ref = _decode_logits(zs_loop, cfg)
+        out = _decode_logits(zs_grp, cfg)
+        rel = np.max(np.abs(ref - out)) / (np.max(np.abs(ref)) + 1e-9)
+        assert rel < 3e-2, rel                  # bf16 compute-order noise only
+        assert np.array_equal(np.argmax(ref, -1), np.argmax(out, -1))
+    finally:
+        zs_loop.close()
+        zs_grp.close()
+
+
+def test_fused_zip_gemm_matches_loop(moe2_setup):
+    """zip_gemm fused recovery+GEMM path stays within dtype tolerance."""
+    cfg, params, d = moe2_setup
+    zs_loop = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS,
+                        prefetch=False, ffn_impl="loop")
+    zs_fus = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS,
+                       prefetch=False, fused_recovery=True)
+    try:
+        ref = _decode_logits(zs_loop, cfg, steps=3)
+        out = _decode_logits(zs_fus, cfg, steps=3)
+        rel = np.max(np.abs(ref - out)) / (np.max(np.abs(ref)) + 1e-9)
+        assert rel < 3e-2, rel
+        assert np.array_equal(np.argmax(ref, -1), np.argmax(out, -1))
+    finally:
+        zs_loop.close()
+        zs_fus.close()
+
+
+def test_batch_server_over_zipserver(moe2_setup):
+    """Continuous batching drives the compressed store end-to-end: a
+    mixed-length workload completes with per-request outputs matching
+    unbatched ZipMoE decoding, plus TTFT/TPOT/overlap metrics."""
+    cfg, params, d = moe2_setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 4, 6, 6, 4)]
+    zs = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=True)
+    srv = BatchServer(None, cfg, max_batch=2, max_len=32, zip_server=zs)
+    try:
+        rids = [srv.submit(p, max_new_tokens=4) for p in prompts]
+        done = srv.run()
+        assert len(done) == len(prompts)
+        by_rid = {r.rid: r for r in done}
+        for rid, p in zip(rids, prompts):
+            r = by_rid[rid]
+            assert len(r.output) == 4
+            assert r.ttft is not None and r.done is not None
+            assert r.tpot_s is not None and r.tpot_s > 0
+        m = srv.metrics()
+        assert m["n_requests"] == len(prompts)
+        assert m["mean_ttft_s"] > 0 and m["mean_tpot_s"] > 0
+        assert "overlap_hidden_frac" in m
+
+        # per-request correctness vs the unbatched compressed-store decode
+        zs1 = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=False)
+        try:
+            for rid, p in zip(rids[:3], prompts[:3]):
+                S = len(p)
+                caches = zs1.init_cache(1, S + 4)
+                lg = None
+                for i in range(S):
+                    lg, caches = zs1.decode_step(
+                        jnp.asarray(p[None, i:i + 1]), caches, i)
+                tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                out, _, _ = zs1.generate(tok, caches, S, max_new_tokens=3)
+                ref = [int(tok[0, 0])] + [int(t) for t in out[0]]
+                assert ref == by_rid[rid].output, rid
+        finally:
+            zs1.close()
+    finally:
+        zs.close()
+
+
+def test_submit_rejects_and_clamps():
+    cfg = get_smoke_config("qwen2-moe-a2.7b", n_layers=2)
+    srv = BatchServer(None, cfg, max_len=16, zip_server=object())
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros(16, np.int32))      # no room for one new token
+    srv.submit(np.zeros(10, np.int32), max_new_tokens=100)
+    assert srv.queue[-1].max_new_tokens == 6    # clamped to max_len - S

@@ -2,7 +2,8 @@
 makespan model (Alg 3), grid planning (Alg 4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp_compat import given, settings, st
 
 from repro.core.planner import (PlanConsts, esp, estimate_makespan,
                                 inclusion_from_q, ipf_selection_probs,
@@ -33,6 +34,29 @@ def test_poisson_binomial_is_distribution(qs):
     assert abs(phi.sum() - 1.0) < 1e-9
     assert (phi >= -1e-12).all()
     # mean matches sum of probabilities
+    mean = (np.arange(len(phi)) * phi).sum()
+    assert abs(mean - sum(qs)) < 1e-8
+
+
+@pytest.mark.parametrize("n,k,seed", [(4, 1, 0), (16, 4, 1), (64, 6, 2),
+                                      (32, 2, 7)])
+def test_ipf_recovers_inclusion_probs_fixed(n, k, seed):
+    """Fixed-example fallback for the hypothesis IPF property."""
+    rng = np.random.default_rng(seed)
+    raw = np.sort(rng.random(n))[::-1] + 1e-3
+    f = project_feasible(raw * (k / raw.sum()), k)
+    assert abs(f.sum() - k) < 1e-6 and (f < 1).all()
+    q = ipf_selection_probs(f, k)
+    back = inclusion_from_q(q, k)
+    assert np.max(np.abs(back - f)) < 1e-4
+
+
+@pytest.mark.parametrize("qs", [[0.5], [0.001, 0.999], [0.25] * 12,
+                                list(np.linspace(0.01, 0.99, 30))])
+def test_poisson_binomial_is_distribution_fixed(qs):
+    phi = poisson_binomial(qs)
+    assert abs(phi.sum() - 1.0) < 1e-9
+    assert (phi >= -1e-12).all()
     mean = (np.arange(len(phi)) * phi).sum()
     assert abs(mean - sum(qs)) < 1e-8
 

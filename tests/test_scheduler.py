@@ -3,7 +3,8 @@ brute-force comparison (hypothesis property tests)."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp_compat import given, settings, st
 
 from repro.core.scheduler import (brute_force_best, build_blocks,
                                   compute_dominant, naive_schedule, schedule,
@@ -69,6 +70,63 @@ def test_close_to_bruteforce(inst):
     _, tl = schedule(tasks, L)
     best = brute_force_best(tasks, L)
     assert tl.makespan <= (3 - 1 / L) * best + 1e-9
+
+
+def _fixed_instances(n_instances=40, max_n=9, seed=0):
+    """Deterministic stand-ins for the hypothesis `instances()` strategy."""
+    r = random.Random(seed)
+    out = []
+    for _ in range(n_instances):
+        n = r.randint(1, max_n)
+        L = r.choice([2, 3, 4, 6])
+        K = r.choice([2, 4])
+        states = [r.choice(STATES) for _ in range(n)]
+        ps = [r.uniform(0.01, 2.0) for _ in range(n)]
+        tasks = make_tasks(list(range(n)), states, ps,
+                           n_tensors=r.randint(1, 3), u=r.uniform(0.1, 2.0),
+                           rho=r.uniform(0.1, 0.8), c=r.uniform(0.01, 1.0),
+                           K=K)
+        out.append((tasks, L))
+    return out
+
+
+def test_theorem_3_1_bound_fixed():
+    """Fixed-example fallback for the hypothesis Theorem 3.1 property."""
+    for tasks, L in _fixed_instances(60):
+        _, tl = schedule(tasks, L)
+        lb = lower_bound(tasks, L)
+        assert tl.makespan <= (3 - 1 / L) * lb + 1e-9
+
+
+def test_all_tasks_scheduled_once_fixed():
+    for tasks, L in _fixed_instances(30, seed=1):
+        blocks = build_blocks(tasks, L)
+        uids = [t.uid for b in blocks for t in b]
+        live = [t.uid for t in tasks if t.state is not CState.F]
+        assert sorted(uids) == sorted(live)
+
+
+def _fixed_tiny_instances(n_instances=8, seed=2):
+    """Deterministic stand-ins for `tiny_instances()` (brute-force sized)."""
+    r = random.Random(seed)
+    out = []
+    for _ in range(n_instances):
+        n = r.randint(2, 5)
+        L = r.choice([2, 3])
+        states = [r.choice(STATES) for _ in range(n)]
+        ps = [r.uniform(0.01, 1.0) for _ in range(n)]
+        tasks = make_tasks(list(range(n)), states, ps, n_tensors=1,
+                           u=r.uniform(0.2, 1.5), rho=r.uniform(0.2, 0.6),
+                           c=r.uniform(0.02, 0.6), K=2)
+        out.append((tasks, L))
+    return out
+
+
+def test_close_to_bruteforce_fixed():
+    for tasks, L in _fixed_tiny_instances(8, seed=2):
+        _, tl = schedule(tasks, L)
+        best = brute_force_best(tasks, L)
+        assert tl.makespan <= (3 - 1 / L) * best + 1e-9
 
 
 def test_f_state_tasks_free():
