@@ -55,12 +55,11 @@ print(f"zipmoe tokens:   {zip_tokens.tolist()}  "
 dec = jax.jit(lambda p, b, c, pos: decode_step(p, cfg, b, c, pos))
 cache = init_cache(cfg, B, S + NEW)
 stream = np.concatenate([np.asarray(tok0), zip_tokens[:, :-1]], axis=1)
-rels, agree = [], 0
+agree = 0
 for i in range(NEW):
     lg, cache = dec(params, {"tokens": jnp.asarray(stream[:, i:i+1])},
                     cache, jnp.int32(S + i))
     ref = np.asarray(lg[:, -1], np.float32)
-    zl = server.step_logits[i] if hasattr(server, "step_logits") else None
     pred = np.argmax(ref, -1)
     agree += int(np.sum(pred == zip_tokens[:, i]))
 rels = agree / (B * NEW)

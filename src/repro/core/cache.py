@@ -8,11 +8,23 @@ Pools in hierarchy order F ≺ C ≺ S ≺ E:
 
 Dispatch: an expert with observed rank r goes to the first pool i whose
 cumulative-capacity threshold ``τ_i = Σ_{j⪯i} S_j + δ`` exceeds r.  Overflow
-evicts the pool's least-frequently-activated resident.  Experts beyond every
-threshold are evicted right after execution.
+evicts the pool's least-frequently-activated *unpinned* resident.  Experts
+beyond every threshold are evicted right after execution.
+
+Live-engine extensions (used by core/engine.py):
+
+* ``pin``/``unpin`` — experts selected in the current decode step are pinned
+  while their fetch is in flight, so overflow churn from admitting one
+  selected expert can never evict another one mid-step.
+* residency-state transition counters (``transitions``) and eviction counts,
+  surfaced by ``summary()`` next to per-pool hit rates.
 
 ``FlatCache`` provides the FIFO / LRU / Marking baselines for the Fig. 10
-ablation (single full-tensor pool, classic eviction policies).
+ablation (single full-tensor pool, classic eviction policies, simulator
+cost model).  ``LiveFlatCache`` is its live-engine counterpart: the same
+classic policies behind the HierarchicalCache interface, holding fully
+reconstructed tensors only — the "flat reconstructed-tensor map" baseline
+the Fig. 10 live ablation compares against.
 """
 from __future__ import annotations
 
@@ -24,6 +36,27 @@ from repro.core.states import CState
 from repro.core.workload import FreqTracker
 
 POOL_ORDER = ("F", "C", "S", "E")
+
+
+def pool_summary(mode: str, hits, misses: int, occupancy, capacity,
+                 transitions, evictions: int, pinned: int) -> Dict[str, object]:
+    """Shared §3.4 telemetry schema of HierarchicalCache and LiveFlatCache
+    (consumed and Counter-merged by ``engine.cache_summary``)."""
+    n_hits = sum(hits.values())
+    acc = n_hits + misses
+    return {
+        "mode": mode,
+        "hits": dict(hits),
+        "misses": misses,
+        "accesses": acc,
+        "hit_rate": n_hits / acc if acc else 0.0,
+        "occupancy": dict(occupancy),
+        "capacity": dict(capacity),
+        "transitions": {f"{a}->{b}": n
+                        for (a, b), n in sorted(transitions.items())},
+        "evictions": evictions,
+        "pinned": pinned,
+    }
 
 # pool residency -> compression state of an expert
 def residency_state(in_f: bool, has_e: bool, has_sm: bool) -> CState:
@@ -44,8 +77,52 @@ class PoolEntry:
     payload: object = None          # engine attaches real buffers here
 
 
-class HierarchicalCache:
+class _LiveCacheTelemetry:
+    """Shared hit/transition/pin bookkeeping of the live caches
+    (HierarchicalCache and LiveFlatCache report the same schema and must
+    never diverge — see pool_summary)."""
+
+    def _init_telemetry(self):
+        self.hits = collections.Counter()
+        self.misses = 0
+        # refcounted pins: an expert can be pinned independently by the step
+        # that selected it AND by the submit_step fetching it; membership
+        # (`e in pinned`) means "pinned by at least one owner"
+        self.pinned = collections.Counter()
+        self.transitions = collections.Counter()   # (from_state, to_state)
+        self.evictions = 0                         # residents dropped to M
+
+    def pin(self, experts: Sequence[int]):
+        """Protect `experts` from eviction until a matching :meth:`unpin`.
+        Refcounted: each pin() call needs its own unpin(), so a step's pin
+        survives a fetch job independently releasing its own.  The engine
+        pins a step's selected experts while their fetch is in flight so
+        admitting one of them can never churn another out mid-step."""
+        for e in experts:
+            self.pinned[int(e)] += 1
+
+    def unpin(self, experts: Sequence[int]):
+        for e in experts:
+            k = int(e)
+            n = self.pinned.get(k, 0) - 1
+            if n > 0:
+                self.pinned[k] = n
+            else:
+                self.pinned.pop(k, None)
+
+    def reset_stats(self):
+        """Zero the telemetry counters (hit/miss/transition/eviction) without
+        touching residency — e.g. to report steady state after a warmup."""
+        self.hits.clear()
+        self.misses = 0
+        self.transitions.clear()
+        self.evictions = 0
+
+
+class HierarchicalCache(_LiveCacheTelemetry):
     """Bookkeeping for one sparse layer's expert cache."""
+
+    mode = "hier"
 
     def __init__(self, capacities: Dict[str, int], tracker: FreqTracker,
                  delta: int = 1):
@@ -53,8 +130,14 @@ class HierarchicalCache:
         self.tracker = tracker
         self.delta = delta
         self.pools: Dict[str, Dict[int, PoolEntry]] = {p: {} for p in POOL_ORDER}
-        self.hits = collections.Counter()
-        self.misses = 0
+        self._init_telemetry()
+        # optional live-engine hook: (payload, target_pool) -> payload|None.
+        # Downgrades a demoted resident's payload to the bytes the target
+        # pool can actually serve; None means nothing real backs the pool and
+        # the entry is dropped rather than kept as a byte-less placeholder
+        # (which would count as a hit but cost a full fetch).  Unset in the
+        # simulator, where payloads are not used and membership is the state.
+        self.demote_payload = None
 
     # -- state queries --------------------------------------------------------
     def residency(self, expert: int) -> CState:
@@ -79,12 +162,22 @@ class HierarchicalCache:
         return None
 
     # -- mutation ---------------------------------------------------------------
+    def _fit_payload(self, payload, pool: str) -> Tuple[bool, object]:
+        """(ok, fitted): downgrade `payload` to what `pool` can back via the
+        live-engine hook.  No hook or no payload (simulator / fresh admit,
+        whose payload is attached post-placement): pass through untouched."""
+        if payload is None or self.demote_payload is None:
+            return True, payload
+        fitted = self.demote_payload(payload, pool)
+        return fitted is not None, fitted
+
     def _place(self, expert: int, start_pool: str, payload=None,
                depth: int = 0) -> Optional[str]:
         """Insert `expert` at `start_pool` or the first lower pool that admits
-        its rank.  On overflow the *least-frequent* of {residents ∪ incoming}
-        loses and cascades down — the δ-tolerance margin can therefore never
-        churn a hot expert out of the cache entirely."""
+        its rank.  On overflow the *least-frequent unpinned* of
+        {residents ∪ incoming} loses and cascades down — the δ-tolerance
+        margin can therefore never churn a hot expert out of the cache
+        entirely, and a pinned (in-flight) resident never loses its slot."""
         if depth > len(POOL_ORDER) + 2:
             return None
         taus = self.thresholds()
@@ -95,31 +188,59 @@ class HierarchicalCache:
                 started = True
             if not started or self.cap[p] <= 0 or r >= taus[p]:
                 continue
+            ok, pl = self._fit_payload(payload, p)
+            if not ok:
+                continue           # nothing real to back this pool: cascade
             if len(self.pools[p]) < self.cap[p]:
-                self.pools[p][expert] = PoolEntry(expert, payload)
+                self.pools[p][expert] = PoolEntry(expert, pl)
                 return p
-            victim = self.tracker.least_frequent(list(self.pools[p]))
+            candidates = [e for e in self.pools[p] if e not in self.pinned]
+            if not candidates:
+                continue               # every resident pinned: try next pool
+            victim = self.tracker.least_frequent(candidates)
             if self.tracker.counts[victim] < self.tracker.counts[expert]:
                 ent = self.pools[p].pop(victim)
-                self.pools[p][expert] = PoolEntry(expert, payload)
-                # demote the displaced resident to the next pool down
+                self.pools[p][expert] = PoolEntry(expert, pl)
+                # demote the displaced resident (with its bytes) down a pool
                 nxt = POOL_ORDER.index(p) + 1
+                placed = None
                 if nxt < len(POOL_ORDER):
-                    self._place(victim, POOL_ORDER[nxt], None, depth + 1)
+                    placed = self._place(victim, POOL_ORDER[nxt], ent.payload,
+                                         depth + 1)
+                self.transitions[(p, placed or "M")] += 1
+                if placed is None:
+                    self.evictions += 1
                 return p
             # incoming loses: try the next pool down for it
         return None
 
     def admit(self, expert: int, payload=None) -> Optional[str]:
         """Place expert per dispatch rule (called after its execution)."""
+        prev = self.residency(expert)
         target = self.target_pool(expert)
         # drop from any other pool (state change / re-placement)
+        prev_pool, prev_ent = None, None
         for p in POOL_ORDER:
             if expert in self.pools[p]:
-                del self.pools[p][expert]
-        if target is None:
-            return None
-        return self._place(expert, target, payload)
+                prev_pool, prev_ent = p, self.pools[p].pop(expert)
+        placed = self._place(expert, target, payload) if target else None
+        if placed is None and expert in self.pinned and prev_pool is not None:
+            # a pinned (in-flight) resident must never lose residency to its
+            # own re-admission — e.g. when every slot below its new rank is
+            # held by pinned step-mates.  Restore it (with the fresher
+            # payload when it fits the pool; _place mutates nothing on
+            # failure, so its old slot is still free).
+            ok, pl = self._fit_payload(payload, prev_pool)
+            if not (ok and pl is not None):
+                pl = prev_ent.payload
+            self.pools[prev_pool][expert] = PoolEntry(expert, pl)
+            placed = prev_pool
+        new = self.residency(expert)
+        if prev is not new:
+            self.transitions[(prev.name, new.name)] += 1
+            if new is CState.M and prev is not CState.M:
+                self.evictions += 1
+        return placed
 
     def record_access(self, experts: Sequence[int]) -> Dict[int, CState]:
         """Look up states for a step's selected experts + update stats."""
@@ -137,10 +258,41 @@ class HierarchicalCache:
     def occupancy(self) -> Dict[str, int]:
         return {p: len(self.pools[p]) for p in POOL_ORDER}
 
+    def summary(self) -> Dict[str, object]:
+        """Per-pool hit rates + residency-transition counts (§3.4 telemetry)."""
+        return pool_summary(self.mode, self.hits, self.misses,
+                            self.occupancy(), self.cap, self.transitions,
+                            self.evictions, len(self.pinned))
+
 
 # ----------------------------------------------------------------------------
 # classic-eviction baselines (Fig. 10 ablation)
 # ----------------------------------------------------------------------------
+def select_victim(order: Sequence[int], policy: str, freq, marks: Set[int],
+                  rng, exclude=frozenset()) -> Optional[int]:
+    """Shared fifo/lru/lfu/marking victim selection (FlatCache and
+    LiveFlatCache use the same policies; only the exclusion set differs).
+
+    `order` is the entries' insertion/recency order, `freq` maps
+    expert -> activation count.  Returns None when every candidate is
+    excluded (e.g. pinned)."""
+    cand = [e for e in order if e not in exclude]
+    if not cand:
+        return None
+    if policy in ("fifo", "lru"):
+        return cand[0]                 # insertion / recency order head
+    if policy == "lfu":
+        return min(cand, key=freq)
+    # marking: evict a random unmarked page; new phase if all marked
+    unmarked = [e for e in cand if e not in marks]
+    if not unmarked:
+        marks.clear()
+        unmarked = cand
+    victim = rng.choice(unmarked)
+    marks.discard(victim)
+    return victim
+
+
 class FlatCache:
     """Single full-tensor pool with FIFO / LRU / Marking / LFU eviction."""
 
@@ -180,16 +332,102 @@ class FlatCache:
         return False
 
     def _evict(self):
-        if self.policy == "fifo" or self.policy == "lru":
-            self.entries.popitem(last=False)
-        elif self.policy == "lfu":
-            victim = min(self.entries, key=lambda e: self.freq[e])
-            del self.entries[victim]
-        else:  # marking: evict a random unmarked page; new phase if all marked
-            unmarked = [e for e in self.entries if e not in self.marks]
-            if not unmarked:
-                self.marks.clear()
-                unmarked = list(self.entries)
-            victim = self._rng.choice(unmarked)
-            del self.entries[victim]
-            self.marks.discard(victim)
+        victim = select_victim(list(self.entries), self.policy,
+                               lambda e: self.freq[e], self.marks, self._rng)
+        del self.entries[victim]
+
+
+# ----------------------------------------------------------------------------
+# live flat-cache baseline (engine-compatible interface)
+# ----------------------------------------------------------------------------
+class LiveFlatCache(_LiveCacheTelemetry):
+    """Single full-tensor pool behind the HierarchicalCache interface.
+
+    The engine's ``cache_mode="flat"`` baseline: experts are either fully
+    reconstructed in memory (state F) or absent (state M) — no intermediate
+    compressed residency.  Eviction is one of the classic policies (fifo /
+    lru / lfu / marking); pinned (in-flight) experts are never victims.
+
+    The shared ``FreqTracker`` is still fed on access so the serving layer's
+    prefetch prediction (``predict_topk``) works identically in both cache
+    modes — only the *dispatch/eviction* policy differs, which is exactly
+    what the Fig. 10 live ablation isolates.
+    """
+
+    def __init__(self, capacity: int, tracker: FreqTracker,
+                 policy: str = "lru"):
+        assert policy in ("fifo", "lru", "marking", "lfu")
+        self.capacity = int(capacity)
+        self.cap = {"F": self.capacity, "C": 0, "S": 0, "E": 0}
+        self.mode = f"flat-{policy}"
+        self.policy = policy
+        self.tracker = tracker
+        self.entries: "collections.OrderedDict[int, PoolEntry]" = \
+            collections.OrderedDict()
+        # engine iterates .pools in hierarchy order; only F is ever populated
+        self.pools: Dict[str, Dict[int, PoolEntry]] = {
+            "F": self.entries, "C": {}, "S": {}, "E": {}}
+        self.marks: Set[int] = set()
+        self._init_telemetry()
+        import random
+        self._rng = random.Random(0)
+
+    # -- state queries --------------------------------------------------------
+    def residency(self, expert: int) -> CState:
+        return CState.F if expert in self.entries else CState.M
+
+    # -- access / admission ---------------------------------------------------
+    def record_access(self, experts: Sequence[int]) -> Dict[int, CState]:
+        """Probe-only lookup: stats + recency/marks/tracker updates, no
+        insertion (admission happens post-reconstruction via :meth:`admit`)."""
+        self.tracker.record(experts)
+        out = {}
+        for e in experts:
+            st = self.residency(e)
+            out[e] = st
+            if st is CState.F:
+                self.hits["F"] += 1
+                if self.policy == "lru":
+                    self.entries.move_to_end(e)
+                if self.policy == "marking":
+                    self.marks.add(e)
+            else:
+                self.misses += 1
+        return out
+
+    def admit(self, expert: int, payload=None) -> Optional[str]:
+        """Insert (classic caches always admit on miss), evicting an unpinned
+        victim per policy when full."""
+        if expert in self.entries:
+            if payload is not None:
+                self.entries[expert].payload = payload
+            return "F"
+        if self.capacity <= 0:
+            return None
+        while len(self.entries) >= self.capacity:
+            if not self._evict():
+                return None            # every resident pinned: don't admit
+        self.entries[expert] = PoolEntry(expert, payload)
+        if self.policy == "marking":
+            self.marks.add(expert)
+        self.transitions[("M", "F")] += 1
+        return "F"
+
+    def _evict(self) -> bool:
+        victim = select_victim(list(self.entries), self.policy,
+                               lambda e: self.tracker.counts[e], self.marks,
+                               self._rng, exclude=self.pinned)
+        if victim is None:
+            return False
+        del self.entries[victim]
+        self.transitions[("F", "M")] += 1
+        self.evictions += 1
+        return True
+
+    def occupancy(self) -> Dict[str, int]:
+        return {"F": len(self.entries), "C": 0, "S": 0, "E": 0}
+
+    def summary(self) -> Dict[str, object]:
+        return pool_summary(self.mode, self.hits, self.misses,
+                            self.occupancy(), self.cap, self.transitions,
+                            self.evictions, len(self.pinned))

@@ -10,20 +10,40 @@ The engine executes the *same* block schedule that Algorithm 1 constructs:
 the I/O thread walks chunks in block order (E-chunks before SM-chunks), and
 workers take the highest-priority ready decompression op (work-conserving).
 
-Fetches are asynchronous: :meth:`prefetch_experts` enqueues a fetch job on
-the persistent pool and returns a :class:`FetchHandle` future immediately, so
-the serving layer can overlap the next MoE layer's expert reconstruction with
-the current layer's attention/FFN compute.  :meth:`fetch_experts` is the
-blocking wrapper (``prefetch_experts(...).result()``).  Speculative prefetch
-jobs (router predictions seeded from ``FreqTracker`` history) skip the
-frequency/hit accounting so mispredictions don't pollute the workload model;
-the serving layer records the *actual* access via :meth:`note_access`.
+Fetches are asynchronous: :meth:`submit_step` is the per-decode-step entry
+point of the §3.3/§3.4 co-design — it takes the router's *selected* experts
+(demand) together with the *predicted* experts for the layer's next step
+(speculative) and builds ONE Algorithm-1 block list over the union, so the
+I/O thread and the workers drain the whole step's reconstruction work in
+block priority order: demand tensors first (their blocks sort ahead via the
+expert-execution-time priority p), predicted tensors behind them, E-chunks
+before SM-chunks within each block.  The returned :class:`FetchHandle` is
+two-phase: ``result()`` blocks only until the demand subset is recovered
+(the decode step can run its FFN), while the speculative tail keeps
+reconstructing in the background and is collected next step via
+``spec_result()``.  :meth:`prefetch_experts` / :meth:`fetch_experts` are the
+single-class wrappers (all-demand or all-speculative jobs).
+
+Demand jobs are *urgent*: they jump the I/O queue ahead of speculative work,
+and a running job yields to newly-arrived urgent jobs at block boundaries
+once its own demand I/O is done.  Speculative ids skip the frequency/hit
+accounting so mispredictions don't pollute the workload model; the serving
+layer records the *actual* access via :meth:`note_access`.  A step's
+selected experts are **pinned** in their layer cache for the life of the
+fetch: admitting one selected expert can never evict another one mid-step
+(see HierarchicalCache.pin).
 
 Payload semantics per cache pool:
   F : reconstructed bf16 ndarrays (zero work on hit)
   C : raw SM bytes + compressed E bytes (decompress + recover on hit)
   S : raw SM bytes (E-chunk reads + decompress + recover on hit)
   E : compressed E bytes (SM read + decompress + recover on hit)
+
+``cache_mode="flat"`` swaps every layer's hierarchical cache for a
+:class:`~repro.core.cache.LiveFlatCache` (full tensors only, classic
+eviction) — the live baseline the Fig. 10 ablation compares against; the
+reconstruction pipeline and block scheduling are identical, so flat and
+hierarchical serving produce bit-identical outputs.
 """
 from __future__ import annotations
 
@@ -38,7 +58,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import bitfield
-from repro.core.cache import HierarchicalCache, PoolEntry
+from repro.core.cache import (HierarchicalCache, LiveFlatCache, PoolEntry,
+                              pool_summary)
 from repro.core.scheduler import build_blocks
 from repro.core.states import CState, Task
 from repro.core.store import ExpertStore
@@ -62,22 +83,30 @@ class FetchStats:
 
 
 class _FetchJob:
-    """All shared state of one in-flight fetch (owned by the engine pool)."""
+    """All shared state of one in-flight fetch (owned by the engine pool).
+
+    A job covers one layer's *demand* experts (the router's current
+    selection, waited on by ``FetchHandle.result()``) plus optional
+    *speculative* experts (next-step predictions, collected later via
+    ``spec_result()``) under a single Algorithm-1 block schedule."""
 
     def __init__(self, seq: int, layer: int, expert_ids: List[int],
-                 speculative: bool):
+                 demand_ids: List[int]):
         self.seq = seq
         self.layer = layer
         self.expert_ids = expert_ids
-        self.speculative = speculative
-        self.urgency = 1 if speculative else 0    # demand fetches go first
+        self.demand_ids = set(demand_ids)
+        self.speculative = not self.demand_ids    # pure-prediction job
+        self.last_demand_io_blk = -1   # last block index with demand I/O
         self.t_submit = time.perf_counter()
         self.t_ready: Optional[float] = None
+        self.t_demand_ready: Optional[float] = None
         self.tasks: List[Task] = []
         self.blocks: List[List[Task]] = []
         self.metas: Dict[int, Tuple[int, int]] = {}       # uid -> (expert, tidx)
         self.task_by_uid: Dict[int, Task] = {}
         self.prio: Dict[int, int] = {}
+        self.urg: Dict[int, int] = {}   # uid -> 0 (demand) / 1 (speculative)
         self.payloads: Dict[int, ExpertPayload] = {}
         self.e_data: Dict[Tuple[int, int], bytes] = {}    # (uid, shard)
         self.sm_data: Dict[int, bytes] = {}               # uid -> sm bytes
@@ -87,19 +116,37 @@ class _FetchJob:
         self.claimed: set = set()                         # uids being recovered
         self.n_done = 0
         self.n_total = 0
+        self.demand_done = 0
+        self.demand_total = 0
+        # stats already surfaced by an earlier collect phase — each phase
+        # reports only its increment, so summing result() and spec_result()
+        # stats never double-counts
+        self.io_reported = 0
+        self.dec_reported = 0
+        self.wall_reported = 0.0
+        self.collected: set = set()    # experts already admitted to the cache
+        self.unpinned: set = set()     # demand pins this job already released
         self.stats = FetchStats()
         self.done_ev = threading.Event()
+        self.demand_ev = threading.Event()
 
 
 class FetchHandle:
-    """Future for one expert fetch; ``result()`` blocks until reconstruction
-    finishes, assembles the tensor dict, and updates the cache pools."""
+    """Two-phase future for one step's expert fetch.
+
+    ``result()`` blocks only until the job's *demand* subset is
+    reconstructed, assembles those tensors, and admits them to the cache
+    pools (unpinning them).  ``spec_result()`` blocks until the whole job —
+    including the speculative prediction tail — is done and collects the
+    remaining experts.  For single-class jobs (plain ``fetch_experts`` /
+    speculative ``prefetch_experts``) ``result()`` covers every expert."""
 
     def __init__(self, engine: "ZipMoEEngine", job: _FetchJob):
         self._engine = engine
         self._job = job
         self._result: Optional[Tuple[Dict, FetchStats]] = None
-        self.wait_s = 0.0          # time result() actually blocked
+        self._spec_result: Optional[Tuple[Dict, FetchStats]] = None
+        self.wait_s = 0.0          # time result()/spec_result() blocked
 
     @property
     def layer(self) -> int:
@@ -113,12 +160,54 @@ class FetchHandle:
         return self._job.done_ev.is_set()
 
     def result(self) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
+        """Weights of the demand experts (all experts for single-class jobs)."""
+        job = self._job
         if self._result is None:
+            subset = sorted(job.demand_ids) if job.demand_ids else \
+                list(job.expert_ids)
+            ev = job.demand_ev if job.demand_ids else job.done_ev
             t0 = time.perf_counter()
-            self._job.done_ev.wait()
+            ev.wait()
             self.wait_s = time.perf_counter() - t0
-            self._result = self._engine._collect(self._job)
+            self._result = self._engine._collect(job, subset)
         return self._result
+
+    def result_subset(self, experts: Sequence[int]
+                      ) -> Tuple[Dict[int, Dict[str, np.ndarray]],
+                                 FetchStats]:
+        """Weights of just `experts` (a subset of the job's ids), waiting
+        only until THEIR tensors are recovered — never on the rest of the
+        job.  Lets a consumer of a prediction job block on exactly the
+        experts the router actually selected while the unused tail keeps
+        reconstructing in the background."""
+        job = self._job
+        want = {int(e) for e in experts}
+        assert want <= set(job.expert_ids), (want, job.expert_ids)
+        eng = self._engine
+        t0 = time.perf_counter()
+        with eng._cv:
+            def ready():
+                return all(job.metas[t.uid] in job.done_tensors
+                           for t in job.tasks if t.expert in want)
+            while not (job.done_ev.is_set() or ready()):
+                eng._cv.wait(0.1)
+        self.wait_s = time.perf_counter() - t0
+        return eng._collect(job, sorted(want))
+
+    def spec_result(self) -> Tuple[Dict[int, Dict[str, np.ndarray]],
+                                   FetchStats]:
+        """Weights of ALL the job's experts (demand + speculative tail);
+        waits for the whole job.  Already-collected experts are returned
+        without re-admission; reported stats cover only the increment past
+        earlier collect phases."""
+        job = self._job
+        if self._spec_result is None:
+            t0 = time.perf_counter()
+            job.done_ev.wait()
+            self.wait_s = time.perf_counter() - t0
+            self._spec_result = self._engine._collect(job,
+                                                      list(job.expert_ids))
+        return self._spec_result
 
 
 class ZipMoEEngine:
@@ -126,18 +215,28 @@ class ZipMoEEngine:
 
     def __init__(self, store: ExpertStore, n_experts: int, n_layers: int, *,
                  L: int = 4, pool_sizes: Optional[Dict[str, int]] = None,
-                 recover_fn: Optional[Callable] = None, delta: int = 1):
+                 recover_fn: Optional[Callable] = None, delta: int = 1,
+                 cache_mode: str = "hier", flat_capacity: Optional[int] = None,
+                 flat_policy: str = "lru"):
+        assert cache_mode in ("hier", "flat")
         self.store = store
         self.L = L
+        self.cache_mode = cache_mode
         self.recover = recover_fn or (lambda e, sm, shape: bitfield.reconstruct_np(
             e, np.frombuffer(sm, np.uint8), shape))
         sizes = pool_sizes or {"F": 4, "C": 4, "S": 8, "E": 8}
-        self.caches: Dict[int, HierarchicalCache] = {}
+        self.caches: Dict[int, object] = {}
         self.trackers: Dict[int, FreqTracker] = {}
         for l in range(n_layers):
             tr = FreqTracker(n_experts)
             self.trackers[l] = tr
-            self.caches[l] = HierarchicalCache(sizes, tr, delta=delta)
+            if cache_mode == "flat":
+                cap = flat_capacity if flat_capacity is not None \
+                    else sum(sizes.values())
+                self.caches[l] = LiveFlatCache(cap, tr, policy=flat_policy)
+            else:
+                self.caches[l] = HierarchicalCache(sizes, tr, delta=delta)
+                self.caches[l].demote_payload = self._demote_payload
         # profiled constants (rough; refreshed by profile())
         self.u = 1e-3
         self.c = 3e-4
@@ -195,6 +294,43 @@ class ZipMoEEngine:
         return self.u, self.c
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _demote_payload(payload, pool: str) -> Optional["ExpertPayload"]:
+        """§3.4 demotion hook: keep only the bytes the target pool can serve
+        (C→S keeps SM-chunks, C→E keeps E-chunks, F→S re-derives the SM plane
+        from the resident tensors — a cheap numpy bit-split).  Returns None
+        when nothing real can back the pool, so the cache drops the entry
+        instead of keeping a byte-less placeholder that would count as a hit
+        but cost a full refetch."""
+        if not isinstance(payload, ExpertPayload):
+            return None
+        if pool == "F":
+            return ExpertPayload(full=dict(payload.full)) \
+                if payload.full else None
+        has_sm = bool(payload.sm)
+        has_e = bool(payload.e)
+        if pool == "C":
+            if has_sm and has_e:
+                return ExpertPayload(sm=dict(payload.sm), e=dict(payload.e))
+            return None
+        if pool == "S":
+            if has_sm:
+                return ExpertPayload(sm=dict(payload.sm))
+            if payload.full:
+                sm = {}
+                for tidx, arr in payload.full.items():
+                    if isinstance(arr, np.ndarray):
+                        sm[tidx] = bitfield.decompose_np(arr)[1].tobytes()
+                    elif hasattr(arr, "sm"):          # fused-mode BitPlanes
+                        sm[tidx] = np.asarray(arr.sm).tobytes()
+                    else:
+                        return None
+                return ExpertPayload(sm=sm)
+            return None
+        if pool == "E":
+            return ExpertPayload(e=dict(payload.e)) if has_e else None
+        return None
+
     def _payload(self, layer: int, expert: int) -> Optional[ExpertPayload]:
         cache = self.caches[layer]
         for pool in ("F", "C", "S", "E"):
@@ -213,8 +349,52 @@ class ZipMoEEngine:
 
     def note_access(self, layer: int, expert_ids: Sequence[int]):
         """Record an *actual* router selection served from a speculative
-        prefetch (tracker counts + hit/miss stats)."""
+        prefetch (tracker counts + hit/miss stats).  Call BEFORE the
+        selection's weights are collected so the hit/miss tally reflects
+        residency at step start, not post-admission state."""
         return self.caches[layer].record_access(list(expert_ids))
+
+    def pin_experts(self, layer: int, expert_ids: Sequence[int]):
+        """Pin a step's selected experts (served from prediction jobs, so
+        not pinned by any submit_step) against mid-step eviction churn."""
+        self.caches[layer].pin(expert_ids)
+
+    def unpin_experts(self, layer: int, expert_ids: Sequence[int]):
+        self.caches[layer].unpin(expert_ids)
+
+    def reset_cache_stats(self):
+        """Zero every layer's cache telemetry (residency untouched) — used
+        to report steady state after a warmup pass."""
+        for cache in self.caches.values():
+            cache.reset_stats()
+
+    def cache_summary(self, per_layer: bool = False) -> Dict[str, object]:
+        """Aggregate §3.4 cache telemetry across layers (same schema as the
+        per-layer summaries, via cache.pool_summary).  ``per_layer=True``
+        appends each layer's own summary."""
+        hits = collections.Counter()
+        transitions = collections.Counter()
+        occupancy = collections.Counter()
+        capacity = collections.Counter()
+        misses = evictions = pinned = 0
+        layers = {}
+        mode = self.cache_mode
+        for l, cache in self.caches.items():
+            mode = cache.mode
+            hits.update(cache.hits)
+            transitions.update(cache.transitions)
+            occupancy.update(cache.occupancy())
+            capacity.update(cache.cap)
+            misses += cache.misses
+            evictions += cache.evictions
+            pinned += len(cache.pinned)
+            if per_layer:
+                layers[l] = cache.summary()
+        out = pool_summary(mode, hits, misses, occupancy, capacity,
+                           transitions, evictions, pinned)
+        if per_layer:
+            out["layers"] = layers
+        return out
 
     # ------------------------------------------------------------------
     def fetch_experts(self, layer: int, expert_ids: Sequence[int],
@@ -226,20 +406,43 @@ class ZipMoEEngine:
     def prefetch_experts(self, layer: int, expert_ids: Sequence[int],
                          p_times: Optional[Dict[int, float]] = None, *,
                          speculative: bool = False) -> FetchHandle:
-        """Enqueue an asynchronous fetch on the persistent pool.
+        """Single-class fetch: all ids demand, or (``speculative=True``) all
+        ids predicted.  Thin wrapper over :meth:`submit_step`."""
+        if speculative:
+            return self.submit_step(layer, [], expert_ids, p_times)
+        return self.submit_step(layer, expert_ids, [], p_times)
 
-        Returns immediately; the I/O thread and the L decompression workers
-        reconstruct the experts in the background while the caller computes.
-        With ``speculative=True`` the access is NOT recorded in the frequency
-        tracker / hit stats (predictions must not feed the workload model);
-        pair it with :meth:`note_access` once the router's true selection is
-        known.
+    # demand experts sort ahead of predictions inside build_blocks via the
+    # expert-execution-time priority p (Algorithm 1 orders non-increasing p)
+    _DEMAND_P = 1e-4
+    _SPEC_P = 1e-6
+
+    def submit_step(self, layer: int, selected: Sequence[int],
+                    predicted: Sequence[int],
+                    p_times: Optional[Dict[int, float]] = None) -> FetchHandle:
+        """Enqueue one decode step's reconstruction work (§3.3 + §3.4).
+
+        ``selected`` is the router's top-k union for `layer` (demand: the
+        caller's ``result()`` blocks on exactly these), ``predicted`` the
+        forecast for the layer's *next* step (speculative: reconstructed
+        behind the demand work under the same Algorithm-1 block schedule and
+        collected later via ``spec_result()``).  Returns immediately; the
+        I/O thread and the L decompression workers drain the blocks in
+        priority order while the caller computes.
+
+        Selected ids are recorded in the frequency tracker / hit stats and
+        pinned against eviction until their admission; predicted ids are NOT
+        recorded (mispredictions must not feed the workload model) — the
+        serving layer records true accesses via :meth:`note_access`.
         """
-        ids = sorted({int(e) for e in expert_ids})
-        job = _FetchJob(next(self._seq), layer, ids, speculative)
+        sel = sorted({int(e) for e in selected})
+        pred = [int(e) for e in predicted if int(e) not in set(sel)]
+        ids = sorted(set(sel) | set(pred))
+        job = _FetchJob(next(self._seq), layer, ids, sel)
         cache = self.caches[layer]
-        if not speculative:
-            cache.record_access(ids)
+        if sel:
+            cache.record_access(sel)
+            cache.pin(sel)
         job.payloads = {e: self._payload(layer, e) or ExpertPayload()
                         for e in ids}
 
@@ -261,22 +464,34 @@ class ZipMoEEngine:
             return CState.M
 
         uid = 0
+        demand = job.demand_ids
         for e in ids:
             g = self.store.groups[(layer, e)]
+            base_p = (p_times or {}).get(
+                e, self._DEMAND_P if e in demand else self._SPEC_P)
             for tidx, tm in enumerate(g.tensors):
                 st_t = tensor_state(job.payloads[e], tidx, len(tm.e_sizes))
                 job.tasks.append(Task(
-                    expert=e, tensor=tidx, state=st_t,
-                    p=(p_times or {}).get(e, 1e-4),
+                    expert=e, tensor=tidx, state=st_t, p=base_p,
                     sm_cost=self.u, e_cost=self.rho * self.u / len(tm.e_sizes),
                     dec_cost=self.c, k_shards=len(tm.e_sizes), uid=uid))
                 job.metas[uid] = (e, tidx)
                 uid += 1
         job.n_total = len(job.tasks)
+        job.demand_total = sum(1 for t in job.tasks if t.expert in demand)
         job.blocks = build_blocks(job.tasks, self.L)
         job.task_by_uid = {t.uid: t for t in job.tasks}
         for i, t in enumerate(t for b in job.blocks for t in b):
             job.prio[t.uid] = i
+        # per-task decompression urgency: a mixed step job's prediction tail
+        # must not outrank a newer job's demand work on the worker heap
+        job.urg = {t.uid: 0 if t.expert in demand else 1 for t in job.tasks}
+        # the I/O thread may yield to other urgent jobs only once it is past
+        # the last block that still carries demand I/O
+        for bi, blk in enumerate(job.blocks):
+            if any(t.expert in demand and (t.needs_e_io or t.needs_sm_io)
+                   for t in blk):
+                job.last_demand_io_blk = bi
 
         # ---- seed cached components; publish the job to the pool ---------
         seeded: List[Tuple[int, int, int, int]] = []
@@ -286,6 +501,8 @@ class ZipMoEEngine:
             if t.state is CState.F:
                 job.done_tensors[(e, tidx)] = pl.full[tidx]
                 job.n_done += 1
+                if e in demand:
+                    job.demand_done += 1
                 continue
             job.dec_needed[t.uid] = t.k_shards
             if not t.needs_sm_io:
@@ -293,9 +510,12 @@ class ZipMoEEngine:
             if not t.needs_e_io:
                 for k in range(t.k_shards):
                     job.e_data[(t.uid, k)] = pl.e[(tidx, k)]
-                    seeded.append((job.urgency, job.seq, job.prio[t.uid],
+                    seeded.append((job.urg[t.uid], job.seq, job.prio[t.uid],
                                    t.uid, k))
 
+        if job.demand_done == job.demand_total:  # demand fully F-cached
+            job.t_demand_ready = time.perf_counter()
+            job.demand_ev.set()
         if job.n_done == job.n_total:            # pure F-pool hit: no work
             job.t_ready = time.perf_counter()
             job.done_ev.set()
@@ -327,9 +547,11 @@ class ZipMoEEngine:
 
     def _io_run_job(self, job: _FetchJob):
         layer = job.layer
-        for blk in job.blocks:
-            # a speculative job yields to demand fetches at block boundaries
-            while job.speculative:
+        for bi, blk in enumerate(job.blocks):
+            # yield to urgent demand fetches at block boundaries — always for
+            # speculative jobs, and for mixed step jobs once their own demand
+            # I/O has been fully issued (only the prediction tail remains)
+            while job.speculative or bi > job.last_demand_io_blk:
                 with self._cv:
                     urgent = (self._io_urgent.popleft()
                               if self._io_urgent else None)
@@ -346,7 +568,7 @@ class ZipMoEEngine:
                             job.e_data[(t.uid, k)] = data
                             heapq.heappush(
                                 self._dec_ready,
-                                (job.urgency, job.seq, job.prio[t.uid],
+                                (job.urg[t.uid], job.seq, job.prio[t.uid],
                                  t.uid, k))
                             self._cv.notify_all()
             for t in blk:
@@ -412,51 +634,89 @@ class ZipMoEEngine:
         with self._cv:
             job.done_tensors[(e, tidx)] = arr
             job.n_done += 1
+            if e in job.demand_ids:
+                job.demand_done += 1
+                if job.demand_done == job.demand_total:
+                    job.t_demand_ready = time.perf_counter()
+                    job.demand_ev.set()
             if job.n_done == job.n_total:
                 job.t_ready = time.perf_counter()
                 self._jobs.pop(job.seq, None)
                 job.done_ev.set()
+            self._cv.notify_all()      # wake result_subset() waiters
 
     # ---- result assembly + cache update (caller's thread) ----------------
-    def _collect(self, job: _FetchJob
+    def _collect(self, job: _FetchJob, subset: Sequence[int]
                  ) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
+        """Assemble `subset`'s tensors and admit them to the layer cache.
+
+        Called on the caller's thread (the only thread that mutates cache
+        pools).  Demand experts are unpinned once the whole subset has been
+        admitted — not one by one — so intra-step admission overflow can
+        never evict a selected expert that was admitted a moment earlier.
+        """
         layer = job.layer
+        want = set(subset)
         missing = [job.metas[t.uid] for t in job.tasks
-                   if job.metas[t.uid] not in job.done_tensors]
+                   if t.expert in want and
+                   job.metas[t.uid] not in job.done_tensors]
         assert not missing, f"unreconstructed tensors: {missing}"
         cache = self.caches[layer]
         out: Dict[int, Dict[str, np.ndarray]] = {}
-        for e in job.expert_ids:
+        for e in subset:
             g = self.store.groups[(layer, e)]
             out[e] = {tm.name: job.done_tensors[(e, tidx)]
                       for tidx, tm in enumerate(g.tensors)}
-        for e in job.expert_ids:
-            pool = cache.admit(e)
-            if pool is None:
-                continue
-            ent = cache.pools[pool][e]
-            pl = ExpertPayload()
+        for e in subset:
+            if e in job.collected and cache.residency(e) is not CState.M:
+                continue               # still resident: nothing to re-admit
+            job.collected.add(e)
+            # build the comprehensive payload (everything this fetch holds)
+            # and let admission trim it to the dispatched pool via the
+            # _demote_payload fit — payload travels WITH the admit, so a
+            # cascade triggered by a later admit can never orphan it
             g = self.store.groups[(layer, e)]
-            if pool == "F":
-                pl.full = {tidx: job.done_tensors[(e, tidx)]
-                           for tidx in range(len(g.tensors))}
-            else:
+            pl = ExpertPayload()
+            pl.full = {tidx: job.done_tensors[(e, tidx)]
+                       for tidx in range(len(g.tensors))}
+            if self.cache_mode != "flat":
                 for t in job.tasks:
                     if t.expert != e:
                         continue
                     tidx = job.metas[t.uid][1]
-                    if pool in ("C", "S"):
-                        smb = job.sm_data.get(t.uid,
-                                              job.payloads[e].sm.get(tidx))
-                        if smb is not None:
-                            pl.sm[tidx] = smb
-                    if pool in ("C", "E"):
-                        for k in range(t.k_shards):
-                            eb = job.e_data.get(
-                                (t.uid, k), job.payloads[e].e.get((tidx, k)))
-                            if eb is not None:
-                                pl.e[(tidx, k)] = eb
-            ent.payload = pl
-        job.stats.wall = (job.t_ready or time.perf_counter()) - job.t_submit
-        job.stats.hits = {k: v for k, v in cache.hits.items()}
-        return out, job.stats
+                    smb = job.sm_data.get(t.uid,
+                                          job.payloads[e].sm.get(tidx))
+                    if smb is not None:
+                        pl.sm[tidx] = smb
+                    for k in range(t.k_shards):
+                        eb = job.e_data.get(
+                            (t.uid, k), job.payloads[e].e.get((tidx, k)))
+                        if eb is not None:
+                            pl.e[(tidx, k)] = eb
+            cache.admit(e, pl)
+        # release this job's own demand pins exactly once per expert (pins
+        # are refcounted: a step's independent pin on the same expert, taken
+        # via pin_experts, survives this release)
+        to_unpin = [e for e in subset
+                    if e in job.demand_ids and e not in job.unpinned]
+        job.unpinned.update(to_unpin)
+        cache.unpin(to_unpin)
+        demand_phase = bool(job.demand_ids) and want <= job.demand_ids
+        with self._cv:
+            now = time.perf_counter()
+            t_demand = job.t_demand_ready or now
+            t_all = job.t_ready or now
+            # cumulative wall up to this phase's completion point; each
+            # collect reports only the increment past what was already
+            # surfaced (so e.g. spec_result() of a job whose prediction tail
+            # was empty reports 0, not the demand wall again)
+            cum = (t_demand if demand_phase else t_all) - job.t_submit
+            wall = max(0.0, cum - job.wall_reported)
+            job.wall_reported = max(job.wall_reported, cum)
+            io_new = job.stats.io_bytes - job.io_reported
+            job.io_reported = job.stats.io_bytes
+            dec_new = job.stats.dec_ops - job.dec_reported
+            job.dec_reported = job.stats.dec_ops
+            stats = FetchStats(wall=wall, io_bytes=io_new, dec_ops=dec_new,
+                               hits={k: v for k, v in cache.hits.items()})
+        return out, stats

@@ -1,10 +1,25 @@
-"""Expert store: offline initialization + runtime chunk reads (§3.1).
+"""Expert store: offline initialization + runtime chunk reads (§3.1, §3.2).
 
 ``build_store`` converts a model's expert parameters into the chunked,
-losslessly-compressed on-disk format.  ``ExpertStore`` is the runtime read
-interface: exact-range reads per chunk (the scheduler's I/O unit), optional
-bandwidth throttling to emulate the paper's NVMe tier (3.5 GB/s Samsung 970
-EVO by default; configurable).
+losslessly-compressed on-disk format: each BF16 tensor is split by
+``core/bitfield.py`` into K compressed exponent shards (E-chunks, codec from
+``core/codec.py``) and one raw sign–mantissa plane (SM-chunk) — the two I/O
+units the §3.3 scheduler orders (E-chunks before SM-chunks within a block).
+``ExpertStore`` is the runtime read interface: exact-range reads per chunk,
+optional bandwidth throttling to emulate the paper's NVMe tier (3.5 GB/s
+Samsung 970 EVO by default; configurable).
+
+API:
+  build_store(params, cfg, path, codec=, k_shards=) -> ExpertStore
+      offline packing; writes ``g{layer}_{expert}.bin`` files + a JSON
+      manifest with per-tensor chunk offsets.
+  ExpertStore(path, bandwidth_gbps=)
+      .read_sm(key, tidx) / .read_e(key, tidx, shard)   — raw chunk bytes
+      .decompress_e(key, tidx, shard, data)             — one worker op
+      .load_tensor / .load_group                        — blocking full loads
+      .ratio()  — store bytes / BF16 bytes (paper Fig. 3)
+      .rho()    — compressed/raw exponent ratio (the scheduler's ρ)
+  where ``key = (layer, expert)`` and tensors keep their parameter names.
 
 Expert-group extraction understands the stacked parameter layout from
 models/transformer.py:

@@ -1,8 +1,12 @@
-"""Beyond-paper Pallas kernels for the MoE expert compute hot-spot.
+"""Beyond-paper Pallas kernels for the MoE expert compute hot-spot (the
+"expert execution" stage that Algorithm 1 serialises on the accelerator
+stream, §3.3; recovery itself is §3.2 / kernels/recovery.py).
 
 1. ``grouped_gemm`` — batched expert GEMM  x[E,C,d] @ w[E,d,f] -> [E,C,f]
    with MXU-aligned (128-multiple) tiles and f32 accumulation over the
-   contraction grid axis.
+   contraction grid axis.  ``ZipServer._ffn_grouped`` gathers a decode
+   step's tokens by expert into the [E_active, C, d] batch this consumes —
+   replacing the per-batch × per-slot Python loop.
 
 2. ``zip_gemm`` — **fused recovery + GEMM**: the expert weight arrives as the
    two ZipMoE bit-planes (exp u8, sm u8); the kernel splices them to bf16 on
@@ -10,6 +14,12 @@
    the recovered weight (write 2B/elem + read 2B/elem), cutting weight-stream
    traffic 3× for bandwidth-bound decode GEMMs — napkin math and measured
    cost-analysis deltas in EXPERIMENTS.md §Perf.
+
+Call through the jit-cached wrappers in ``kernels/ops.py``
+(``grouped_expert_gemm``, ``fused_zip_gemm``) — a raw ``pallas_call``
+re-traces per invocation and decode-step shapes must hit the compile cache.
+On CPU hosts both kernels run in Pallas interpret mode; ``kernels/ref.py``
+holds the numpy oracles used by tests/test_kernels.py.
 """
 from __future__ import annotations
 

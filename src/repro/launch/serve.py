@@ -11,6 +11,16 @@ params.
                       compare against the synchronous path).
 --mode zipmoe-batch : continuous batching (BatchServer) over the compressed
                       store end-to-end, with per-request TTFT/TPOT.
+
+Cache knobs (§3.4):
+--pool-sizes F,C,S,E : hierarchical pool capacities (experts per layer),
+                       e.g. ``--pool-sizes 2,2,4,8``
+--cache-mode flat    : flat full-tensor baseline instead of the F≺C≺S≺E
+                       hierarchy (--flat-policy lru|fifo|lfu|marking,
+                       --flat-capacity N; default N = sum of pool sizes)
+--delta              : δ rank-tolerance margin of the dispatch thresholds
+Both modes print ``cache:`` telemetry (per-pool hit rates, residency-state
+transition counts) next to the ``overlap:`` line.
 """
 from __future__ import annotations
 
@@ -44,7 +54,25 @@ def main():
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--bandwidth-gbps", type=float, default=None,
                     help="emulate a slow offload tier")
+    ap.add_argument("--pool-sizes", default="2,2,4,8",
+                    help="hierarchical pool capacities F,C,S,E per layer")
+    ap.add_argument("--cache-mode", default="hier", choices=["hier", "flat"],
+                    help="hierarchical F/C/S/E pools vs flat full-tensor map")
+    ap.add_argument("--flat-policy", default="lru",
+                    choices=["lru", "fifo", "lfu", "marking"])
+    ap.add_argument("--flat-capacity", type=int, default=None,
+                    help="flat-mode capacity (default: sum of pool sizes)")
+    ap.add_argument("--delta", type=int, default=1,
+                    help="dispatch-threshold rank tolerance δ")
     args = ap.parse_args()
+    parts = args.pool_sizes.split(",")
+    try:
+        pool_sizes = dict(zip("FCSE", (int(x) for x in parts)))
+    except ValueError:
+        pool_sizes = None
+    if pool_sizes is None or len(parts) != 4:
+        ap.error("--pool-sizes expects exactly 4 comma-separated integers "
+                 "(F,C,S,E), e.g. 2,2,4,8")
 
     cfg = get_smoke_config(args.arch, d_model=256, n_layers=6, vocab_size=2048)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -64,9 +92,12 @@ def main():
     store = build_store(params, cfg, store_dir)
     print(f"store: {store_dir} ratio={store.ratio():.3f} rho={store.rho():.3f}")
     zs = ZipServer(params, cfg, store_dir, L=args.workers,
-                   pool_sizes={"F": 2, "C": 2, "S": 4, "E": 8},
+                   pool_sizes=pool_sizes,
                    bandwidth_gbps=args.bandwidth_gbps,
-                   prefetch=not args.no_prefetch)
+                   prefetch=not args.no_prefetch,
+                   cache_mode=args.cache_mode,
+                   flat_capacity=args.flat_capacity,
+                   flat_policy=args.flat_policy, delta=args.delta)
 
     if args.mode == "zipmoe-batch":
         srv = BatchServer(None, cfg, max_batch=args.batch,
@@ -77,6 +108,7 @@ def main():
                        args.max_new)
         srv.run()
         print("metrics:", srv.metrics())
+        print("cache:", srv.cache_summary())
         zs.close()
         return
 
@@ -90,12 +122,11 @@ def main():
           f"tpot={m['tpot_s']*1e3:.1f}ms")
     io = sum(s["io_bytes"] for s in zs.stats)
     print(f"expert I/O total={io/1e6:.2f}MB over {len(zs.stats)} layer-fetches")
-    hits = {}
-    for c in zs.engine.caches.values():
-        for k, v in c.hits.items():
-            hits[k] = hits.get(k, 0) + v
-    print("cache hits by state:", hits,
-          "misses:", sum(c.misses for c in zs.engine.caches.values()))
+    cs = zs.cache_summary()
+    print(f"cache[{cs['mode']}]: hits by state:", cs["hits"],
+          f"misses: {cs['misses']} hit_rate={cs['hit_rate']:.2f}")
+    print("cache transitions:", cs["transitions"],
+          f"evictions={cs['evictions']} occupancy={cs['occupancy']}")
     ov = zs.overlap_summary()
     print(f"overlap: hidden={ov['hidden_fetch_s']*1e3:.1f}ms of "
           f"{ov['total_fetch_s']*1e3:.1f}ms fetch "

@@ -1,4 +1,21 @@
-"""Prefill + decode generation loops (greedy / temperature sampling)."""
+"""Prefill + decode generation loops for the *resident-params* path
+(greedy / temperature sampling) — the fully-in-memory baseline every ZipMoE
+result is validated against (§5 "semantically lossless").
+
+API:
+  sample_tokens(logits, key, temperature) — [B, V] -> [B] int32; greedy at
+      temperature 0, categorical otherwise.
+  make_steps(cfg, moe_impl=...)           — returns (prefill_fn, decode_fn),
+      both jitted; decode donates its KV cache buffer.
+  generate(params, cfg, prompts, ...)     — end-to-end prefill + N decode
+      steps with KV-cache growth (serving/kv_cache.grow_cache).
+
+Relationship to the compressed path: ``serving/zipserve.ZipServer`` replays
+exactly this decode loop but routes every MoE layer's expert weights through
+the on-disk store (§3.1), the block scheduler (§3.3), and the hierarchical
+cache (§3.4); tests/test_engine_zipserve.py pins the two paths to identical
+routing and dtype-noise-equal logits.
+"""
 from __future__ import annotations
 
 import functools

@@ -1,10 +1,27 @@
-"""Batched request server: continuous batching over the generate loop.
+"""Batched request server: continuous batching over the generate loop
+(DESIGN.md §4; the serving harness for the paper's real-workload runs, §5).
 
 Minimal but real: a request queue, a fixed decode-slot pool, per-request
 TTFT/TPOT accounting, prompt-length bucketing for prefill batching.  Drives
-either the resident-params path (make_steps) or the compressed-store path
-(pass a ``ZipServer``): the same epoch loop then schedules router-driven
-expert reconstruction + overlapped prefetch end-to-end.
+either the resident-params path (``serving.generate.make_steps``) or the
+compressed-store path (pass a ``ZipServer``): the same epoch loop then
+schedules router-driven expert reconstruction through the §3.3 block
+scheduler and §3.4 hierarchical cache end-to-end.
+
+API:
+  Request      — one prompt + accounting (``ttft``, ``tpot_s``, ``output``).
+  BatchServer  — ``submit(prompt, max_new_tokens) -> rid``; ``run()`` drains
+                 the queue epoch by epoch; ``metrics()`` aggregates TTFT /
+                 TPOT / throughput plus, on the ZipMoE path, the engine's
+                 ``overlap_*`` (prefetch hiding, §3.3) and ``cache_*``
+                 (pool hit rate, §3.4) telemetry; ``cache_summary()`` is the
+                 full nested cache report.
+
+Epoch semantics: ``_take_batch`` buckets same-prompt-length requests so one
+prefill shape serves the whole batch; decode runs in lockstep until every
+slot finishes, then free slots refill.  ``submit()`` clamps
+``max_new_tokens`` against ``max_len - S`` so the KV allocation can never
+silently overflow (see tests/test_overlap_serving.py).
 """
 from __future__ import annotations
 
@@ -168,4 +185,17 @@ class BatchServer:
         if self.zip is not None:
             m.update({f"overlap_{k}": v
                       for k, v in self.zip.overlap_summary().items()})
+            cs = self.zip.cache_summary()
+            m.update({"cache_mode": cs["mode"],
+                      "cache_hit_rate": cs["hit_rate"],
+                      "cache_accesses": cs["accesses"],
+                      "cache_misses": cs["misses"],
+                      "cache_evictions": cs["evictions"]})
         return m
+
+    def cache_summary(self, per_layer: bool = False):
+        """Full §3.4 cache telemetry of the underlying ZipServer (per-pool
+        hit counts, residency transitions); ``{}`` on the resident path."""
+        if self.zip is None:
+            return {}
+        return self.zip.cache_summary(per_layer=per_layer)

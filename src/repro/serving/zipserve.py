@@ -9,12 +9,19 @@ decompression + bit-splice recovery) before the FFN runs.
 Two beyond-loop mechanisms turn the I/O-bound sync path compute-centric
 (DESIGN.md §3):
 
-* **Overlapped prefetch** — after layer i's router runs, the *next* MoE
-  layer's likely experts (FreqTracker top-k history) are enqueued on the
-  engine's persistent I/O+worker pool as a speculative fetch, so chunk reads
-  and decompression hide under layer i's FFN and layer i+1's attention.  On a
-  router misprediction the missing experts fall back to a blocking fetch;
-  hit/miss and hidden-vs-blocking wall time land in ``overlap_stats``.
+* **Per-step block scheduling** (§3.3 + §3.4 co-design) — every fetch is an
+  ``engine.submit_step`` job whose Algorithm-1 block list orders demand
+  work ahead of speculative work.  On a layer's cold/sync step the job
+  combines the router's selection with the layer's *next-step* prediction
+  (previous selection + FreqTracker top-k); in steady state a router
+  misprediction triggers an urgent demand-only fetch that jumps the I/O
+  queue and overlaps the in-flight predictions' tails.  The decode thread
+  blocks ONLY on selected experts (``result_subset`` waits per-expert, a
+  prediction's unused tail keeps reconstructing in the background and is
+  drained to the cache pools on a later step), and new predictions exclude
+  every in-flight expert, so speculative work is never duplicated.
+  Hit/miss and hidden-vs-blocking wall time land in ``overlap_stats``,
+  per-pool hit rates and residency transitions in ``cache_summary()``.
 * **Grouped expert FFN** — instead of a Python loop over batch × top-k, the
   step's tokens are gathered by expert into one [E_active, C, d] batch and
   pushed through ``kernels/moe_gemm.grouped_gemm`` (interpret mode on CPU
@@ -80,7 +87,9 @@ class ZipServer:
                  bandwidth_gbps: Optional[float] = None,
                  use_pallas_recovery: bool = False,
                  prefetch: bool = True, prefetch_width: Optional[int] = None,
-                 ffn_impl: str = "grouped", fused_recovery: bool = False):
+                 ffn_impl: str = "grouped", fused_recovery: bool = False,
+                 cache_mode: str = "hier", flat_capacity: Optional[int] = None,
+                 flat_policy: str = "lru", delta: int = 1):
         assert ffn_impl in ("grouped", "loop")
         self.cfg = cfg
         self.prefetch = prefetch
@@ -98,7 +107,9 @@ class ZipServer:
             recover = recover_bf16_host
         self.engine = ZipMoEEngine(
             store, n_experts=max(1, cfg.n_experts), n_layers=cfg.n_layers,
-            L=L, pool_sizes=pool_sizes, recover_fn=recover)
+            L=L, pool_sizes=pool_sizes, recover_fn=recover,
+            cache_mode=cache_mode, flat_capacity=flat_capacity,
+            flat_policy=flat_policy, delta=delta)
         self.engine.profile()
         # strip routed expert weights from the resident copy (they live on disk)
         for lp in self.layers:
@@ -107,7 +118,10 @@ class ZipServer:
                     lp["ffn"].pop(name, None)
         self._moe_layers = [i for i, lp in enumerate(self.layers)
                             if "ffn" in lp and "router" in lp["ffn"]]
-        self._pending: Dict[int, Tuple[FetchHandle, frozenset]] = {}
+        # per layer: live prediction jobs (handle, predicted-id set).  A step
+        # waits only on the covered subset of each; finished jobs are drained
+        # (tail admitted to the cache) lazily on the decode thread
+        self._pending: Dict[int, List[Tuple[FetchHandle, frozenset]]] = {}
         self._last_ids: Dict[int, List[int]] = {}
         self.stats: List[Dict] = []
         self.overlap_stats = {
@@ -138,67 +152,153 @@ class ZipServer:
                 return j
         return self._moe_layers[0]
 
-    def _issue_prefetch(self, layer_idx: int, batch: int):
-        """Speculatively enqueue the predicted experts of `layer_idx`.
-
-        Prediction = the layer's previous-step selection (temporal locality)
-        topped up with the FreqTracker's most-frequent experts; a miss falls
-        back to a queue-jumping demand fetch."""
-        if layer_idx is None or layer_idx in self._pending:
-            return
+    def _predict(self, layer_idx: int, batch: int, exclude) -> List[int]:
+        """Predicted experts for `layer_idx`'s next decode step: the layer's
+        previous-step selection (temporal locality) topped up with the
+        FreqTracker's most-frequent experts."""
         width = self.prefetch_width or min(self.cfg.n_experts,
                                            batch * self.cfg.top_k
                                            + self.cfg.top_k)
-        pred = list(self._last_ids.get(layer_idx, ()))
-        for e in self.engine.predict_topk(layer_idx, width):
+        # filter exclusions DURING building so the prediction keeps its full
+        # width, topping up from the frequency ranking past excluded ids
+        pred = [e for e in self._last_ids.get(layer_idx, ())
+                if e not in exclude]
+        for e in self.engine.predict_topk(layer_idx, width + len(exclude)):
             if len(pred) >= width:
                 break
-            if e not in pred:
+            if e not in pred and e not in exclude:
                 pred.append(e)
-        h = self.engine.prefetch_experts(layer_idx, pred, speculative=True)
-        self._pending[layer_idx] = (h, frozenset(pred))
+        return pred[:width]
 
-    def _acquire_experts(self, layer_idx: int, ids: List[int]):
-        """Expert weights for `ids`, consuming a pending prefetch if any.
+    def _in_flight(self, layer_idx: int) -> frozenset:
+        """Experts covered by this layer's live prediction jobs."""
+        return frozenset().union(*(s for _, s in
+                                   self._pending.get(layer_idx, [])))
+
+    def _drain(self, layer_idx: int) -> int:
+        """Collect finished prediction jobs of `layer_idx` on the decode
+        thread: their unused tails are admitted to the cache pools (warming
+        them) and leave the in-flight set, so they become predictable again
+        as cheap resident no-op tasks.  Returns the drained io_bytes."""
+        ov = self.overlap_stats
+        live, io = [], 0
+        for h, s in self._pending.get(layer_idx, []):
+            if h.done():
+                _, st = h.spec_result()    # background work: fully hidden
+                ov["fetch_wall_s"] += st.wall
+                io += st.io_bytes
+            else:
+                live.append((h, s))
+        if layer_idx in self._pending:
+            self._pending[layer_idx] = live
+        return io
+
+    def _issue_step(self, layer_idx: int, demand_ids: List[int], batch: int):
+        """One Algorithm-1 step submission for `layer_idx`: the demand ids
+        (this step's selection still missing from every pending prediction)
+        plus the layer's next-step prediction, under a single block
+        schedule.  In-flight experts are excluded from the prediction (their
+        job already reconstructs them — no duplicate work) but stay covered
+        through their own pending entry."""
+        pred = (self._predict(layer_idx, batch,
+                              set(demand_ids) | self._in_flight(layer_idx))
+                if self.prefetch else [])
+        if not demand_ids and not pred:
+            return None
+        h = self.engine.submit_step(layer_idx, demand_ids, pred)
+        if self.prefetch:
+            # the demand half counts as predicted for the NEXT step too: it
+            # is reconstructed by this very job, so a re-selected expert is
+            # a prediction hit, never a sticky demand refetch
+            self._pending.setdefault(layer_idx, []).append(
+                (h, frozenset(pred) | set(demand_ids)))
+        return h
+
+    def _issue_prefetch(self, layer_idx: Optional[int], batch: int):
+        """Cold-start speculative submission (no demand half) for a layer
+        that has no pending step job yet."""
+        if layer_idx is None or not self.prefetch \
+                or self._pending.get(layer_idx):
+            return
+        self._issue_step(layer_idx, [], batch)
+
+    def _acquire_experts(self, layer_idx: int, ids: List[int], batch: int):
+        """Expert weights for `ids`, consuming the pending prediction jobs.
 
         Returns (weights, io_bytes, blocked_s) where blocked_s is the wall
-        time the decode thread actually spent waiting on reconstruction.
+        time the decode thread actually spent waiting on reconstruction —
+        only the selected experts are waited on, never a prediction job's
+        unused tail (that keeps reconstructing in the background and is
+        drained on a later step).
         """
         ov = self.overlap_stats
-        pend = self._pending.pop(layer_idx, None)
-        if pend is None:
-            weights, fstats = self.engine.fetch_experts(layer_idx, ids)
+        pend = list(self._pending.get(layer_idx, []))
+        if not pend:
+            # no prediction in flight: everything is demand; the same
+            # submission still carries the layer's next-step prediction
+            h = self._issue_step(layer_idx, ids, batch)
+            weights, fstats = h.result()
             ov["sync_fetches"] += 1
             ov["blocking_s"] += fstats.wall
             return weights, fstats.io_bytes, fstats.wall
-        handle, predicted = pend
-        covered = [e for e in ids if e in predicted]
-        missing = [e for e in ids if e not in predicted]
-        # request the mispredicted experts BEFORE waiting on the speculative
-        # job: the demand fetch jumps the engine's I/O queue and overlaps
-        # with the speculative job's tail
-        h2 = (self.engine.prefetch_experts(layer_idx, missing)
-              if missing else None)
-        t0 = time.perf_counter()
-        weights, fstats = handle.result()
-        ov["fetch_wall_s"] += fstats.wall
-        ov["fetch_wait_s"] += handle.wait_s
-        io_bytes = fstats.io_bytes
-        # actual access accounting for everything the prediction served
-        # (the demand fallback records its own accesses at submit)
+        io_bytes = 0
+        in_flight = self._in_flight(layer_idx)
+        covered = [e for e in ids if e in in_flight]
+        missing = [e for e in ids if e not in in_flight]
+        # pin the covered selection for the whole step (pins are refcounted,
+        # so a pending job releasing its own pin on the same expert cannot
+        # release ours; the missing half is pinned by its own submit below)
+        # and record the access BEFORE any of this step's admissions, so
+        # hit/miss telemetry reflects residency at step start (the demand
+        # fallback records its own at submit)
+        self.engine.pin_experts(layer_idx, covered)
         self.engine.note_access(layer_idx, covered)
-        if h2 is not None:
+        # a misprediction's demand fetch is submitted BEFORE waiting on the
+        # prediction jobs: `missing` is disjoint from every in-flight
+        # prediction by construction (no duplicate work is possible), and
+        # the urgent job jumps the I/O queue so it overlaps their tails
+        h_m = (self.engine.prefetch_experts(layer_idx, missing)
+               if missing else None)
+        if h_m is not None and self.prefetch:
+            # the fallback job joins the pending list like any submission:
+            # its experts are in flight, so the end-of-step prediction won't
+            # re-fetch them even if tiny pools evict them on admission
+            self._pending.setdefault(layer_idx, []).append(
+                (h_m, frozenset(missing)))
+        t0 = time.perf_counter()     # CPU-side submit cost stays excluded
+        weights: Dict[int, Dict] = {}
+        remaining = set(covered)
+        for h, s in pend:
+            take = [e for e in remaining if e in s]
+            if not take:
+                continue
+            remaining.difference_update(take)
+            w, st = h.result_subset(take)   # blocks on `take` only
+            weights.update(w)
+            ov["fetch_wall_s"] += st.wall
+            ov["fetch_wait_s"] += h.wait_s
+            io_bytes += st.io_bytes
+        if h_m is not None:
             ov["pred_misses"] += 1
-            extra, fs2 = h2.result()
-            weights = {**weights, **extra}
+            extra, fs2 = h_m.result()
+            weights.update(extra)
             io_bytes += fs2.io_bytes
-            # the fallback ran concurrently with the speculative tail: only
+            # the fallback ran concurrently with the speculative tails: only
             # the time actually blocked in result() is un-hidden
             ov["fetch_wall_s"] += fs2.wall
-            ov["fetch_wait_s"] += h2.wait_s
+            ov["fetch_wait_s"] += h_m.wait_s
         else:
             ov["pred_hits"] += 1
+        # every admission of this step is done: release the step pins
+        self.engine.unpin_experts(layer_idx, covered)
         blocked = time.perf_counter() - t0
+        # drain finished prediction jobs AFTER they served this step's
+        # coverage: their unused tails are admitted to the cache and leave
+        # the in-flight set, then the next step's prediction excludes every
+        # still-in-flight expert (no duplicate fetches) and may re-include
+        # drained residents, which become F-state no-op tasks
+        io_bytes += self._drain(layer_idx)
+        self._issue_step(layer_idx, [], batch)
         return weights, io_bytes, blocked
 
     def overlap_summary(self) -> Dict[str, float]:
@@ -208,6 +308,12 @@ class ZipServer:
         hidden = ov["fetch_wall_s"] - ov["fetch_wait_s"]
         return {**ov, "total_fetch_s": total, "hidden_fetch_s": hidden,
                 "hidden_frac": hidden / total if total > 0 else 0.0}
+
+    def cache_summary(self, per_layer: bool = False) -> Dict[str, object]:
+        """Live §3.4 cache telemetry (per-pool hit rates, residency-state
+        transition counts, evictions) — the cache-side complement to
+        :meth:`overlap_summary`."""
+        return self.engine.cache_summary(per_layer=per_layer)
 
     # ------------------------------------------------------------------
     # expert FFN implementations
@@ -326,13 +432,12 @@ class ZipServer:
             # FFN and the following layers' attention compute
             self._issue_prefetch(self._next_moe_layer(layer_idx), B)
         t0 = time.perf_counter()
-        weights, io_bytes, blocked_s = self._acquire_experts(layer_idx, ids)
+        # consumes the pending step job and submits this layer's next one:
+        # the next-step prediction rides behind any misprediction demand
+        # under one Algorithm-1 block schedule, getting a full decode step
+        # of compute to hide under
+        weights, io_bytes, blocked_s = self._acquire_experts(layer_idx, ids, B)
         fetch_s = time.perf_counter() - t0
-        if self.prefetch:
-            # steady state: re-issue this layer's prefetch for the NEXT decode
-            # step, so each speculative job gets a full step of compute to
-            # hide under (one-layer lookahead alone is too short a window)
-            self._issue_prefetch(layer_idx, B)
         if self.fused_recovery:
             y = self._ffn_zip_gemm(x, top_p, top_i, weights, ids)
         elif self.ffn_impl == "loop":

@@ -1,8 +1,9 @@
-"""Hierarchical cache + baseline eviction tests."""
+"""Hierarchical cache + baseline eviction tests (unit level; the live-engine
+pool tests replaying real traces live in tests/test_live_cache.py)."""
 import numpy as np
 import pytest
 
-from repro.core.cache import FlatCache, HierarchicalCache
+from repro.core.cache import FlatCache, HierarchicalCache, LiveFlatCache
 from repro.core.states import CState
 from repro.core.workload import FreqTracker, zipf_trace
 
@@ -81,6 +82,124 @@ def test_lru_beats_fifo_on_skew():
                 c.access(e)
         res[policy] = c.hits
     assert res["lfu"] >= res["fifo"]
+
+
+def test_pinned_expert_never_evicted():
+    """Regression: admitting one of a step's selected experts must never
+    evict another selected (pinned) expert, even on pool overflow."""
+    cache, tr = _mk({"F": 2, "C": 0, "S": 0, "E": 0}, n=8)
+    # experts 0,1 hot residents; 2 hotter than both
+    for _ in range(5):
+        tr.record([0, 1])
+    cache.admit(0)
+    cache.admit(1)
+    assert set(cache.pools["F"]) == {0, 1}
+    for _ in range(9):
+        tr.record([2])
+    step = [0, 1, 2]
+    cache.pin(step)
+    cache.record_access(step)
+    for e in step:
+        cache.admit(e)
+        # no selected expert may have been churned out mid-step
+        for s in (0, 1):
+            assert cache.residency(s) is not CState.M, (e, cache.occupancy())
+    cache.unpin(step)
+    # after unpinning, overflow eviction works normally again: a hotter
+    # newcomer displaces the least-frequent resident
+    for _ in range(20):
+        tr.record([3])
+    assert cache.admit(3) == "F"
+    assert cache.residency(tr.least_frequent([0, 1])) is CState.M
+
+
+def test_pins_are_refcounted():
+    """Two owners (a step + a fetch job) pin the same expert; one owner's
+    release must not strip the other's protection."""
+    cache, tr = _mk({"F": 1, "C": 0, "S": 0, "E": 0}, n=8)
+    tr.record([0])
+    cache.admit(0)
+    cache.pin([0])                     # owner 1: the decode step
+    cache.pin([0])                     # owner 2: the fetch job
+    cache.unpin([0])                   # job releases its pin
+    for _ in range(9):
+        tr.record([1])                 # hotter challenger
+    cache.record_access([1])
+    assert cache.admit(1) is None      # 0 still pinned by the step
+    assert cache.residency(0) is CState.F
+    cache.unpin([0])                   # step releases: now evictable
+    assert cache.admit(1) == "F"
+    assert cache.residency(0) is CState.M
+
+
+def test_pinned_expert_survives_own_readmission():
+    """Regression: when every slot below a pinned resident's new rank is
+    held by pinned step-mates, its own re-admission must restore it rather
+    than silently drop it to M (which would force a refetch next step)."""
+    cache, tr = _mk({"F": 1, "C": 1, "S": 1, "E": 1}, n=8)
+    tr.record([0])
+    cache.admit(0)
+    assert cache.residency(0) is not CState.M
+    step = [0, 1, 2, 3, 4]               # 5 selected experts, 4 slots total
+    for _ in range(3):
+        tr.record([1, 2, 3, 4])          # step-mates now outrank expert 0
+    cache.record_access(step)
+    cache.pin(step)
+    for e in (1, 2, 3, 4, 0):
+        cache.admit(e)
+    # expert 0 was resident when pinned: it must still be resident
+    assert cache.residency(0) is not CState.M, cache.occupancy()
+    cache.unpin(step)
+
+
+def test_pinned_flat_cache_never_evicted():
+    tr = FreqTracker(8)
+    c = LiveFlatCache(2, tr, policy="lru")
+    tr.record([0, 1])
+    assert c.admit(0) == "F" and c.admit(1) == "F"
+    c.pin([0, 1])
+    assert c.admit(2) is None          # every resident pinned: no admission
+    assert set(c.entries) == {0, 1}
+    c.unpin([0])
+    assert c.admit(2) == "F"           # now 0 (unpinned) is evictable
+    assert 1 in c.entries and 0 not in c.entries
+
+
+def test_transition_counts():
+    cache, tr = _mk({"F": 1, "C": 1, "S": 1, "E": 1}, n=8)
+    for e in (0, 0, 0, 1, 1, 2):
+        tr.record([e])
+    for e in (0, 1, 2):
+        cache.admit(e)
+    s = cache.summary()
+    assert s["transitions"].get("M->F") == 1           # expert 0 straight to F
+    assert sum(s["transitions"].values()) >= 3
+    assert s["occupancy"] == cache.occupancy()
+    # re-admission after a rank change records the state change
+    for _ in range(10):
+        tr.record([2])
+    cache.record_access([2])
+    cache.admit(2)
+    s2 = cache.summary()
+    assert sum(s2["transitions"].values()) > sum(s["transitions"].values())
+
+
+@pytest.mark.parametrize("policy", ["fifo", "lru", "marking", "lfu"])
+def test_live_flat_cache_policies(policy):
+    tr = FreqTracker(16)
+    c = LiveFlatCache(4, tr, policy=policy)
+    for e in [0, 1, 2, 3, 0, 1, 4, 0, 5, 6, 0]:
+        st = c.record_access([e])[e]
+        if st is CState.M:
+            c.admit(e)
+    assert len(c.entries) <= 4
+    s = c.summary()
+    assert s["accesses"] == 11
+    assert s["hits"].get("F", 0) + s["misses"] == 11
+    assert s["mode"] == f"flat-{policy}"
+    if policy in ("lru", "lfu"):
+        assert 0 in c.entries          # hottest expert survives
+    assert s["evictions"] == s["transitions"].get("F->M", 0)
 
 
 def test_freq_tracker_ranks():

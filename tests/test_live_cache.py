@@ -1,0 +1,197 @@
+"""Live cache-affinity co-design tests (§3.3 + §3.4 in the real engine):
+
+* pool dispatch/eviction + residency-state invariants while the threaded
+  engine replays a skewed activation trace,
+* cache_summary() telemetry is live (non-zero pool hits, transitions),
+* flat vs hierarchical serving produce bit-identical logits (losslessness:
+  the cache layout is a latency/memory knob, never a semantics knob),
+* per-step Algorithm-1 submission (submit_step) reconstructs the demand
+  subset without waiting for the speculative tail.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.cache import POOL_ORDER
+from repro.core.engine import ZipMoEEngine
+from repro.core.states import CState
+from repro.core.store import ExpertStore, build_store
+from repro.core.workload import zipf_trace
+from repro.models import init_params
+from repro.serving.zipserve import ZipServer
+
+POOLS = {"F": 2, "C": 2, "S": 2, "E": 2}
+
+
+@pytest.fixture(scope="module")
+def moe2_setup(tmp_path_factory):
+    cfg = get_smoke_config("qwen2-moe-a2.7b", n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store_live"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+def _check_pool_invariants(cache):
+    """Residency-state invariants of one layer's pools."""
+    occ = cache.occupancy()
+    for p in POOL_ORDER:
+        assert occ[p] <= cache.cap[p], (p, occ)
+    # an expert lives in at most one of F/C and its payload (when present)
+    # must match the pool's compression state
+    seen = {}
+    for p in POOL_ORDER:
+        for e, ent in cache.pools[p].items():
+            assert e not in seen, f"expert {e} in both {seen[e]} and {p}"
+            seen[e] = p
+            # live pools never hold byte-less placeholders: every resident is
+            # backed by the bytes its pool promises (demotion downgrades the
+            # payload or drops the entry), so pool hits are honest hits
+            assert ent.payload is not None, (p, e)
+            if p == "F":
+                assert ent.payload.full, e
+            elif p == "C":
+                assert ent.payload.sm and ent.payload.e, e
+            elif p == "S":
+                assert ent.payload.sm, e
+            elif p == "E":
+                assert ent.payload.e, e
+    # residency() must agree with pool membership
+    for e, p in seen.items():
+        st = cache.residency(e)
+        if p == "F":
+            assert st is CState.F
+        elif p == "C":
+            assert st is CState.C
+        else:
+            assert st in (CState.C, CState.S, CState.E), (e, p, st)
+
+
+def test_engine_pool_invariants_under_replayed_trace(moe2_setup):
+    """Replay a Zipf trace through the threaded engine; after every step the
+    pools must respect capacities, uniqueness, payload-residency agreement,
+    and the summary's accounting identities."""
+    cfg, params, d = moe2_setup
+    eng = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=3, pool_sizes=POOLS)
+    try:
+        trace = zipf_trace(cfg.n_experts, cfg.top_k, 30, alpha=1.2, seed=7)
+        for sel in trace:
+            out, _ = eng.fetch_experts(0, sorted(sel))
+            assert set(out) == set(sel)
+            cache = eng.caches[0]
+            _check_pool_invariants(cache)
+            assert not cache.pinned      # pins released after every fetch
+        s = eng.cache_summary()
+        assert s["accesses"] == sum(s["hits"].values()) + s["misses"]
+        assert s["accesses"] == sum(len(sel) for sel in trace)
+        assert sum(s["transitions"].values()) > 0
+    finally:
+        eng.shutdown()
+
+
+def test_submit_step_demand_vs_speculative(moe2_setup):
+    """result() must return exactly the demand subset (bit-exact) without
+    requiring the speculative tail; spec_result() waits for the whole job
+    and returns every expert (demand included, so a re-selected expert next
+    step is a prediction hit)."""
+    cfg, params, d = moe2_setup
+    store = ExpertStore(d)
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts, n_layers=cfg.n_layers,
+                       L=3, pool_sizes={"F": 0, "C": 0, "S": 0, "E": 0})
+    try:
+        h = eng.submit_step(0, selected=[0, 1], predicted=[2, 3, 4])
+        demand, _ = h.result()
+        assert set(demand) == {0, 1}
+        spec, _ = h.spec_result()
+        assert set(spec) == {0, 1, 2, 3, 4}
+        for e, w in {**demand, **spec}.items():
+            ref = store.load_group((0, e))
+            for name, arr in w.items():
+                assert np.array_equal(np.asarray(arr, np.float32),
+                                      np.asarray(ref[name], np.float32))
+    finally:
+        eng.shutdown()
+
+
+def test_zipserver_decode_consults_cache(moe2_setup):
+    """Acceptance: the live decode path must drive the hierarchical cache —
+    non-zero pool hit/miss counts and residency transitions in
+    cache_summary() after a few steps."""
+    cfg, params, d = moe2_setup
+    zs = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=True)
+    try:
+        caches = zs.init_cache(2, 8 + 6)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        zs.generate(tok, caches, 8, max_new_tokens=6)
+        s = zs.cache_summary()
+        assert s["mode"] == "hier"
+        assert s["accesses"] > 0
+        assert sum(s["hits"].values()) > 0, s
+        assert sum(s["transitions"].values()) > 0, s
+        per = zs.cache_summary(per_layer=True)["layers"]
+        assert set(per) == set(range(cfg.n_layers))
+        for cache in zs.engine.caches.values():
+            _check_pool_invariants(cache)
+    finally:
+        zs.close()
+
+
+def test_no_duplicate_chunk_reads_with_ample_cache(moe2_setup):
+    """Regression: with an F pool large enough that nothing is ever evicted,
+    steady-state decode must never re-read a chunk — the next step's
+    prediction is submitted only after the prior job's experts are admitted,
+    so in-flight experts can't be speculatively re-fetched."""
+    cfg, params, d = moe2_setup
+    zs = ZipServer(params, cfg, d, L=3, prefetch=True,
+                   pool_sizes={"F": cfg.n_experts, "C": 0, "S": 0, "E": 0})
+    try:
+        store = zs.engine.store
+        io0 = store.io_bytes            # constructor profiling reads
+        caches = zs.init_cache(2, 8 + 10)
+        zs.generate(jnp.zeros((2, 1), jnp.int32), caches, 8,
+                    max_new_tokens=10)
+        served = store.io_bytes - io0
+        total_chunk_bytes = sum(g.sm_bytes + g.e_bytes
+                                for g in store.groups.values())
+        assert served <= total_chunk_bytes, (
+            f"duplicate chunk reads: {served} bytes read, "
+            f"store holds only {total_chunk_bytes}")
+    finally:
+        zs.close()
+
+
+@pytest.mark.parametrize("flat_policy", ["lru", "lfu"])
+def test_flat_vs_hier_serving_bitidentical(moe2_setup, flat_policy):
+    """Losslessness across cache layouts: flat full-tensor serving and
+    hierarchical serving must produce bit-identical logits."""
+    cfg, params, d = moe2_setup
+    steps, B, S = 5, 2, 12
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (B, 1)),
+        jnp.int32)
+
+    def decode(zs):
+        caches = zs.init_cache(B, S + steps)
+        out, tok = [], tokens
+        for i in range(steps):
+            lg, caches = zs.decode_step(tok, caches, S - 1 + i)
+            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            out.append(np.asarray(lg, np.float32))
+        return np.stack(out)
+
+    zs_h = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=True)
+    zs_f = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=True,
+                     cache_mode="flat", flat_policy=flat_policy)
+    try:
+        ref = decode(zs_h)
+        out = decode(zs_f)
+        assert np.array_equal(ref, out)
+        sf = zs_f.cache_summary()
+        assert sf["mode"] == f"flat-{flat_policy}"
+        assert sf["accesses"] > 0 and set(sf["hits"]) <= {"F"}
+    finally:
+        zs_h.close()
+        zs_f.close()

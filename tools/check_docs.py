@@ -1,0 +1,93 @@
+"""Docs smoke checker (CI `docs` job).
+
+Keeps README.md / DESIGN.md honest without running the full stack:
+
+1. **Snippet extraction** — every fenced ```python block must compile
+   (`python -c`-style syntax smoke), and every `python <file>` /
+   `python -m <module>` invocation inside ```bash blocks must point at a
+   file / module that exists in the repo.
+2. **Intra-repo links** — every relative markdown link target must exist.
+3. **Repo-map paths** — every `src/...`, `tests/...`, `examples/...`,
+   `benchmarks/...` path mentioned in backticks must exist.
+
+Usage:  python tools/check_docs.py [files...]   (defaults to README.md DESIGN.md)
+Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_DOCS = ["README.md", "DESIGN.md"]
+
+FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
+PY_FILE_RE = re.compile(r"python\s+([\w./-]+\.py)")
+PY_MOD_RE = re.compile(r"python\s+-m\s+([\w.]+)")
+PATH_RE = re.compile(r"`((?:src|tests|examples|benchmarks|tools)/[\w./-]+)`")
+
+
+def module_exists(mod: str) -> bool:
+    rel = Path(*mod.split("."))
+    for base in (ROOT, ROOT / "src"):
+        if (base / rel).with_suffix(".py").exists() or \
+                (base / rel / "__init__.py").exists():
+            return True
+    try:                               # installed third-party (e.g. pytest)
+        import importlib.util
+        return importlib.util.find_spec(mod.split(".")[0]) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+def check_doc(path: Path) -> list:
+    errs = []
+    text = path.read_text()
+    for lang, body in FENCE_RE.findall(text):
+        if lang == "python":
+            try:
+                compile(body, f"{path.name}:snippet", "exec")
+            except SyntaxError as e:
+                errs.append(f"{path.name}: python snippet fails to compile: {e}")
+        if lang in ("bash", "sh", "", "console"):
+            for f in PY_FILE_RE.findall(body):
+                if not (ROOT / f).exists():
+                    errs.append(f"{path.name}: bash snippet references "
+                                f"missing file {f}")
+            for mod in PY_MOD_RE.findall(body):
+                if not module_exists(mod):
+                    errs.append(f"{path.name}: bash snippet references "
+                                f"missing module {mod}")
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not (path.parent / target).exists():
+            errs.append(f"{path.name}: broken intra-repo link -> {target}")
+    for p in PATH_RE.findall(text):
+        if not (ROOT / p).exists():
+            errs.append(f"{path.name}: repo path does not exist -> {p}")
+    return errs
+
+
+def main(argv):
+    docs = argv or DEFAULT_DOCS
+    errors = []
+    for name in docs:
+        p = ROOT / name
+        if not p.exists():
+            errors.append(f"{name}: file missing")
+            continue
+        errors.extend(check_doc(p))
+    if errors:
+        print("docs check FAILED:")
+        for e in errors:
+            print("  -", e)
+        return 1
+    print(f"docs check OK ({', '.join(docs)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
