@@ -1,14 +1,18 @@
 """Fig. 10: cache-management ablation — eviction policies (FIFO/Marking/LRU
 vs rank-based) and hierarchical planning on/off; latency-throughput frontier.
 
-Two halves:
+Three parts:
 * ``fig10/*`` — the paper-scale simulator (``ZipMoESim``) sweep.
 * ``fig10_live/*`` — the same ablation on the *live* engine: a real
   ZipServer decode loop on the 2-layer dry-run config, flat full-tensor
   caches (fifo/lru/lfu) vs the hierarchical F≺C≺S≺E pools at equal expert
   capacity.  TPOT, blocked fetch time, and pool hit rate per variant — the
   losslessness invariant (identical logits across variants) is pinned by
-  tests/test_live_cache.py."""
+  tests/test_live_cache.py.
+* ``fig10_drift/*`` — FreqTracker forgetting under popularity drift: a
+  ``zipf_trace(shuffle_every=...)`` replayed through the live engine with
+  decay 1.0 (never forget) vs decay < 1, reporting steady-state hit rate
+  from the windowed ``cache_summary`` series (warm-up windows excluded)."""
 from __future__ import annotations
 
 import numpy as np
@@ -96,9 +100,63 @@ def run_live(rows: Rows, *, steps: int = 10):
                  f"blocked_s={blocked:.3f} wall_s={wall:.2f} "
                  f"evictions={cs['evictions']}")
         zs.close()
+    run_drift(rows)
+
+
+def run_drift(rows: Rows, *, steps: int = 120, window: int = 20):
+    """FreqTracker decay under a drifting trace (live engine replay).
+
+    ``zipf_trace(shuffle_every=...)`` slowly permutes which experts occupy
+    the popular ranks; with decay=1.0 the tracker never forgets the old
+    regime, so dispatch keeps privileging stale experts.  Replays the same
+    trace at several decay values through one engine layer at
+    eviction-inducing capacity and reports the *steady-state* hit rate
+    (last windows of the per-``window``-steps series — the warm-up windows
+    are reported separately, which is exactly what the windowed
+    ``cache_summary`` exists for)."""
+    import tempfile
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.engine import ZipMoEEngine
+    from repro.core.store import ExpertStore, build_store
+    from repro.core.workload import zipf_trace
+    from repro.models import init_params
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b", n_layers=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = tempfile.mkdtemp(prefix="zipmoe-drift-")
+    build_store(params, cfg, d, k_shards=4)
+    trace = zipf_trace(cfg.n_experts, cfg.top_k, steps, alpha=1.2, seed=11,
+                       shuffle_every=10)
+    pools = {"F": 1, "C": 1, "S": 1, "E": 1}   # capacity < n_experts
+    for decay in (1.0, 0.95, 0.8):
+        eng = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts,
+                           n_layers=cfg.n_layers, L=3, pool_sizes=pools,
+                           freq_decay=decay)
+        eng.enable_cache_windows(window)
+        try:
+            for sel in trace:
+                eng.fetch_experts(0, sorted(sel))
+                eng.note_step()
+            s = eng.cache_summary(windows=True)
+            ws = s["windows"]
+            warm = ws[0]["hit_rate"] if ws else 0.0
+            # steady state = last half of the windows (the early windows are
+            # still warming the pools and would understate the decay effect)
+            tail = ws[len(ws) // 2:] if len(ws) > 1 else ws
+            steady = (sum(w["hit_rate"] for w in tail) / len(tail)
+                      if tail else warm)
+            rows.add(f"fig10_drift/decay{decay}/steady_hit_rate",
+                     steady * 1e6,
+                     f"warmup_window={warm:.3f} cumulative={s['hit_rate']:.3f} "
+                     f"evictions={s['evictions']} windows={len(ws)}")
+        finally:
+            eng.shutdown()
 
 
 if __name__ == "__main__":
     r = Rows()
-    run(r)                      # includes run_live
+    run(r)                      # includes run_live + run_drift
     r.emit()

@@ -6,7 +6,9 @@ Plus the serving-level overlap measurement (beyond-paper): the real
 ``ZipServer`` decode loop on the deepseekv2-lite dry-run config, reporting
 the hidden-fetch fraction (fetch wall time overlapped with compute / total
 fetch wall time) and TPOT for the synchronous per-expert-loop path (before)
-vs the overlapped-prefetch grouped-GEMM path (after)."""
+vs the overlapped-prefetch grouped-GEMM path (after), and for the §3.3
+scheduler upgrade: profiled per-expert p-times + a cross-layer block
+schedule vs the constant-p single-layer submission."""
 from __future__ import annotations
 
 import time
@@ -112,6 +114,12 @@ def run_serving_overlap(rows: Rows, *, steps: int = 12, batch: int = 2,
         ("before_sync_loop", dict(prefetch=False, ffn_impl="loop")),
         ("sync_grouped", dict(prefetch=False, ffn_impl="grouped")),
         ("after_prefetch_grouped", dict(prefetch=True, ffn_impl="grouped")),
+        # §3.3 ablation: measured p_n (GemmProfiler) + one block schedule
+        # spanning the next MoE layer's predictions, vs the constant-p
+        # single-layer row above
+        ("profiled_p_cross_layer", dict(prefetch=True, ffn_impl="grouped",
+                                        profile_p_times=True,
+                                        cross_layer_depth=1)),
     ]
     tpots, blocked = {}, {}
     for name, kw in variants:
@@ -130,7 +138,8 @@ def run_serving_overlap(rows: Rows, *, steps: int = 12, batch: int = 2,
         rows.add(f"serving_overlap/tpot_{name}", tpot * 1e6,
                  f"blocked_fetch_per_step={blk*1e3:.2f}ms")
         if kw["prefetch"]:
-            rows.add("serving_overlap/hidden_fetch_frac",
+            tag = "" if name == "after_prefetch_grouped" else f"_{name}"
+            rows.add(f"serving_overlap/hidden_fetch_frac{tag}",
                      ov["hidden_frac"] * 1e6,
                      f"hidden={ov['hidden_fetch_s']*1e3:.2f}ms of "
                      f"{ov['total_fetch_s']*1e3:.2f}ms; "
@@ -143,6 +152,10 @@ def run_serving_overlap(rows: Rows, *, steps: int = 12, batch: int = 2,
     rows.add("serving_overlap/tpot_speedup", 0.0,
              f"{speedup:.2f}x (host_cores={os.cpu_count()}; "
              f"blocked-fetch reduction {blk_red:.2f}x)")
+    rows.add("serving_overlap/profiled_cross_layer_vs_constant", 0.0,
+             f"tpot {tpots['after_prefetch_grouped'] / max(tpots['profiled_p_cross_layer'], 1e-12):.2f}x; "
+             f"blocked-fetch {blocked['after_prefetch_grouped'] / max(blocked['profiled_p_cross_layer'], 1e-12):.2f}x "
+             f"vs constant-p single-layer prefetch")
 
 
 if __name__ == "__main__":

@@ -17,12 +17,22 @@ point of the §3.3/§3.4 co-design — it takes the router's *selected* experts
 I/O thread and the workers drain the whole step's reconstruction work in
 block priority order: demand tensors first (their blocks sort ahead via the
 expert-execution-time priority p), predicted tensors behind them, E-chunks
-before SM-chunks within each block.  The returned :class:`FetchHandle` is
-two-phase: ``result()`` blocks only until the demand subset is recovered
-(the decode step can run its FFN), while the speculative tail keeps
-reconstructing in the background and is collected next step via
-``spec_result()``.  :meth:`prefetch_experts` / :meth:`fetch_experts` are the
-single-class wrappers (all-demand or all-speculative jobs).
+before SM-chunks within each block.  :meth:`submit_steps` is the
+cross-layer generalisation: one block list spanning layer i's step plus
+later layers' predictions, with per-task ``(layer, expert)`` identity so
+the I/O thread sequences work across layers under a single priority order.
+Execution-time priorities are either the class constants or *profiled*
+per-expert p-times (``p_times`` per part, fed from
+``core/profiles.GemmProfiler``) — classes stay strictly tiered (demand ≻
+near-layer predictions ≻ far-layer predictions) no matter what the
+measurements say.  The returned :class:`FetchHandle` is two-phase:
+``result()`` blocks only until the demand subset is recovered (the decode
+step can run its FFN), while the speculative tail keeps reconstructing in
+the background and is collected next step via ``spec_result()``;
+``result_subset(ids, layer=j)`` waits on exactly one layer's named experts
+and never on another layer's tail.  :meth:`prefetch_experts` /
+:meth:`fetch_experts` are the single-class wrappers (all-demand or
+all-speculative jobs).
 
 Demand jobs are *urgent*: they jump the I/O queue ahead of speculative work,
 and a running job yields to newly-arrived urgent jobs at block boundaries
@@ -85,34 +95,44 @@ class FetchStats:
 class _FetchJob:
     """All shared state of one in-flight fetch (owned by the engine pool).
 
-    A job covers one layer's *demand* experts (the router's current
-    selection, waited on by ``FetchHandle.result()``) plus optional
-    *speculative* experts (next-step predictions, collected later via
-    ``spec_result()``) under a single Algorithm-1 block schedule."""
+    A job covers *demand* experts (the router's current selection for its
+    primary layer, waited on by ``FetchHandle.result()``) plus optional
+    *speculative* experts — next-step predictions for the same layer and,
+    for cross-layer submissions, for later layers — under a single
+    Algorithm-1 block schedule.  Expert identity is ``(layer, expert)``
+    throughout: one block list may carry the same expert id for two
+    different layers."""
 
-    def __init__(self, seq: int, layer: int, expert_ids: List[int],
-                 demand_ids: List[int]):
+    def __init__(self, seq: int, parts: List[Tuple[int, List[int], List[int]]]):
+        # parts: ordered [(layer, selected, predicted)]; demand (selected)
+        # may only appear in the first part — result() waits one layer's
+        # demand set, never a union across layers
         self.seq = seq
-        self.layer = layer
-        self.expert_ids = expert_ids
-        self.demand_ids = set(demand_ids)
-        self.speculative = not self.demand_ids    # pure-prediction job
+        self.parts = parts
+        self.layers = [l for l, _, _ in parts]
+        self.layer = self.layers[0]              # primary layer
+        self.demand_keys = {(parts[0][0], int(e)) for e in parts[0][1]}
+        self.expert_keys: List[Tuple[int, int]] = [
+            (l, int(e)) for l, sel, pred in parts
+            for e in list(sel) + list(pred)]
+        self.speculative = not self.demand_keys   # pure-prediction job
         self.last_demand_io_blk = -1   # last block index with demand I/O
         self.t_submit = time.perf_counter()
         self.t_ready: Optional[float] = None
         self.t_demand_ready: Optional[float] = None
         self.tasks: List[Task] = []
         self.blocks: List[List[Task]] = []
-        self.metas: Dict[int, Tuple[int, int]] = {}       # uid -> (expert, tidx)
+        self.metas: Dict[int, Tuple[int, int, int]] = {}  # uid -> (layer, e, tidx)
         self.task_by_uid: Dict[int, Task] = {}
         self.prio: Dict[int, int] = {}
         self.urg: Dict[int, int] = {}   # uid -> 0 (demand) / 1 (speculative)
-        self.payloads: Dict[int, ExpertPayload] = {}
+        self.payloads: Dict[Tuple[int, int], ExpertPayload] = {}
         self.e_data: Dict[Tuple[int, int], bytes] = {}    # (uid, shard)
         self.sm_data: Dict[int, bytes] = {}               # uid -> sm bytes
         self.dec_out: Dict[Tuple[int, int], np.ndarray] = {}
         self.dec_needed: Dict[int, int] = {}
-        self.done_tensors: Dict[Tuple[int, int], np.ndarray] = {}
+        # (layer, expert, tidx) -> recovered tensor
+        self.done_tensors: Dict[Tuple[int, int, int], np.ndarray] = {}
         self.claimed: set = set()                         # uids being recovered
         self.n_done = 0
         self.n_total = 0
@@ -124,7 +144,7 @@ class _FetchJob:
         self.io_reported = 0
         self.dec_reported = 0
         self.wall_reported = 0.0
-        self.collected: set = set()    # experts already admitted to the cache
+        self.collected: set = set()    # (layer, e) already admitted to cache
         self.unpinned: set = set()     # demand pins this job already released
         self.stats = FetchStats()
         self.done_ev = threading.Event()
@@ -137,9 +157,15 @@ class FetchHandle:
     ``result()`` blocks only until the job's *demand* subset is
     reconstructed, assembles those tensors, and admits them to the cache
     pools (unpinning them).  ``spec_result()`` blocks until the whole job —
-    including the speculative prediction tail — is done and collects the
-    remaining experts.  For single-class jobs (plain ``fetch_experts`` /
-    speculative ``prefetch_experts``) ``result()`` covers every expert."""
+    including the speculative prediction tail, across every covered layer —
+    is done and collects the remaining experts.  For single-class jobs
+    (plain ``fetch_experts`` / speculative ``prefetch_experts``)
+    ``result()`` covers every expert.
+
+    Returned weight dicts are keyed by expert id when the collected subset
+    lives in one layer (the common case — demand is always single-layer),
+    and by ``(layer, expert)`` when a multi-layer speculative tail is
+    collected at once."""
 
     def __init__(self, engine: "ZipMoEEngine", job: _FetchJob):
         self._engine = engine
@@ -153,49 +179,68 @@ class FetchHandle:
         return self._job.layer
 
     @property
+    def layers(self) -> List[int]:
+        return list(self._job.layers)
+
+    @property
     def expert_ids(self) -> List[int]:
-        return list(self._job.expert_ids)
+        """Primary-layer expert ids (use ``expert_keys`` cross-layer)."""
+        return [e for l, e in self._job.expert_keys if l == self._job.layer]
+
+    @property
+    def expert_keys(self) -> List[Tuple[int, int]]:
+        return list(self._job.expert_keys)
 
     def done(self) -> bool:
         return self._job.done_ev.is_set()
+
+    @staticmethod
+    def _flatten(out: Dict[Tuple[int, int], Dict[str, np.ndarray]]):
+        """{(layer, e): w} -> {e: w} when one layer is covered."""
+        if len({l for l, _ in out}) <= 1:
+            return {e: w for (_, e), w in out.items()}
+        return out
 
     def result(self) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
         """Weights of the demand experts (all experts for single-class jobs)."""
         job = self._job
         if self._result is None:
-            subset = sorted(job.demand_ids) if job.demand_ids else \
-                list(job.expert_ids)
-            ev = job.demand_ev if job.demand_ids else job.done_ev
+            subset = sorted(job.demand_keys) if job.demand_keys else \
+                list(job.expert_keys)
+            ev = job.demand_ev if job.demand_keys else job.done_ev
             t0 = time.perf_counter()
             ev.wait()
             self.wait_s = time.perf_counter() - t0
-            self._result = self._engine._collect(job, subset)
+            out, stats = self._engine._collect(job, subset)
+            self._result = (self._flatten(out), stats)
         return self._result
 
-    def result_subset(self, experts: Sequence[int]
+    def result_subset(self, experts: Sequence[int], layer: Optional[int] = None
                       ) -> Tuple[Dict[int, Dict[str, np.ndarray]],
                                  FetchStats]:
-        """Weights of just `experts` (a subset of the job's ids), waiting
-        only until THEIR tensors are recovered — never on the rest of the
-        job.  Lets a consumer of a prediction job block on exactly the
-        experts the router actually selected while the unused tail keeps
-        reconstructing in the background."""
+        """Weights of just `experts` of `layer` (default: the primary
+        layer), waiting only until THEIR tensors are recovered — never on
+        the rest of the job, and in particular never on another layer's
+        speculative tail.  Lets a consumer of a prediction job block on
+        exactly the experts the router actually selected while the unused
+        tail keeps reconstructing in the background."""
         job = self._job
-        want = {int(e) for e in experts}
-        assert want <= set(job.expert_ids), (want, job.expert_ids)
+        l = job.layer if layer is None else int(layer)
+        want = {(l, int(e)) for e in experts}
+        assert want <= set(job.expert_keys), (want, job.expert_keys)
         eng = self._engine
         t0 = time.perf_counter()
         with eng._cv:
             def ready():
                 return all(job.metas[t.uid] in job.done_tensors
-                           for t in job.tasks if t.expert in want)
+                           for t in job.tasks if t.expert_key in want)
             while not (job.done_ev.is_set() or ready()):
                 eng._cv.wait(0.1)
         self.wait_s = time.perf_counter() - t0
-        return eng._collect(job, sorted(want))
+        out, stats = eng._collect(job, sorted(want))
+        return self._flatten(out), stats
 
-    def spec_result(self) -> Tuple[Dict[int, Dict[str, np.ndarray]],
-                                   FetchStats]:
+    def spec_result(self) -> Tuple[Dict, FetchStats]:
         """Weights of ALL the job's experts (demand + speculative tail);
         waits for the whole job.  Already-collected experts are returned
         without re-admission; reported stats cover only the increment past
@@ -205,8 +250,8 @@ class FetchHandle:
             t0 = time.perf_counter()
             job.done_ev.wait()
             self.wait_s = time.perf_counter() - t0
-            self._spec_result = self._engine._collect(job,
-                                                      list(job.expert_ids))
+            out, stats = self._engine._collect(job, list(job.expert_keys))
+            self._spec_result = (self._flatten(out), stats)
         return self._spec_result
 
 
@@ -217,18 +262,26 @@ class ZipMoEEngine:
                  L: int = 4, pool_sizes: Optional[Dict[str, int]] = None,
                  recover_fn: Optional[Callable] = None, delta: int = 1,
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
-                 flat_policy: str = "lru"):
+                 flat_policy: str = "lru", freq_decay: float = 1.0):
         assert cache_mode in ("hier", "flat")
+        assert 0.0 < freq_decay <= 1.0, freq_decay
         self.store = store
         self.L = L
         self.cache_mode = cache_mode
+        self.freq_decay = freq_decay
         self.recover = recover_fn or (lambda e, sm, shape: bitfield.reconstruct_np(
             e, np.frombuffer(sm, np.uint8), shape))
         sizes = pool_sizes or {"F": 4, "C": 4, "S": 8, "E": 8}
         self.caches: Dict[int, object] = {}
         self.trackers: Dict[int, FreqTracker] = {}
+        # windowed cache telemetry (§3.4): note_step() closes a per-N-steps
+        # window of hit/miss/eviction deltas when enabled
+        self._window_every = 0
+        self._window_steps = 0
+        self._windows: List[Dict[str, object]] = []
+        self._window_base: Optional[Dict[str, object]] = None
         for l in range(n_layers):
-            tr = FreqTracker(n_experts)
+            tr = FreqTracker(n_experts, decay=freq_decay)
             self.trackers[l] = tr
             if cache_mode == "flat":
                 cap = flat_capacity if flat_capacity is not None \
@@ -279,8 +332,20 @@ class ZipMoEEngine:
 
     # ------------------------------------------------------------------
     def profile(self, layer: int = None, expert: int = None, reps: int = 3):
-        """Measure u (SM read) and c (E-chunk decompress) on this host."""
-        key = next(iter(self.store.groups)) if layer is None else (layer, expert)
+        """Measure u (SM read) and c (E-chunk decompress) on this host.
+
+        ``layer``/``expert`` pick the probe group; omitting ``expert`` uses
+        the layer's first expert group (regression: ``profile(layer=L)``
+        used to die with ``KeyError: (L, None)``)."""
+        if layer is None:
+            key = next(iter(self.store.groups))
+        else:
+            if expert is None:
+                expert = min((e for (l, e) in self.store.groups if l == layer),
+                             default=None)
+                if expert is None:
+                    raise KeyError(f"no expert groups for layer {layer}")
+            key = (layer, expert)
         g = self.store.groups[key]
         t0 = time.perf_counter()
         for _ in range(reps):
@@ -367,11 +432,65 @@ class ZipMoEEngine:
         to report steady state after a warmup pass."""
         for cache in self.caches.values():
             cache.reset_stats()
+        if self._window_every:
+            self._window_base = self._cache_counters()
 
-    def cache_summary(self, per_layer: bool = False) -> Dict[str, object]:
+    # ---- windowed telemetry (warm-up vs steady state) --------------------
+    def _cache_counters(self) -> Dict[str, object]:
+        """Cumulative hit/miss/eviction counters summed across layers."""
+        hits = collections.Counter()
+        misses = evictions = 0
+        for cache in self.caches.values():
+            hits.update(cache.hits)
+            misses += cache.misses
+            evictions += cache.evictions
+        return {"hits": hits, "misses": misses, "evictions": evictions}
+
+    def enable_cache_windows(self, every: int):
+        """Record a hit/miss/eviction delta snapshot every `every` calls to
+        :meth:`note_step` — benchmarks read the series via
+        ``cache_summary(windows=True)`` to separate warm-up from steady
+        state.  ``every=0`` disables."""
+        self._window_every = max(0, int(every))
+        self._window_steps = 0
+        self._windows = []
+        self._window_base = self._cache_counters() if self._window_every \
+            else None
+
+    def note_step(self):
+        """Advance the windowed-telemetry step clock (one decode step).  The
+        serving layer calls this once per ``decode_step``; benchmarks
+        replaying traces call it once per trace step."""
+        if not self._window_every:
+            return
+        self._window_steps += 1
+        if self._window_steps % self._window_every == 0:
+            cur = self._cache_counters()
+            base = self._window_base
+            hits = {k: v - base["hits"].get(k, 0)
+                    for k, v in cur["hits"].items()
+                    if v - base["hits"].get(k, 0)}
+            n_hits = sum(hits.values())
+            misses = cur["misses"] - base["misses"]
+            acc = n_hits + misses
+            self._windows.append({
+                "step_end": self._window_steps,
+                "steps": self._window_every,
+                "hits": hits,
+                "misses": misses,
+                "hit_rate": n_hits / acc if acc else 0.0,
+                "evictions": cur["evictions"] - base["evictions"],
+            })
+            self._window_base = cur
+
+    def cache_summary(self, per_layer: bool = False,
+                      windows: bool = False) -> Dict[str, object]:
         """Aggregate §3.4 cache telemetry across layers (same schema as the
         per-layer summaries, via cache.pool_summary).  ``per_layer=True``
-        appends each layer's own summary."""
+        appends each layer's own summary; ``windows=True`` appends the
+        per-N-steps delta series recorded by :meth:`note_step` (see
+        :meth:`enable_cache_windows`) so consumers can split warm-up from
+        steady state instead of reading cumulative totals only."""
         hits = collections.Counter()
         transitions = collections.Counter()
         occupancy = collections.Counter()
@@ -394,6 +513,9 @@ class ZipMoEEngine:
                            transitions, evictions, pinned)
         if per_layer:
             out["layers"] = layers
+        if windows:
+            out["window_steps"] = self._window_every
+            out["windows"] = [dict(w) for w in self._windows]
         return out
 
     # ------------------------------------------------------------------
@@ -412,8 +534,9 @@ class ZipMoEEngine:
             return self.submit_step(layer, [], expert_ids, p_times)
         return self.submit_step(layer, expert_ids, [], p_times)
 
-    # demand experts sort ahead of predictions inside build_blocks via the
-    # expert-execution-time priority p (Algorithm 1 orders non-increasing p)
+    # class fallbacks when no profiled p-times are supplied: demand experts
+    # sort ahead of predictions inside build_blocks via the expert-execution
+    # -time priority p (Algorithm 1 orders non-increasing p)
     _DEMAND_P = 1e-4
     _SPEC_P = 1e-6
 
@@ -426,25 +549,92 @@ class ZipMoEEngine:
         caller's ``result()`` blocks on exactly these), ``predicted`` the
         forecast for the layer's *next* step (speculative: reconstructed
         behind the demand work under the same Algorithm-1 block schedule and
-        collected later via ``spec_result()``).  Returns immediately; the
-        I/O thread and the L decompression workers drain the blocks in
-        priority order while the caller computes.
+        collected later via ``spec_result()``).  ``p_times`` maps expert id
+        to its measured execution time (see core/profiles.GemmProfiler);
+        without it the class constants apply.  Single-layer wrapper over
+        :meth:`submit_steps`."""
+        return self.submit_steps([(layer, selected, predicted, p_times)])
+
+    def submit_steps(self, parts: Sequence[Tuple[int, Sequence[int],
+                                                 Sequence[int],
+                                                 Optional[Dict[int, float]]]]
+                     ) -> FetchHandle:
+        """Enqueue one *cross-layer* schedule: a single Algorithm-1 block
+        list covering layer i's step (selected + predicted) plus later
+        layers' predictions, drained by the I/O thread and workers in one
+        priority order so the pipeline sequences work across layers too.
+
+        ``parts`` is an ordered list of ``(layer, selected, predicted,
+        p_times)`` — layers distinct, demand (``selected``) only allowed in
+        the first part (``result()`` waits exactly one layer's demand set;
+        ``result_subset(ids, layer=j)`` waits one layer's named experts).
+
+        Priorities: within each class, profiled p-times order experts by
+        true execution cost (Algorithm 1 sorts non-increasing p).  Classes
+        are then *tiered* — demand strictly ahead of the primary layer's
+        predictions, which sort strictly ahead of the next layer's, and so
+        on — by rescaling each tier below the minimum of the previous one
+        (relative order within a tier is preserved).  A profiled
+        speculative p can therefore never outrank demand work, and a far
+        layer's prediction can never starve a near layer's.
 
         Selected ids are recorded in the frequency tracker / hit stats and
         pinned against eviction until their admission; predicted ids are NOT
         recorded (mispredictions must not feed the workload model) — the
         serving layer records true accesses via :meth:`note_access`.
         """
-        sel = sorted({int(e) for e in selected})
-        pred = [int(e) for e in predicted if int(e) not in set(sel)]
-        ids = sorted(set(sel) | set(pred))
-        job = _FetchJob(next(self._seq), layer, ids, sel)
-        cache = self.caches[layer]
-        if sel:
-            cache.record_access(sel)
-            cache.pin(sel)
-        job.payloads = {e: self._payload(layer, e) or ExpertPayload()
-                        for e in ids}
+        norm: List[Tuple[int, List[int], List[int]]] = []
+        p_in: List[Optional[Dict[int, float]]] = []
+        for pi, (layer, selected, predicted, *rest) in enumerate(parts):
+            sel = sorted({int(e) for e in selected})
+            assert pi == 0 or not sel, \
+                "demand experts only allowed in the first part"
+            pred, seen = [], set(sel)
+            for e in predicted:
+                e = int(e)
+                if e not in seen:
+                    seen.add(e)
+                    pred.append(e)
+            if sel or pred:
+                norm.append((int(layer), sel, pred))
+                p_in.append(rest[0] if rest else None)
+        assert norm, "empty submission"
+        layers_seen = [l for l, _, _ in norm]
+        assert len(set(layers_seen)) == len(layers_seen), \
+            f"duplicate layers in one submission: {layers_seen}"
+        job = _FetchJob(next(self._seq), norm)
+        demand = job.demand_keys
+        for pi, (layer, sel, pred) in enumerate(norm):
+            if sel:
+                cache = self.caches[layer]
+                cache.record_access(sel)
+                cache.pin(sel)
+        job.payloads = {(l, e): self._payload(l, e) or ExpertPayload()
+                        for l, e in job.expert_keys}
+
+        # ---- per-key execution-time priorities (tiered classes) ----------
+        key_p: Dict[Tuple[int, int], float] = {}
+        tiers: List[Dict[Tuple[int, int], float]] = []
+        d_tier = {}
+        for pi, (layer, sel, pred) in enumerate(norm):
+            pt = p_in[pi] or {}
+            for e in sel:
+                d_tier[(layer, e)] = float(pt.get(e, self._DEMAND_P))
+        tiers.append(d_tier)
+        for pi, (layer, sel, pred) in enumerate(norm):
+            pt = p_in[pi] or {}
+            tiers.append({(layer, e): float(pt.get(e, self._SPEC_P))
+                          for e in pred})
+        floor = None
+        for tier in tiers:
+            if not tier:
+                continue
+            hi = max(tier.values())
+            if floor is not None and hi >= floor:
+                scale = 0.5 * floor / max(hi, 1e-30)
+                tier = {k: v * scale for k, v in tier.items()}
+            floor = min(tier.values())
+            key_p.update(tier)
 
         # ---- build the task set (one task per tensor) --------------------
         # Effective per-tensor state is derived from what the payload actually
@@ -464,44 +654,46 @@ class ZipMoEEngine:
             return CState.M
 
         uid = 0
-        demand = job.demand_ids
-        for e in ids:
-            g = self.store.groups[(layer, e)]
-            base_p = (p_times or {}).get(
-                e, self._DEMAND_P if e in demand else self._SPEC_P)
+        for (l, e) in job.expert_keys:
+            g = self.store.groups[(l, e)]
+            base_p = key_p[(l, e)]
             for tidx, tm in enumerate(g.tensors):
-                st_t = tensor_state(job.payloads[e], tidx, len(tm.e_sizes))
+                st_t = tensor_state(job.payloads[(l, e)], tidx,
+                                    len(tm.e_sizes))
                 job.tasks.append(Task(
                     expert=e, tensor=tidx, state=st_t, p=base_p,
                     sm_cost=self.u, e_cost=self.rho * self.u / len(tm.e_sizes),
-                    dec_cost=self.c, k_shards=len(tm.e_sizes), uid=uid))
-                job.metas[uid] = (e, tidx)
+                    dec_cost=self.c, k_shards=len(tm.e_sizes), uid=uid,
+                    layer=l))
+                job.metas[uid] = (l, e, tidx)
                 uid += 1
         job.n_total = len(job.tasks)
-        job.demand_total = sum(1 for t in job.tasks if t.expert in demand)
+        job.demand_total = sum(1 for t in job.tasks
+                               if t.expert_key in demand)
         job.blocks = build_blocks(job.tasks, self.L)
         job.task_by_uid = {t.uid: t for t in job.tasks}
         for i, t in enumerate(t for b in job.blocks for t in b):
             job.prio[t.uid] = i
         # per-task decompression urgency: a mixed step job's prediction tail
         # must not outrank a newer job's demand work on the worker heap
-        job.urg = {t.uid: 0 if t.expert in demand else 1 for t in job.tasks}
+        job.urg = {t.uid: 0 if t.expert_key in demand else 1
+                   for t in job.tasks}
         # the I/O thread may yield to other urgent jobs only once it is past
         # the last block that still carries demand I/O
         for bi, blk in enumerate(job.blocks):
-            if any(t.expert in demand and (t.needs_e_io or t.needs_sm_io)
+            if any(t.expert_key in demand and (t.needs_e_io or t.needs_sm_io)
                    for t in blk):
                 job.last_demand_io_blk = bi
 
         # ---- seed cached components; publish the job to the pool ---------
-        seeded: List[Tuple[int, int, int, int]] = []
+        seeded: List[Tuple[int, int, int, int, int]] = []
         for t in job.tasks:
-            e, tidx = job.metas[t.uid]
-            pl = job.payloads[e]
+            l, e, tidx = job.metas[t.uid]
+            pl = job.payloads[(l, e)]
             if t.state is CState.F:
-                job.done_tensors[(e, tidx)] = pl.full[tidx]
+                job.done_tensors[(l, e, tidx)] = pl.full[tidx]
                 job.n_done += 1
-                if e in demand:
+                if (l, e) in demand:
                     job.demand_done += 1
                 continue
             job.dec_needed[t.uid] = t.k_shards
@@ -546,7 +738,6 @@ class ZipMoEEngine:
                 self._cv.notify_all()
 
     def _io_run_job(self, job: _FetchJob):
-        layer = job.layer
         for bi, blk in enumerate(job.blocks):
             # yield to urgent demand fetches at block boundaries — always for
             # speculative jobs, and for mixed step jobs once their own demand
@@ -560,9 +751,9 @@ class ZipMoEEngine:
                 self._io_run_job(urgent)
             for t in blk:
                 if t.needs_e_io:
-                    e, tidx = job.metas[t.uid]
+                    l, e, tidx = job.metas[t.uid]
                     for k in range(t.k_shards):
-                        data = self.store.read_e((layer, e), tidx, k)
+                        data = self.store.read_e((l, e), tidx, k)
                         with self._cv:
                             job.stats.io_bytes += len(data)
                             job.e_data[(t.uid, k)] = data
@@ -573,8 +764,8 @@ class ZipMoEEngine:
                             self._cv.notify_all()
             for t in blk:
                 if t.needs_sm_io:
-                    e, tidx = job.metas[t.uid]
-                    data = self.store.read_sm((layer, e), tidx)
+                    l, e, tidx = job.metas[t.uid]
+                    data = self.store.read_sm((l, e), tidx)
                     with self._cv:
                         job.stats.io_bytes += len(data)
                         job.sm_data[t.uid] = data
@@ -600,8 +791,8 @@ class ZipMoEEngine:
                 job = self._jobs[seq]
                 data = job.e_data[(uid, k)]
             t = job.task_by_uid[uid]
-            e, tidx = job.metas[uid]
-            plane = self.store.decompress_e((job.layer, e), tidx, k, data)
+            l, e, tidx = job.metas[uid]
+            plane = self.store.decompress_e((l, e), tidx, k, data)
             with self._cv:
                 job.dec_out[(uid, k)] = plane
                 job.dec_needed[uid] -= 1
@@ -626,15 +817,15 @@ class ZipMoEEngine:
     def _finish_tensor(self, job: _FetchJob, t: Task):
         """Bit-splice recovery, off the pool lock (claimed by one thread)."""
         u = t.uid
-        e, tidx = job.metas[u]
+        l, e, tidx = job.metas[u]
         shards = [job.dec_out[(u, k)] for k in range(t.k_shards)]
         exp = np.concatenate(shards)
-        tm = self.store.groups[(job.layer, e)].tensors[tidx]
+        tm = self.store.groups[(l, e)].tensors[tidx]
         arr = self.recover(exp, job.sm_data[u], tm.shape)
         with self._cv:
-            job.done_tensors[(e, tidx)] = arr
+            job.done_tensors[(l, e, tidx)] = arr
             job.n_done += 1
-            if e in job.demand_ids:
+            if (l, e) in job.demand_keys:
                 job.demand_done += 1
                 if job.demand_done == job.demand_total:
                     job.t_demand_ready = time.perf_counter()
@@ -646,62 +837,69 @@ class ZipMoEEngine:
             self._cv.notify_all()      # wake result_subset() waiters
 
     # ---- result assembly + cache update (caller's thread) ----------------
-    def _collect(self, job: _FetchJob, subset: Sequence[int]
-                 ) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
-        """Assemble `subset`'s tensors and admit them to the layer cache.
+    def _collect(self, job: _FetchJob, subset: Sequence[Tuple[int, int]]
+                 ) -> Tuple[Dict[Tuple[int, int], Dict[str, np.ndarray]],
+                            FetchStats]:
+        """Assemble `subset`'s tensors ((layer, expert) keys) and admit each
+        to its layer's cache.
 
         Called on the caller's thread (the only thread that mutates cache
         pools).  Demand experts are unpinned once the whole subset has been
         admitted — not one by one — so intra-step admission overflow can
         never evict a selected expert that was admitted a moment earlier.
         """
-        layer = job.layer
         want = set(subset)
         missing = [job.metas[t.uid] for t in job.tasks
-                   if t.expert in want and
+                   if t.expert_key in want and
                    job.metas[t.uid] not in job.done_tensors]
         assert not missing, f"unreconstructed tensors: {missing}"
-        cache = self.caches[layer]
-        out: Dict[int, Dict[str, np.ndarray]] = {}
-        for e in subset:
-            g = self.store.groups[(layer, e)]
-            out[e] = {tm.name: job.done_tensors[(e, tidx)]
-                      for tidx, tm in enumerate(g.tensors)}
-        for e in subset:
-            if e in job.collected and cache.residency(e) is not CState.M:
+        out: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        for (l, e) in subset:
+            g = self.store.groups[(l, e)]
+            out[(l, e)] = {tm.name: job.done_tensors[(l, e, tidx)]
+                           for tidx, tm in enumerate(g.tensors)}
+        for (l, e) in subset:
+            cache = self.caches[l]
+            if (l, e) in job.collected and \
+                    cache.residency(e) is not CState.M:
                 continue               # still resident: nothing to re-admit
-            job.collected.add(e)
+            job.collected.add((l, e))
             # build the comprehensive payload (everything this fetch holds)
             # and let admission trim it to the dispatched pool via the
             # _demote_payload fit — payload travels WITH the admit, so a
             # cascade triggered by a later admit can never orphan it
-            g = self.store.groups[(layer, e)]
+            g = self.store.groups[(l, e)]
             pl = ExpertPayload()
-            pl.full = {tidx: job.done_tensors[(e, tidx)]
+            pl.full = {tidx: job.done_tensors[(l, e, tidx)]
                        for tidx in range(len(g.tensors))}
             if self.cache_mode != "flat":
                 for t in job.tasks:
-                    if t.expert != e:
+                    if t.expert_key != (l, e):
                         continue
-                    tidx = job.metas[t.uid][1]
+                    tidx = job.metas[t.uid][2]
                     smb = job.sm_data.get(t.uid,
-                                          job.payloads[e].sm.get(tidx))
+                                          job.payloads[(l, e)].sm.get(tidx))
                     if smb is not None:
                         pl.sm[tidx] = smb
                     for k in range(t.k_shards):
                         eb = job.e_data.get(
-                            (t.uid, k), job.payloads[e].e.get((tidx, k)))
+                            (t.uid, k),
+                            job.payloads[(l, e)].e.get((tidx, k)))
                         if eb is not None:
                             pl.e[(tidx, k)] = eb
             cache.admit(e, pl)
         # release this job's own demand pins exactly once per expert (pins
         # are refcounted: a step's independent pin on the same expert, taken
         # via pin_experts, survives this release)
-        to_unpin = [e for e in subset
-                    if e in job.demand_ids and e not in job.unpinned]
-        job.unpinned.update(to_unpin)
-        cache.unpin(to_unpin)
-        demand_phase = bool(job.demand_ids) and want <= job.demand_ids
+        by_layer: Dict[int, List[int]] = collections.defaultdict(list)
+        for (l, e) in subset:
+            if (l, e) in job.demand_keys and (l, e) not in job.unpinned:
+                job.unpinned.add((l, e))
+                by_layer[l].append(e)
+        for l, es in by_layer.items():
+            self.caches[l].unpin(es)
+        demand_phase = bool(job.demand_keys) and want <= job.demand_keys
+        primary_cache = self.caches[job.layer]
         with self._cv:
             now = time.perf_counter()
             t_demand = job.t_demand_ready or now
@@ -718,5 +916,6 @@ class ZipMoEEngine:
             dec_new = job.stats.dec_ops - job.dec_reported
             job.dec_reported = job.stats.dec_ops
             stats = FetchStats(wall=wall, io_bytes=io_new, dec_ops=dec_new,
-                               hits={k: v for k, v in cache.hits.items()})
+                               hits={k: v
+                                     for k, v in primary_cache.hits.items()})
         return out, stats

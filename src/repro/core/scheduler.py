@@ -34,7 +34,7 @@ class Timeline:
     worker_ends: List[float]
     worker_idle: float              # total decompression-thread idle (gaps)
     task_ready: Dict[int, float]    # uid -> all-tensors-recovered time
-    expert_done: Dict[int, float]
+    expert_done: Dict[Tuple[int, int], float]   # (layer, expert) -> done time
     events: List[Tuple[str, int, float, float]] = field(default_factory=list)
 
 
@@ -108,6 +108,8 @@ def simulate(blocks: Sequence[Sequence[Task]], L: int, *,
         workers[wi] = end
 
     # --- task-ready and expert execution on the accelerator stream ----------
+    # experts are keyed (layer, expert): a cross-layer block list may carry
+    # the same expert id for two different layers (two distinct executions)
     task_ready = {}
     for t in tasks:
         r = 0.0
@@ -116,12 +118,12 @@ def simulate(blocks: Sequence[Sequence[Task]], L: int, *,
         if t.needs_sm_io:
             r = max(r, sm_avail[t.uid])
         task_ready[t.uid] = r
-    expert_ready: Dict[int, float] = {}
-    expert_p: Dict[int, float] = {}
+    expert_ready: Dict[Tuple[int, int], float] = {}
+    expert_p: Dict[Tuple[int, int], float] = {}
     for t in tasks:
-        expert_ready[t.expert] = max(expert_ready.get(t.expert, 0.0),
-                                     task_ready[t.uid])
-        expert_p[t.expert] = t.p
+        expert_ready[t.expert_key] = max(expert_ready.get(t.expert_key, 0.0),
+                                         task_ready[t.uid])
+        expert_p[t.expert_key] = t.p
     gpu_t = 0.0
     expert_done = {}
     for n in sorted(expert_ready, key=lambda n: expert_ready[n]):
@@ -157,8 +159,9 @@ def compute_dominant(block: Sequence[Task], L: int) -> bool:
 # Algorithm 1: block construction
 # ----------------------------------------------------------------------------
 def _sorted_group(tasks: List[Task]) -> List[Task]:
-    """Non-increasing p, same-expert tasks consecutive."""
-    return sorted(tasks, key=lambda t: (-t.p, t.expert, t.tensor))
+    """Non-increasing p, same-expert tasks consecutive (per layer: a
+    cross-layer set may repeat expert ids across layers)."""
+    return sorted(tasks, key=lambda t: (-t.p, t.layer, t.expert, t.tensor))
 
 
 def build_blocks(tasks: Sequence[Task], L: int, *,
@@ -188,7 +191,16 @@ def build_blocks(tasks: Sequence[Task], L: int, *,
             j = U.pop(0)
             base_idle = simulate([B], L).worker_idle
             placed = False
-            for pos in range(len(B) + 1):
+            # a task may only be placed BEHIND every task of higher-or-equal
+            # priority: within a block the I/O thread reads chunks in task
+            # order, so inserting at an earlier position would let j's I/O
+            # jump work with larger p.  (Historical bug: the search started
+            # at pos 0, and since equal-cost candidates tie on worker idle,
+            # it reliably inserted at the *front* — reversing the priority
+            # order and putting speculative I/O ahead of demand I/O.)
+            min_pos = max((i + 1 for i, t in enumerate(B) if t.p >= j.p),
+                          default=0)
+            for pos in range(min_pos, len(B) + 1):
                 cand = B[:pos] + [j] + B[pos:]
                 if simulate([cand], L).worker_idle <= base_idle + 1e-12:
                     B = cand

@@ -51,6 +51,15 @@ class Task:
     dec_cost: float                  # c       : one E-chunk decompression
     k_shards: int                    # K
     uid: int = -1
+    layer: int = 0                   # owning sparse layer (cross-layer jobs)
+
+    @property
+    def expert_key(self) -> Tuple[int, int]:
+        """Identity of the expert this task reconstructs.  Expert ids are
+        only unique within a layer; one block list may span layers (a step's
+        demand plus a later layer's predictions), so grouping/execution is
+        keyed by (layer, expert)."""
+        return (self.layer, self.expert)
 
     @property
     def needs_e_io(self) -> bool:
@@ -95,7 +104,7 @@ class Task:
 
 
 def make_tasks(expert_ids, states, p_times, *, n_tensors=1, u=1.0, rho=0.4,
-               c=0.15, K=4) -> List[Task]:
+               c=0.15, K=4, layer=0) -> List[Task]:
     """Uniform-cost task set (matches the paper's analytical model)."""
     tasks = []
     uid = 0
@@ -103,7 +112,7 @@ def make_tasks(expert_ids, states, p_times, *, n_tensors=1, u=1.0, rho=0.4,
         for t in range(n_tensors):
             tasks.append(Task(expert=n, tensor=t, state=st, p=p,
                               sm_cost=u, e_cost=rho * u / K, dec_cost=c,
-                              k_shards=K, uid=uid))
+                              k_shards=K, uid=uid, layer=layer))
             uid += 1
     return tasks
 
@@ -112,10 +121,11 @@ def lower_bound(tasks: List[Task], L: int) -> float:
     """Lemma B.3: OPT >= max{I, C/L, P, Z}."""
     I = sum(t.io_workload for t in tasks)
     C = sum(t.compute_workload for t in tasks)
-    # P: each expert's exec counted once
+    # P: each expert's exec counted once (keyed per layer — cross-layer
+    # block lists may repeat an expert id in a different layer)
     seen = {}
     for t in tasks:
-        seen[t.expert] = t.p
+        seen[t.expert_key] = t.p
     P = sum(seen.values())
     Z = max((t.critical_path(L) for t in tasks), default=0.0)
     return max(I, C / max(1, L), P, Z)

@@ -19,6 +19,15 @@ Cache knobs (§3.4):
                        hierarchy (--flat-policy lru|fifo|lfu|marking,
                        --flat-capacity N; default N = sum of pool sizes)
 --delta              : δ rank-tolerance margin of the dispatch thresholds
+
+Scheduler knobs (§3.3):
+--profile-p-times    : feed Algorithm 1 *measured* per-expert grouped-GEMM
+                       times (GemmProfiler) instead of class constants
+--cross-layer-depth N: one block schedule spans this step plus the next N
+                       MoE layers' predictions
+--freq-decay         : FreqTracker forgetting for drifted workloads
+--cache-window N     : windowed (per-N-steps) cache hit-rate series
+
 Both modes print ``cache:`` telemetry (per-pool hit rates, residency-state
 transition counts) next to the ``overlap:`` line.
 """
@@ -37,6 +46,20 @@ from repro.core.store import build_store
 from repro.models import init_cache, init_params
 from repro.serving.server import BatchServer
 from repro.serving.zipserve import ZipServer
+
+
+def print_sched_telemetry(zs, args):
+    """Windowed cache series + measured p-time buckets (both ZipMoE modes)."""
+    if args.cache_window:
+        ws = zs.cache_summary(windows=True)["windows"]
+        print("cache windows (hit rate per",
+              f"{args.cache_window}-step window):",
+              " ".join(f"{w['step_end']}:{w['hit_rate']:.2f}" for w in ws))
+    if args.profile_p_times:
+        ps = zs.p_time_summary()
+        print(f"p-times: {ps['n_buckets']} buckets, "
+              f"{ps['n_measurements']} measured "
+              f"({ps['measure_wall_s']*1e3:.1f}ms profiling)")
 
 
 def main():
@@ -64,6 +87,18 @@ def main():
                     help="flat-mode capacity (default: sum of pool sizes)")
     ap.add_argument("--delta", type=int, default=1,
                     help="dispatch-threshold rank tolerance δ")
+    ap.add_argument("--profile-p-times", action="store_true",
+                    help="sort Algorithm-1 blocks by measured per-expert "
+                         "grouped-GEMM times instead of class constants")
+    ap.add_argument("--cross-layer-depth", type=int, default=0,
+                    help="extend each step submission with the next N MoE "
+                         "layers' predictions under one block schedule")
+    ap.add_argument("--freq-decay", type=float, default=1.0,
+                    help="FreqTracker exponential decay (<1 forgets stale "
+                         "popularity under drifting traces; 1.0 = never)")
+    ap.add_argument("--cache-window", type=int, default=0,
+                    help="record cache hit/miss deltas every N decode steps "
+                         "(cache_summary windowed series; 0 = off)")
     args = ap.parse_args()
     parts = args.pool_sizes.split(",")
     try:
@@ -97,7 +132,11 @@ def main():
                    prefetch=not args.no_prefetch,
                    cache_mode=args.cache_mode,
                    flat_capacity=args.flat_capacity,
-                   flat_policy=args.flat_policy, delta=args.delta)
+                   flat_policy=args.flat_policy, delta=args.delta,
+                   profile_p_times=args.profile_p_times,
+                   cross_layer_depth=args.cross_layer_depth,
+                   freq_decay=args.freq_decay,
+                   cache_window=args.cache_window)
 
     if args.mode == "zipmoe-batch":
         srv = BatchServer(None, cfg, max_batch=args.batch,
@@ -109,6 +148,7 @@ def main():
         srv.run()
         print("metrics:", srv.metrics())
         print("cache:", srv.cache_summary())
+        print_sched_telemetry(zs, args)
         zs.close()
         return
 
@@ -132,6 +172,7 @@ def main():
           f"{ov['total_fetch_s']*1e3:.1f}ms fetch "
           f"(frac={ov['hidden_frac']:.2f}, pred_hits={ov['pred_hits']} "
           f"misses={ov['pred_misses']})")
+    print_sched_telemetry(zs, args)
     zs.close()
 
 

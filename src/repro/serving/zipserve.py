@@ -21,7 +21,16 @@ Two beyond-loop mechanisms turn the I/O-bound sync path compute-centric
   drained to the cache pools on a later step), and new predictions exclude
   every in-flight expert, so speculative work is never duplicated.
   Hit/miss and hidden-vs-blocking wall time land in ``overlap_stats``,
-  per-pool hit rates and residency transitions in ``cache_summary()``.
+  per-pool hit rates and residency transitions in ``cache_summary()``
+  (optionally as a per-N-steps windowed series via ``cache_window``).
+  With ``profile_p_times=True`` the block schedule sorts by *measured*
+  per-expert grouped-GEMM times (``core/profiles.GemmProfiler``: measured
+  on first use per (layer, expert-count, token-column) bucket, refined
+  online from the real FFN wall time) instead of class constants, and with
+  ``cross_layer_depth=N`` each submission carries the next N MoE layers'
+  predictions in the SAME block list — the engine's p-tiering keeps demand
+  ahead of near-layer predictions ahead of far-layer ones, so the I/O
+  thread sequences reconstruction across layers under one priority order.
 * **Grouped expert FFN** — instead of a Python loop over batch × top-k, the
   step's tokens are gathered by expert into one [E_active, C, d] batch and
   pushed through ``kernels/moe_gemm.grouped_gemm`` (interpret mode on CPU
@@ -51,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import FetchHandle, ZipMoEEngine
+from repro.core.profiles import GemmProfiler
 from repro.core.store import ExpertStore
 from repro.kernels.ops import fused_zip_gemm, grouped_expert_gemm
 from repro.models import attention as attn_lib
@@ -89,13 +99,18 @@ class ZipServer:
                  prefetch: bool = True, prefetch_width: Optional[int] = None,
                  ffn_impl: str = "grouped", fused_recovery: bool = False,
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
-                 flat_policy: str = "lru", delta: int = 1):
+                 flat_policy: str = "lru", delta: int = 1,
+                 profile_p_times: bool = False, cross_layer_depth: int = 0,
+                 freq_decay: float = 1.0, cache_window: int = 0):
         assert ffn_impl in ("grouped", "loop")
+        assert cross_layer_depth >= 0
         self.cfg = cfg
         self.prefetch = prefetch
         self.prefetch_width = prefetch_width
         self.ffn_impl = ffn_impl
         self.fused_recovery = fused_recovery
+        self.profile_p_times = profile_p_times
+        self.cross_layer_depth = cross_layer_depth
         self.layers = unstack_layers(params["decoder"], cfg)
         self.globals = {k: v for k, v in params.items() if k != "decoder"}
         store = ExpertStore(store_path, bandwidth_gbps=bandwidth_gbps)
@@ -109,8 +124,15 @@ class ZipServer:
             store, n_experts=max(1, cfg.n_experts), n_layers=cfg.n_layers,
             L=L, pool_sizes=pool_sizes, recover_fn=recover,
             cache_mode=cache_mode, flat_capacity=flat_capacity,
-            flat_policy=flat_policy, delta=delta)
+            flat_policy=flat_policy, delta=delta, freq_decay=freq_decay)
         self.engine.profile()
+        if cache_window:
+            self.engine.enable_cache_windows(cache_window)
+        # measured per-expert grouped-GEMM times feeding Algorithm 1's p_n
+        # (constant-p scheduling when profile_p_times is off: p_times=None
+        # falls back to the engine's class constants)
+        self.profiler = GemmProfiler(default_p=ZipMoEEngine._DEMAND_P)
+        self._gemm_runners: Dict[int, object] = {}   # layer -> runner|None
         # strip routed expert weights from the resident copy (they live on disk)
         for lp in self.layers:
             if "ffn" in lp and "router" in lp["ffn"]:
@@ -175,18 +197,110 @@ class ZipServer:
         return frozenset().union(*(s for _, s in
                                    self._pending.get(layer_idx, [])))
 
+    def _moe_layers_after(self, layer_idx: int, depth: int) -> List[int]:
+        """Up to `depth` distinct MoE layers following `layer_idx` in decode
+        order (wrapping to the next step's first MoE layer) — the layers a
+        cross-layer submission extends its predictions to."""
+        out: List[int] = []
+        j = layer_idx
+        for _ in range(depth):
+            j = self._next_moe_layer(j)
+            if j is None or j == layer_idx or j in out:
+                break
+            out.append(j)
+        return out
+
+    # ------------------------------------------------------------------
+    # profiled p-times (GemmProfiler -> Algorithm 1's p_n)
+    # ------------------------------------------------------------------
+    def _gemm_runner(self, layer_idx: int):
+        """Measurement closure for the profiler: executes one representative
+        grouped FFN of this layer's expert shapes (warmup run eats the jit
+        compile; the timed run is pure execution)."""
+        groups = self.engine.store.groups
+        experts = [e for (l, e) in groups if l == layer_idx]
+        if not experts:
+            return None
+        shapes = {t.name: tuple(t.shape)
+                  for t in groups[(layer_idx, min(experts))].tensors}
+        if "w_up" not in shapes or "w_down" not in shapes:
+            return None
+
+        def run(ne: int, cols: int) -> float:
+            rng = np.random.default_rng(0)
+            d, f = shapes["w_up"]
+            x = jnp.asarray(rng.standard_normal((ne, cols, d)),
+                            jnp.bfloat16)
+            wu = jnp.asarray(rng.standard_normal((ne, d, f)), jnp.bfloat16)
+            wd = jnp.asarray(rng.standard_normal((ne, f, d)), jnp.bfloat16)
+            wg = jnp.asarray(rng.standard_normal((ne, d, f)),
+                             jnp.bfloat16) if "w_gate" in shapes else None
+            gg = lambda a, w: grouped_expert_gemm(
+                a, w, block_c=_pick_block(cols, 128),
+                block_d=_pick_block(a.shape[-1], 512),
+                block_f=_pick_block(w.shape[-1], 128))
+
+            def once():
+                h = jax.nn.silu(gg(x, wg)) * gg(x, wu) if wg is not None \
+                    else jax.nn.gelu(gg(x, wu))
+                return gg(h, wd)
+
+            jax.block_until_ready(once())          # compile warmup
+            t0 = time.perf_counter()
+            jax.block_until_ready(once())
+            return time.perf_counter() - t0
+
+        return run
+
+    def _exec_group_size(self, layer_idx: int, batch: int) -> int:
+        """Expected number of experts that execute *together* in one of this
+        layer's decode steps — the profiler's bucket key.  p_n is the
+        per-expert share of a grouped GEMM, so every id of a submission
+        (demand and predictions alike) is priced at the group size it will
+        run in, NOT at the submission's total id count: the step's last
+        observed selection size, falling back to the batch top-k bound."""
+        last = self._last_ids.get(layer_idx)
+        if last:
+            return len(last)
+        return max(1, min(self.cfg.n_experts, batch * self.cfg.top_k))
+
+    def _p_times_for(self, layer_idx: int, ids: List[int], batch: int
+                     ) -> Optional[Dict[int, float]]:
+        """Measured per-expert p_n for one submission part, or None for the
+        engine's class constants (constant-p scheduling).  The measurement
+        runner is built once per layer and only handed over when the bucket
+        is not yet cached — this sits on the decode hot path."""
+        if not self.profile_p_times or not ids:
+            return None
+        cols = max(1, batch * self.cfg.top_k)
+        group = self._exec_group_size(layer_idx, batch)
+        runner = None
+        if not self.profiler.has(layer_idx, group, cols):
+            if layer_idx not in self._gemm_runners:
+                self._gemm_runners[layer_idx] = self._gemm_runner(layer_idx)
+            runner = self._gemm_runners[layer_idx]
+        p = self.profiler.p_time(layer_idx, group, cols, runner=runner)
+        return {int(e): p for e in ids}
+
     def _drain(self, layer_idx: int) -> int:
         """Collect finished prediction jobs of `layer_idx` on the decode
         thread: their unused tails are admitted to the cache pools (warming
         them) and leave the in-flight set, so they become predictable again
-        as cheap resident no-op tasks.  Returns the drained io_bytes."""
+        as cheap resident no-op tasks.  Returns the drained io_bytes.
+
+        A cross-layer job appears in every covered layer's pending list;
+        ``spec_result()`` caches, and the stats are credited only on the
+        first drain (the flag guard), so multi-list membership never
+        double-counts wall time or bytes."""
         ov = self.overlap_stats
         live, io = [], 0
         for h, s in self._pending.get(layer_idx, []):
             if h.done():
                 _, st = h.spec_result()    # background work: fully hidden
-                ov["fetch_wall_s"] += st.wall
-                io += st.io_bytes
+                if not getattr(h, "_drained_stats", False):
+                    h._drained_stats = True
+                    ov["fetch_wall_s"] += st.wall
+                    io += st.io_bytes
             else:
                 live.append((h, s))
         if layer_idx in self._pending:
@@ -194,24 +308,47 @@ class ZipServer:
         return io
 
     def _issue_step(self, layer_idx: int, demand_ids: List[int], batch: int):
-        """One Algorithm-1 step submission for `layer_idx`: the demand ids
-        (this step's selection still missing from every pending prediction)
-        plus the layer's next-step prediction, under a single block
-        schedule.  In-flight experts are excluded from the prediction (their
+        """One Algorithm-1 step submission anchored at `layer_idx`: the
+        demand ids (this step's selection still missing from every pending
+        prediction) plus the layer's next-step prediction, under a single
+        block schedule.  With ``cross_layer_depth > 0`` the same submission
+        also carries predictions for the next MoE layers in decode order —
+        ONE block list spans all covered layers, the engine's p-tiering
+        keeps demand ahead of near-layer predictions ahead of far-layer
+        ones, and the job registers in every covered layer's pending list.
+        In-flight experts are excluded from every layer's prediction (their
         job already reconstructs them — no duplicate work) but stay covered
         through their own pending entry."""
         pred = (self._predict(layer_idx, batch,
                               set(demand_ids) | self._in_flight(layer_idx))
                 if self.prefetch else [])
-        if not demand_ids and not pred:
+        parts = []
+        if demand_ids or pred:
+            parts.append((layer_idx, demand_ids, pred,
+                          self._p_times_for(layer_idx,
+                                            list(demand_ids) + pred, batch)))
+        extra: List[Tuple[int, List[int]]] = []
+        if self.prefetch and self.cross_layer_depth:
+            for j in self._moe_layers_after(layer_idx,
+                                            self.cross_layer_depth):
+                pred_j = self._predict(j, batch, self._in_flight(j))
+                if pred_j:
+                    parts.append((j, [], pred_j,
+                                  self._p_times_for(j, pred_j, batch)))
+                    extra.append((j, pred_j))
+        if not parts:
             return None
-        h = self.engine.submit_step(layer_idx, demand_ids, pred)
+        h = self.engine.submit_steps(parts)
         if self.prefetch:
             # the demand half counts as predicted for the NEXT step too: it
             # is reconstructed by this very job, so a re-selected expert is
             # a prediction hit, never a sticky demand refetch
-            self._pending.setdefault(layer_idx, []).append(
-                (h, frozenset(pred) | set(demand_ids)))
+            if demand_ids or pred:
+                self._pending.setdefault(layer_idx, []).append(
+                    (h, frozenset(pred) | set(demand_ids)))
+            for j, pred_j in extra:
+                self._pending.setdefault(j, []).append(
+                    (h, frozenset(pred_j)))
         return h
 
     def _issue_prefetch(self, layer_idx: Optional[int], batch: int):
@@ -257,7 +394,9 @@ class ZipServer:
         # prediction jobs: `missing` is disjoint from every in-flight
         # prediction by construction (no duplicate work is possible), and
         # the urgent job jumps the I/O queue so it overlaps their tails
-        h_m = (self.engine.prefetch_experts(layer_idx, missing)
+        h_m = (self.engine.prefetch_experts(
+                   layer_idx, missing,
+                   self._p_times_for(layer_idx, missing, batch))
                if missing else None)
         if h_m is not None and self.prefetch:
             # the fallback job joins the pending list like any submission:
@@ -273,7 +412,9 @@ class ZipServer:
             if not take:
                 continue
             remaining.difference_update(take)
-            w, st = h.result_subset(take)   # blocks on `take` only
+            # blocks on `take` of THIS layer only — never on the job's other
+            # layers' speculative tails
+            w, st = h.result_subset(take, layer=layer_idx)
             weights.update(w)
             ov["fetch_wall_s"] += st.wall
             ov["fetch_wait_s"] += h.wait_s
@@ -309,11 +450,19 @@ class ZipServer:
         return {**ov, "total_fetch_s": total, "hidden_fetch_s": hidden,
                 "hidden_frac": hidden / total if total > 0 else 0.0}
 
-    def cache_summary(self, per_layer: bool = False) -> Dict[str, object]:
+    def cache_summary(self, per_layer: bool = False,
+                      windows: bool = False) -> Dict[str, object]:
         """Live §3.4 cache telemetry (per-pool hit rates, residency-state
         transition counts, evictions) — the cache-side complement to
-        :meth:`overlap_summary`."""
-        return self.engine.cache_summary(per_layer=per_layer)
+        :meth:`overlap_summary`.  ``windows=True`` appends the per-N-steps
+        delta series when the server was built with ``cache_window=N``."""
+        return self.engine.cache_summary(per_layer=per_layer,
+                                         windows=windows)
+
+    def p_time_summary(self) -> Dict[str, object]:
+        """Measured p-time buckets feeding Algorithm 1 (empty when
+        ``profile_p_times`` is off)."""
+        return self.profiler.summary()
 
     # ------------------------------------------------------------------
     # expert FFN implementations
@@ -438,12 +587,26 @@ class ZipServer:
         # of compute to hide under
         weights, io_bytes, blocked_s = self._acquire_experts(layer_idx, ids, B)
         fetch_s = time.perf_counter() - t0
+        t_ffn = time.perf_counter()
         if self.fused_recovery:
             y = self._ffn_zip_gemm(x, top_p, top_i, weights, ids)
         elif self.ffn_impl == "loop":
             y = self._ffn_loop(x, top_p, top_i, weights)
         else:
             y = self._ffn_grouped(x, top_p, top_i, weights, ids)
+        if self.profile_p_times:
+            # refine the measured bucket with the *actual* expert FFN wall
+            # time (EMA) — forcing the value here keeps the observation
+            # honest at the cost of one early sync per MoE layer.  Only
+            # already-measured buckets are refined: a first observation of a
+            # fresh bucket would bake the grouped-GEMM jit compile time into
+            # p (measure()'s warmup run eats it), and observed-only buckets
+            # the scheduler never reads would pile up as dead entries.
+            cols = max(1, B * cfg.top_k)
+            if self.profiler.has(layer_idx, len(ids), cols):
+                y = jax.block_until_ready(y)
+                self.profiler.record(layer_idx, len(ids), cols,
+                                     time.perf_counter() - t_ffn)
         if "shared" in ffn:
             y = y + apply_mlp(ffn["shared"], x, cfg)
         self.stats.append({"layer": layer_idx, "fetch_s": fetch_s,
@@ -483,6 +646,7 @@ class ZipServer:
             new_caches.append(nc)
         x = apply_norm(p["final_norm"], x, cfg)
         w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]["w"]
+        self.engine.note_step()       # windowed cache telemetry step clock
         return x @ w, new_caches
 
     # ------------------------------------------------------------------

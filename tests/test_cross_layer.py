@@ -1,0 +1,205 @@
+"""Cross-layer Algorithm-1 scheduling tests (§3.3 across layers):
+
+* one ``submit_steps`` block list spanning layer i's demand + layer j's
+  predictions reconstructs everything bit-exactly,
+* demand-before-speculative (and near-layer-before-far-layer) priority
+  tiering holds even when *profiled* p-times would say otherwise,
+* ``result_subset()`` waits on exactly one layer's named experts — never on
+  another layer's speculative tail (gated-decompression proof),
+* serving: cross-layer submissions never duplicate chunk reads across
+  layers, and cross-layer / profiled-p scheduling is a pure latency knob —
+  logits stay bit-identical to the synchronous path, in both cache modes.
+"""
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.engine import ZipMoEEngine
+from repro.core.store import ExpertStore, build_store
+from repro.models import init_params
+from repro.serving.zipserve import ZipServer
+
+POOLS = {"F": 2, "C": 2, "S": 2, "E": 2}
+NO_POOLS = {"F": 0, "C": 0, "S": 0, "E": 0}
+
+
+@pytest.fixture(scope="module")
+def moe2_setup(tmp_path_factory):
+    cfg = get_smoke_config("qwen2-moe-a2.7b", n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store_xl"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+def test_submit_steps_bitexact_across_layers(moe2_setup):
+    cfg, params, d = moe2_setup
+    store = ExpertStore(d)
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts, n_layers=cfg.n_layers,
+                       L=3, pool_sizes=NO_POOLS)
+    try:
+        h = eng.submit_steps([(0, [0, 1], [2, 3], None),
+                              (1, [], [4, 5], None)])
+        demand, _ = h.result()
+        assert set(demand) == {0, 1}
+        allw, _ = h.spec_result()
+        assert set(allw) == {(0, 0), (0, 1), (0, 2), (0, 3), (1, 4), (1, 5)}
+        for (l, e), w in allw.items():
+            ref = store.load_group((l, e))
+            for name, arr in w.items():
+                assert np.array_equal(np.asarray(arr, np.float32),
+                                      np.asarray(ref[name], np.float32)), \
+                    (l, e, name)
+    finally:
+        eng.shutdown()
+
+
+def test_demand_before_spec_under_profiled_p(moe2_setup):
+    """Profiled p-times order experts within a class by true cost, but can
+    never promote speculative work above demand, nor a far layer's
+    predictions above a near layer's: the engine re-tiers every class below
+    the previous one's minimum while preserving relative order."""
+    cfg, params, d = moe2_setup
+    eng = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=3, pool_sizes=NO_POOLS)
+    try:
+        # adversarial measurements: speculative experts "cost" ~1s, demand
+        # only a few hundred microseconds
+        h = eng.submit_steps([
+            (0, [0, 1], [2], {0: 3e-4, 1: 2e-4, 2: 0.9}),
+            (1, [], [4, 5], {4: 0.5, 5: 0.7}),
+        ])
+        job = h._job
+        dem = [t.p for t in job.tasks if job.urg[t.uid] == 0]
+        s_near = [t.p for t in job.tasks
+                  if job.urg[t.uid] == 1 and t.layer == 0]
+        s_far = [t.p for t in job.tasks
+                 if job.urg[t.uid] == 1 and t.layer == 1]
+        assert min(dem) > max(s_near) > max(s_far)
+        # profiled relative order survives inside a tier
+        p_dem = {t.expert: t.p for t in job.tasks if job.urg[t.uid] == 0}
+        assert p_dem[0] > p_dem[1]
+        p_far = {t.expert: t.p for t in job.tasks if t.layer == 1}
+        assert p_far[5] > p_far[4]
+        # Algorithm 1 opens with demand work and demand I/O finishes before
+        # the I/O thread may yield to other jobs
+        flat = [t for b in job.blocks for t in b]
+        assert job.urg[flat[0].uid] == 0
+        assert job.last_demand_io_blk >= 0
+        h.result()
+        h.spec_result()
+    finally:
+        eng.shutdown()
+
+
+class _GatedStore(ExpertStore):
+    """ExpertStore whose layer-`gate_layer` decompression blocks until
+    released — models an arbitrarily slow speculative tail."""
+
+    def __init__(self, path, gate_layer):
+        super().__init__(path)
+        self.gate_layer = gate_layer
+        self.release = threading.Event()
+
+    def decompress_e(self, key, tidx, shard, data):
+        if key[0] == self.gate_layer:
+            assert self.release.wait(timeout=30.0), "gate never released"
+        return super().decompress_e(key, tidx, shard, data)
+
+
+def test_result_subset_never_blocks_on_other_layers_tail(moe2_setup):
+    """With layer 1's decompression gated shut, layer 0's demand subset must
+    still complete: result()/result_subset() wait on their own layer only.
+    (Demand E-chunks are read and decompressed ahead of the speculative
+    tail's, and workers prefer urgency-0 ops, so a stalled speculative op
+    can never starve the demand pipeline.)"""
+    cfg, params, d = moe2_setup
+    store = _GatedStore(d, gate_layer=1)
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts, n_layers=cfg.n_layers,
+                       L=2, pool_sizes=NO_POOLS)
+    try:
+        h = eng.submit_steps([(0, [0, 1], [2], None),
+                              (1, [], [3, 4], None)])
+        demand, _ = h.result()          # must not require layer 1 work
+        assert set(demand) == {0, 1}
+        sub, _ = h.result_subset([2], layer=0)
+        assert set(sub) == {2}
+        ref = store.load_group((0, 2))
+        for name, arr in sub[2].items():
+            assert np.array_equal(np.asarray(arr, np.float32),
+                                  np.asarray(ref[name], np.float32))
+        assert not h.done(), "layer-1 tail cannot be done while gated"
+        store.release.set()
+        allw, _ = h.spec_result()
+        assert set(allw) == {(0, 0), (0, 1), (0, 2), (1, 3), (1, 4)}
+    finally:
+        store.release.set()
+        eng.shutdown()
+
+
+def test_no_duplicate_chunk_reads_across_layers(moe2_setup):
+    """With an ample F pool, steady-state cross-layer decode must never
+    re-read a chunk: a layer's in-flight experts are excluded from every
+    later submission's predictions for that layer, including the
+    cross-layer parts issued from *other* layers' steps."""
+    cfg, params, d = moe2_setup
+    zs = ZipServer(params, cfg, d, L=3, prefetch=True, cross_layer_depth=1,
+                   pool_sizes={"F": cfg.n_experts, "C": 0, "S": 0, "E": 0})
+    try:
+        store = zs.engine.store
+        io0 = store.io_bytes            # constructor profiling reads
+        caches = zs.init_cache(2, 8 + 10)
+        zs.generate(jnp.zeros((2, 1), jnp.int32), caches, 8,
+                    max_new_tokens=10)
+        served = store.io_bytes - io0
+        total_chunk_bytes = sum(g.sm_bytes + g.e_bytes
+                                for g in store.groups.values())
+        assert served <= total_chunk_bytes, (
+            f"duplicate chunk reads: {served} bytes read, "
+            f"store holds only {total_chunk_bytes}")
+    finally:
+        zs.close()
+
+
+def _decode_logits(zs, cfg, steps=5, B=2, S=12, seed=0):
+    tokens = jnp.asarray(
+        np.random.default_rng(seed).integers(0, cfg.vocab_size, (B, 1)),
+        jnp.int32)
+    caches = zs.init_cache(B, S + steps)
+    out, tok = [], tokens
+    for i in range(steps):
+        lg, caches = zs.decode_step(tok, caches, S - 1 + i)
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(lg, np.float32))
+    return np.stack(out)
+
+
+def test_cross_layer_profiled_logits_bitidentical(moe2_setup):
+    """Acceptance: profiled-p + cross-layer scheduling is a pure latency
+    knob — logits bit-equal to the synchronous path, and flat ≡ hier still
+    holds under the new scheduler."""
+    cfg, params, d = moe2_setup
+    zs_sync = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS,
+                        prefetch=False)
+    zs_x = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=True,
+                     profile_p_times=True, cross_layer_depth=1)
+    zs_xf = ZipServer(params, cfg, d, L=3, pool_sizes=POOLS, prefetch=True,
+                      profile_p_times=True, cross_layer_depth=1,
+                      cache_mode="flat", flat_policy="lru")
+    try:
+        ref = _decode_logits(zs_sync, cfg)
+        out = _decode_logits(zs_x, cfg)
+        out_f = _decode_logits(zs_xf, cfg)
+        assert np.array_equal(ref, out)
+        assert np.array_equal(ref, out_f)
+        ov = zs_x.overlap_summary()
+        assert ov["pred_hits"] + ov["pred_misses"] > 0
+        assert zs_x.p_time_summary()["n_buckets"] > 0
+    finally:
+        zs_sync.close()
+        zs_x.close()
+        zs_xf.close()

@@ -1,0 +1,173 @@
+"""GemmProfiler + profiled-p plumbing tests: bucketing, measure-on-first-
+use, online EMA refinement, the engine.profile(layer=...) regression, the
+FreqTracker decay plumbing, and the windowed cache_summary series."""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.engine import ZipMoEEngine
+from repro.core.profiles import GemmProfiler, pow2_bucket
+from repro.core.store import ExpertStore, build_store
+from repro.models import init_params
+
+POOLS = {"F": 2, "C": 2, "S": 2, "E": 2}
+
+
+@pytest.fixture(scope="module")
+def moe2_setup(tmp_path_factory):
+    cfg = get_smoke_config("qwen2-moe-a2.7b", n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store_prof"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+# ----------------------------------------------------------------------------
+# GemmProfiler unit behavior (no store / device needed)
+# ----------------------------------------------------------------------------
+def test_pow2_bucketing():
+    assert [pow2_bucket(n) for n in (0, 1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 1, 2, 4, 4, 8, 8, 16]
+
+
+def test_default_p_without_data():
+    prof = GemmProfiler(default_p=7e-4)
+    assert prof.p_time(0, 4) == 7e-4
+    assert prof.p_times(3, [1, 2]) == {1: 7e-4, 2: 7e-4}
+    assert prof.p_times(0, []) == {}
+
+
+def test_measure_on_first_use_is_cached():
+    calls = []
+
+    def runner(ne, cols):
+        calls.append((ne, cols))
+        return ne * 1e-3              # 1ms per expert
+
+    prof = GemmProfiler()
+    p1 = prof.p_time(0, 3, 5, runner=runner)      # buckets to (4, 8)
+    p2 = prof.p_time(0, 4, 7, runner=runner)      # same bucket: cached
+    assert p1 == p2 == pytest.approx(1e-3)
+    assert calls == [(4, 8)]                      # runner ran exactly once
+    # a different bucket measures again
+    prof.p_time(0, 9, 5, runner=runner)
+    assert calls == [(4, 8), (16, 8)]
+    assert prof.summary()["n_buckets"] == 2
+
+
+def test_record_refines_by_ema():
+    prof = GemmProfiler(ema=0.5)
+    prof.record(1, 4, 8, 4 * 2e-4)                # 2e-4 per expert
+    assert prof.p_time(1, 4, 8) == pytest.approx(2e-4)
+    prof.record(1, 4, 8, 4 * 4e-4)                # EMA toward 4e-4
+    assert prof.p_time(1, 4, 8) == pytest.approx(3e-4)
+    ent = prof.entries[prof.key(1, 4, 8)]
+    assert ent.n_samples == 2 and ent.source == "observed"
+
+
+def test_runner_may_decline():
+    calls = []
+
+    def runner(ne, c):
+        calls.append(ne)
+        return None
+
+    prof = GemmProfiler(default_p=5e-4)
+    assert prof.p_time(0, 2, 2, runner=runner) == 5e-4
+    # the decline is cached: the (expensive) runner is never re-probed
+    assert prof.p_time(0, 2, 2, runner=runner) == 5e-4
+    assert calls == [2]
+    assert prof.entries[prof.key(0, 2, 2)].source == "declined"
+    assert prof.summary()["n_measurements"] == 0
+
+
+# ----------------------------------------------------------------------------
+# engine.profile(layer=...) regression (used to die with KeyError: (L, None))
+# ----------------------------------------------------------------------------
+def test_engine_profile_layer_without_expert(moe2_setup):
+    cfg, params, d = moe2_setup
+    eng = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=2, pool_sizes=POOLS)
+    try:
+        for layer in range(cfg.n_layers):
+            u, c = eng.profile(layer=layer)
+            assert u > 0 and c > 0
+        with pytest.raises(KeyError):
+            eng.profile(layer=cfg.n_layers + 7)   # no groups for that layer
+    finally:
+        eng.shutdown()
+
+
+# ----------------------------------------------------------------------------
+# FreqTracker decay plumbing + windowed cache telemetry
+# ----------------------------------------------------------------------------
+def test_freq_decay_reaches_trackers_and_forgets(moe2_setup):
+    cfg, params, d = moe2_setup
+    eng = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=2, pool_sizes=POOLS,
+                       freq_decay=0.5)
+    try:
+        tr = eng.trackers[0]
+        assert tr.decay == 0.5
+        for _ in range(5):
+            tr.record([0])
+        for _ in range(3):                        # regime shift
+            tr.record([1])
+        assert tr.rank(1) == 0, "decay must let the new regime take rank 0"
+    finally:
+        eng.shutdown()
+    eng2 = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts,
+                        n_layers=cfg.n_layers, L=2, pool_sizes=POOLS)
+    try:
+        assert eng2.trackers[0].decay == 1.0      # default unchanged
+    finally:
+        eng2.shutdown()
+
+
+def test_windowed_cache_summary(moe2_setup):
+    cfg, params, d = moe2_setup
+    eng = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=2, pool_sizes=POOLS)
+    try:
+        eng.enable_cache_windows(2)
+        for _ in range(6):
+            eng.fetch_experts(0, [0, 1])
+            eng.note_step()
+        s = eng.cache_summary(windows=True)
+        ws = s["windows"]
+        assert s["window_steps"] == 2 and len(ws) == 3
+        # window deltas must sum to the cumulative totals
+        assert sum(w["misses"] for w in ws) == s["misses"]
+        assert sum(sum(w["hits"].values()) for w in ws) == \
+            sum(s["hits"].values())
+        # warm-up window misses, steady-state windows hit
+        assert ws[0]["misses"] > 0
+        assert ws[-1]["hit_rate"] == 1.0
+        # cumulative summary never carries the series unless asked
+        assert "windows" not in eng.cache_summary()
+    finally:
+        eng.shutdown()
+
+
+def test_zipserver_profiled_p_populates_buckets(moe2_setup):
+    """profile_p_times end-to-end: decode populates measured buckets and the
+    submission path consumes them (smoke: logits parity is pinned in
+    tests/test_cross_layer.py)."""
+    import jax.numpy as jnp
+
+    from repro.serving.zipserve import ZipServer
+
+    cfg, params, d = moe2_setup
+    zs = ZipServer(params, cfg, d, L=2, pool_sizes=POOLS, prefetch=True,
+                   profile_p_times=True)
+    try:
+        caches = zs.init_cache(2, 8 + 3)
+        zs.generate(jnp.zeros((2, 1), jnp.int32), caches, 8,
+                    max_new_tokens=3)
+        ps = zs.p_time_summary()
+        assert ps["n_buckets"] > 0
+        assert ps["n_measurements"] > 0
+        assert all(b["p_us"] >= 0 for b in ps["buckets"].values())
+    finally:
+        zs.close()

@@ -151,6 +151,41 @@ def test_type_ii_overlap_beats_naive():
     assert tl.makespan <= nv.makespan + 1e-9
 
 
+def test_priority_order_survives_block_insertion():
+    """Regression: the Algorithm-1 insertion search used to start at
+    position 0, and since equal-cost candidates tie on worker idle it
+    reliably inserted at the FRONT of the block — reversing the priority
+    order, so low-p (speculative) I/O jumped ahead of high-p (demand) I/O.
+    A task may never be placed before one of higher-or-equal p."""
+    n = 8
+    ps = [1e-4] * (n // 2) + [1e-6] * (n // 2)      # demand-vs-spec shape
+    tasks = make_tasks(list(range(n)), [CState.M] * n, ps, n_tensors=2,
+                       u=1.0, rho=0.4, c=0.15, K=4)
+    blocks = build_blocks(tasks, 2)
+    flat = [t for b in blocks for t in b]
+    first_low = min((i for i, t in enumerate(flat) if t.p < 1e-5),
+                    default=len(flat))
+    last_high = max((i for i, t in enumerate(flat) if t.p > 1e-5),
+                    default=-1)
+    assert last_high < first_low, [t.p for t in flat]
+
+
+def test_layer_aware_expert_identity():
+    """Cross-layer block lists may repeat an expert id in another layer:
+    the simulator must execute both (two distinct accelerator slots)."""
+    t0 = make_tasks([3], [CState.C], [0.2], n_tensors=1, layer=0)
+    t1 = make_tasks([3], [CState.C], [0.3], n_tensors=1, layer=1)
+    t1[0].uid = 1
+    blocks, tl = schedule(t0 + t1, 2)
+    assert set(tl.expert_done) == {(0, 3), (1, 3)}
+    # two distinct executions serialised on the accelerator stream: the
+    # second starts only after the first finishes, so the finish times are
+    # separated by at least the smaller execution time
+    d = sorted(tl.expert_done.values())
+    assert d[1] - d[0] >= 0.2 - 1e-9
+    assert tl.makespan == d[1]
+
+
 def test_compute_dominant_definition():
     # pure-compute block (C states) with tiny e_cost is compute-dominant
     tasks = make_tasks([0, 1, 2, 3], [CState.C] * 4, [0.1] * 4,

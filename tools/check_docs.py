@@ -9,13 +9,24 @@ Keeps README.md / DESIGN.md honest without running the full stack:
 2. **Intra-repo links** — every relative markdown link target must exist.
 3. **Repo-map paths** — every `src/...`, `tests/...`, `examples/...`,
    `benchmarks/...` path mentioned in backticks must exist.
+4. **Execution** (``--exec``, the CI docs job): every ```python block is
+   *run* in a subprocess with ``PYTHONPATH=src`` (multi-line snippets
+   included — assertions inside them are honored), and every documented
+   serving-CLI line (``python -m repro.launch.serve ...``, backslash
+   continuations joined) is executed end to end.  Costs a store build per
+   CLI example, which is exactly the point: the documented commands must
+   keep working.  Snippets that intentionally cannot run standalone opt
+   out with a ``# doc: no-exec`` marker.
 
-Usage:  python tools/check_docs.py [files...]   (defaults to README.md DESIGN.md)
+Usage:  python tools/check_docs.py [--exec] [files...]
+        (defaults to README.md DESIGN.md)
 Exits non-zero listing every violation.
 """
 from __future__ import annotations
 
+import os
 import re
+import subprocess
 import sys
 from pathlib import Path
 
@@ -27,6 +38,49 @@ LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
 PY_FILE_RE = re.compile(r"python\s+([\w./-]+\.py)")
 PY_MOD_RE = re.compile(r"python\s+-m\s+([\w.]+)")
 PATH_RE = re.compile(r"`((?:src|tests|examples|benchmarks|tools)/[\w./-]+)`")
+NO_EXEC_MARK = "# doc: no-exec"
+EXEC_CLI_RE = re.compile(r"python\s+-m\s+repro\.launch\.serve\b")
+EXEC_TIMEOUT_S = 600
+
+
+def _exec_env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _run(cmd, label: str, *, shell: bool) -> str:
+    try:
+        r = subprocess.run(cmd, shell=shell, cwd=ROOT, env=_exec_env(),
+                           capture_output=True, text=True,
+                           timeout=EXEC_TIMEOUT_S)
+    except subprocess.TimeoutExpired:
+        return f"{label}: timed out after {EXEC_TIMEOUT_S}s"
+    if r.returncode != 0:
+        tail = (r.stderr or r.stdout).strip().splitlines()[-8:]
+        return f"{label}: exit {r.returncode}: " + " | ".join(tail)
+    return ""
+
+
+def _bash_commands(body: str):
+    """Logical command lines of a bash block (continuations joined,
+    comments dropped)."""
+    joined, cur = [], ""
+    for line in body.splitlines():
+        line = line.rstrip()
+        if cur:
+            cur += " " + line.lstrip().rstrip("\\").rstrip()
+        else:
+            cur = line.rstrip("\\").rstrip()
+        if line.endswith("\\"):
+            continue
+        cmd = cur.strip()
+        cur = ""
+        if cmd and not cmd.startswith("#"):
+            joined.append(cmd)
+    return joined
 
 
 def module_exists(mod: str) -> bool:
@@ -42,15 +96,24 @@ def module_exists(mod: str) -> bool:
         return False
 
 
-def check_doc(path: Path) -> list:
+def check_doc(path: Path, execute: bool = False) -> list:
     errs = []
     text = path.read_text()
+    n_snip = 0
     for lang, body in FENCE_RE.findall(text):
         if lang == "python":
+            n_snip += 1
             try:
                 compile(body, f"{path.name}:snippet", "exec")
             except SyntaxError as e:
                 errs.append(f"{path.name}: python snippet fails to compile: {e}")
+                continue
+            if execute and NO_EXEC_MARK not in body:
+                err = _run([sys.executable, "-c", body],
+                           f"{path.name}: python snippet #{n_snip}",
+                           shell=False)
+                if err:
+                    errs.append(err)
         if lang in ("bash", "sh", "", "console"):
             for f in PY_FILE_RE.findall(body):
                 if not (ROOT / f).exists():
@@ -60,6 +123,13 @@ def check_doc(path: Path) -> list:
                 if not module_exists(mod):
                     errs.append(f"{path.name}: bash snippet references "
                                 f"missing module {mod}")
+            if execute and NO_EXEC_MARK not in body:
+                for cmd in _bash_commands(body):
+                    if EXEC_CLI_RE.search(cmd):
+                        err = _run(cmd, f"{path.name}: `{cmd[:60]}...`",
+                                   shell=True)
+                        if err:
+                            errs.append(err)
     for target in LINK_RE.findall(text):
         if target.startswith(("http://", "https://", "mailto:")):
             continue
@@ -72,20 +142,22 @@ def check_doc(path: Path) -> list:
 
 
 def main(argv):
-    docs = argv or DEFAULT_DOCS
+    execute = "--exec" in argv
+    docs = [a for a in argv if a != "--exec"] or DEFAULT_DOCS
     errors = []
     for name in docs:
         p = ROOT / name
         if not p.exists():
             errors.append(f"{name}: file missing")
             continue
-        errors.extend(check_doc(p))
+        errors.extend(check_doc(p, execute=execute))
     if errors:
         print("docs check FAILED:")
         for e in errors:
             print("  -", e)
         return 1
-    print(f"docs check OK ({', '.join(docs)})")
+    mode = "compile+exec" if execute else "compile-only"
+    print(f"docs check OK ({', '.join(docs)}; {mode})")
     return 0
 
 
