@@ -10,6 +10,7 @@ prints ``name,us_per_call,derived`` CSV covering:
   fig10      cache-management ablation           (benchmarks/ablation.py)
   thm31      scheduler approximation bound       (benchmarks/scheduler_bound.py)
   roofline   per-cell roofline terms from dryrun (benchmarks/roofline.py)
+  splice     recovery→GEMM staging microbench    (benchmarks/splice.py)
 """
 from __future__ import annotations
 
@@ -28,6 +29,7 @@ MODULES = {
     "fig10": "benchmarks.ablation",
     "thm31": "benchmarks.scheduler_bound",
     "roofline": "benchmarks.roofline",
+    "splice": "benchmarks.splice",
 }
 
 

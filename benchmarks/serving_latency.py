@@ -10,7 +10,11 @@ flat-vs-hier TPOT/hit-rate delta is the Fig. 10 claim measured on the
 *live* engine, not the simulator).  The §3.3 scheduler ablation rows
 compare constant-p vs profiled-p (GemmProfiler-measured per-expert
 execution times) and single-layer vs cross-layer block schedules
-(``serving_real/{constant,profiled}_p_{single,cross}_layer``)."""
+(``serving_real/{constant,profiled}_p_{single,cross}_layer``).  Every
+``serving_real`` row carries ``h2d_bytes/step`` + ``splice_ms/step``
+columns — the expert-weight staging tax — and
+``serving_real/device_slab_cache`` runs the same stack with the F pool
+as device-resident slabs (`--device-cache`)."""
 from __future__ import annotations
 
 import numpy as np
@@ -98,7 +102,12 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
                   cross_layer_depth=1)),
             ("profiled_p_cross_layer", pools,
              dict(prefetch=True, ffn_impl="grouped",
-                  profile_p_times=True, cross_layer_depth=1))):
+                  profile_p_times=True, cross_layer_depth=1)),
+            # device-resident expert slabs: the h2d_bytes/step column is
+            # the per-step expert-weight staging tax — cold-splice uploads
+            # only in slab mode vs a full re-stack per hit in host mode
+            ("device_slab_cache", pools,
+             dict(prefetch=True, ffn_impl="grouped", device_cache=True))):
         zs = ZipServer(params, cfg, d, L=4, pool_sizes=pp, **kw)
         srv = BatchServer(None, cfg, max_batch=2, max_len=64, zip_server=zs)
         for _ in range(n_requests):
@@ -112,12 +121,17 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
             ps = zs.p_time_summary()
             extra = (f" p_buckets={ps['n_buckets']} "
                      f"profiling_ms={ps['measure_wall_s']*1e3:.0f}")
+        n_steps = max(1, len(zs.stats) // max(1, len(zs._moe_layers)))
+        h2d_step = sum(s["h2d_bytes"] for s in zs.stats) / n_steps
+        spl_step = sum(s["splice_s"] for s in zs.stats) / n_steps
         rows.add(f"serving_real/{name}/mean_ttft", m["mean_ttft_s"] * 1e6, "")
         rows.add(f"serving_real/{name}/mean_tpot", m["mean_tpot_s"] * 1e6,
                  f"throughput={m['throughput_tok_s']:.1f}tok/s "
                  f"hidden_frac={m.get('overlap_hidden_frac', 0.0):.3f} "
                  f"cache={m.get('cache_mode', '-')} "
-                 f"hit_rate={m.get('cache_hit_rate', 0.0):.3f}" + extra)
+                 f"hit_rate={m.get('cache_hit_rate', 0.0):.3f} "
+                 f"h2d_bytes/step={h2d_step:.0f} "
+                 f"splice_ms/step={spl_step*1e3:.2f}" + extra)
         zs.close()
     # the constant-p single-layer baseline IS the after_prefetch_grouped
     # configuration — alias its measurement instead of re-running it

@@ -1,0 +1,100 @@
+"""Splice-path microbench: where should a recovered expert tensor live?
+
+Measures the per-tensor cost of every recovery→GEMM staging strategy the
+runtime has grown, on one expert-sized bf16 tensor:
+
+  splice/host_numpy         numpy bit-splice, host ndarray out (engine default)
+  splice/device_roundtrip   device Pallas splice + d2h download (+ the re-upload
+                            the GEMM then pays) — the historical
+                            ``recover_bf16_host`` double round-trip
+  splice/device_resident    device Pallas splice, tensor STAYS on device
+                            (``recover_bf16_device``)
+  splice/slab_write         device splice + donated in-place slab-slot write —
+                            the device-cache admission path
+  splice/slab_gather        one ``jnp.take`` of E active experts from the slab —
+                            the per-step staging cost in device-cache mode
+  splice/host_stack_upload  ``jnp.stack([jnp.asarray(w) ...])`` of E host
+                            ndarrays — the per-step staging cost the slab
+                            removes (what host mode pays on every F hit)
+
+On CPU hosts the Pallas kernel runs in interpret mode, so the device rows
+understate TPU gains; the *ratio* between slab_gather and
+host_stack_upload is the architectural point: gather scales with device
+bandwidth, the host stack with PCIe/USB h2d bandwidth.
+"""
+from __future__ import annotations
+
+import timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.core import bitfield
+from repro.core.slab import DeviceSlabCache
+from repro.kernels.ops import recover_bf16_device, recover_bf16_host
+
+D, F = 512, 1024            # one expert-tensor plane (bf16: 1 MiB)
+E_ACTIVE = 4                # experts gathered per decode step
+REPS = 5
+
+
+def _best(fn) -> float:
+    fn()                    # warmup (jit compile / first dispatch)
+    return min(timeit.timeit(fn, number=1) for _ in range(REPS))
+
+
+def run(rows: Rows):
+    rng = np.random.default_rng(0)
+    w = (rng.standard_normal((D, F)) * 0.02).astype(np.float32)
+    exp, sm = bitfield.decompose_np(w)
+    nbytes = exp.nbytes + sm.nbytes
+
+    t = _best(lambda: bitfield.reconstruct_np(exp, sm, (D, F)))
+    rows.add("splice/host_numpy", t * 1e6, f"{nbytes/t/1e9:.2f}GB/s")
+
+    def roundtrip():
+        host = recover_bf16_host(exp, sm, (D, F))
+        jnp.asarray(host).block_until_ready()      # the GEMM's re-upload
+    t = _best(roundtrip)
+    rows.add("splice/device_roundtrip", t * 1e6, "splice+d2h+h2d")
+
+    t = _best(lambda: recover_bf16_device(exp, sm, (D, F))
+              .block_until_ready())
+    rows.add("splice/device_resident", t * 1e6, "splice stays on device")
+
+    slab = DeviceSlabCache(0, {"w": (D, F)}, capacity=E_ACTIVE + 1)
+    dev = recover_bf16_device(exp, sm, (D, F)).block_until_ready()
+    for e in range(E_ACTIVE):
+        slab.put(e, {"w": dev})
+
+    def slab_write():
+        slab.put(E_ACTIVE, {"w": dev})
+        for buf in slab.bufs.values():
+            buf.block_until_ready()
+    t = _best(slab_write)
+    rows.add("splice/slab_write", t * 1e6,
+             f"donated .at[slot].set of {dev.nbytes}B")
+
+    slots = list(range(E_ACTIVE))
+    t_g = _best(lambda: slab.gather("w", slots).block_until_ready())
+    rows.add("splice/slab_gather", t_g * 1e6,
+             f"{E_ACTIVE} experts, device take")
+
+    host_ws = [np.asarray(w, bitfield.BF16) for _ in range(E_ACTIVE)]
+
+    def host_stack():
+        jnp.stack([jnp.asarray(hw) for hw in host_ws]).block_until_ready()
+    t_s = _best(host_stack)
+    rows.add("splice/host_stack_upload", t_s * 1e6,
+             f"{E_ACTIVE} experts, h2d {sum(h.nbytes for h in host_ws)}B")
+    rows.add("splice/gather_vs_host_stack", 0.0,
+             f"{t_s / max(t_g, 1e-12):.2f}x cheaper per step "
+             f"(device={jax.devices()[0].platform})")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

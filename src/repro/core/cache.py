@@ -223,6 +223,20 @@ class HierarchicalCache(_LiveCacheTelemetry):
         for p in POOL_ORDER:
             if expert in self.pools[p]:
                 prev_pool, prev_ent = p, self.pools[p].pop(expert)
+        if expert in self.pinned and prev_pool is not None and (
+                target is None
+                or POOL_ORDER.index(target) > POOL_ORDER.index(prev_pool)):
+            # a pinned (mid-step) resident whose rank would now dispatch it
+            # DOWN (or out) keeps its pool until unpinned: its current
+            # payload may be backing in-flight weights — in device_cache
+            # mode an F slot the FFN is about to gather from — so
+            # re-dispatch is deferred to its next unpinned admission.  The
+            # fresher payload still replaces the old one when it fits.
+            ok, pl = self._fit_payload(payload, prev_pool)
+            if not (ok and pl is not None):
+                pl = prev_ent.payload
+            self.pools[prev_pool][expert] = PoolEntry(expert, pl)
+            return prev_pool
         placed = self._place(expert, target, payload) if target else None
         if placed is None and expert in self.pinned and prev_pool is not None:
             # a pinned (in-flight) resident must never lose residency to its

@@ -26,6 +26,19 @@ class Codec:
     def decompress(self, data: bytes, size: int) -> bytes:
         return data
 
+    def decompress_into(self, data: bytes, out, size: int) -> int:
+        """Decompress `data` directly into the writable buffer `out`
+        (length >= `size`); returns bytes written.  Lets the engine write
+        E-shards straight into a preallocated exponent plane at their shard
+        offsets instead of materialising per-shard arrays and
+        ``np.concatenate``-ing a full plane.  The base implementation
+        decompresses then copies — zstd overrides with a true into-buffer
+        stream read; zlib/raw keep the one copy."""
+        buf = self.decompress(data, size)
+        n = len(buf)
+        out[:n] = buf
+        return n
+
 
 class ZlibCodec(Codec):
     """LZ4HC stand-in (offline container has no lz4 wheel)."""
@@ -62,6 +75,28 @@ class ZstdCodec(Codec):
 
     def decompress(self, data: bytes, size: int) -> bytes:
         return self._ctx().d.decompress(data, max_output_size=size)
+
+    def decompress_into(self, data: bytes, out, size: int) -> int:
+        """Stream-read the frame straight into `out` (no intermediate
+        bytes object): zstd's reader supports ``readinto`` on any writable
+        buffer, so the engine's preallocated exponent plane is filled
+        in place.  A frame larger than `size` raises — the plain
+        ``decompress(max_output_size=size)`` path errors on oversized
+        frames, and silent truncation here would hand the recovery a
+        corrupt exponent plane."""
+        import io
+        mv = memoryview(out)
+        n = 0
+        with self._ctx().d.stream_reader(io.BytesIO(data)) as r:
+            while n < size:
+                got = r.readinto(mv[n:size])
+                if not got:
+                    break
+                n += got
+            if n == size and r.read(1):
+                raise ValueError(
+                    f"zstd frame decompresses past the expected {size} bytes")
+        return n
 
 
 _REGISTRY: Dict[str, Callable[[], Codec]] = {

@@ -54,6 +54,17 @@ Payload semantics per cache pool:
 eviction) — the live baseline the Fig. 10 ablation compares against; the
 reconstruction pipeline and block scheduling are identical, so flat and
 hierarchical serving produce bit-identical outputs.
+
+``device_cache=True`` moves the F tier onto the accelerator: recovery
+uploads the two u8 planes once and splices on device
+(``kernels/ops.recover_bf16_device``), F-pool admission writes the spliced
+tensors into a per-layer :class:`~repro.core.slab.DeviceSlabCache` slot via
+a donated in-place update, and payloads carry :class:`SlotRef` handles
+instead of ndarrays — so a cache-hit decode step moves zero expert-weight
+bytes host→device (``transfer_summary()['h2d_bytes']``).  Slot lifecycle is
+reconciled against F-pool residency on the decode thread after every
+collect phase; generation counters make stale refs detectable, and the
+demotion hook re-derives the SM plane from a one-time slot download on F→S.
 """
 from __future__ import annotations
 
@@ -71,6 +82,7 @@ from repro.core import bitfield
 from repro.core.cache import (HierarchicalCache, LiveFlatCache, PoolEntry,
                               pool_summary)
 from repro.core.scheduler import build_blocks
+from repro.core.slab import DeviceSlabCache, SlotRef
 from repro.core.states import CState, Task
 from repro.core.store import ExpertStore
 from repro.core.workload import FreqTracker
@@ -129,7 +141,10 @@ class _FetchJob:
         self.payloads: Dict[Tuple[int, int], ExpertPayload] = {}
         self.e_data: Dict[Tuple[int, int], bytes] = {}    # (uid, shard)
         self.sm_data: Dict[int, bytes] = {}               # uid -> sm bytes
-        self.dec_out: Dict[Tuple[int, int], np.ndarray] = {}
+        # uid -> preallocated exponent plane; workers decompress each
+        # E-shard directly into its shard_bounds slice (zero-copy assembly,
+        # no per-shard arrays + full-plane concatenate)
+        self.exp_buf: Dict[int, np.ndarray] = {}
         self.dec_needed: Dict[int, int] = {}
         # (layer, expert, tidx) -> recovered tensor
         self.done_tensors: Dict[Tuple[int, int, int], np.ndarray] = {}
@@ -262,15 +277,31 @@ class ZipMoEEngine:
                  L: int = 4, pool_sizes: Optional[Dict[str, int]] = None,
                  recover_fn: Optional[Callable] = None, delta: int = 1,
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
-                 flat_policy: str = "lru", freq_decay: float = 1.0):
+                 flat_policy: str = "lru", freq_decay: float = 1.0,
+                 device_cache: bool = False):
         assert cache_mode in ("hier", "flat")
         assert 0.0 < freq_decay <= 1.0, freq_decay
+        assert not (device_cache and recover_fn is not None), \
+            "device_cache owns recovery (device splice + slab residency)"
         self.store = store
         self.L = L
         self.cache_mode = cache_mode
         self.freq_decay = freq_decay
-        self.recover = recover_fn or (lambda e, sm, shape: bitfield.reconstruct_np(
-            e, np.frombuffer(sm, np.uint8), shape))
+        self.device_cache = device_cache
+        # h2d/splice telemetry (device mode uploads the two u8 planes once
+        # per reconstruction; the serving layer also charges host-array
+        # GEMM staging here so "zero weight bytes moved" is provable)
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.splice_s = 0.0
+        self.splice_ops = 0
+        self._slabs: Dict[int, Optional[DeviceSlabCache]] = {}
+        if device_cache:
+            self.recover = self._recover_device
+        else:
+            self.recover = recover_fn or (
+                lambda e, sm, shape: bitfield.reconstruct_np(
+                    e, np.frombuffer(sm, np.uint8), shape))
         sizes = pool_sizes or {"F": 4, "C": 4, "S": 8, "E": 8}
         self.caches: Dict[int, object] = {}
         self.trackers: Dict[int, FreqTracker] = {}
@@ -317,12 +348,16 @@ class ZipMoEEngine:
             th.start()
 
     def shutdown(self):
-        """Stop the pool.  In-flight jobs are finished first."""
+        """Stop the pool.  In-flight jobs are finished first; the store's
+        cached FDs are released once the I/O thread is down."""
         with self._cv:
             self._stop = True
             self._cv.notify_all()
         for th in self._threads:
             th.join(timeout=5.0)
+        close = getattr(self.store, "close", None)
+        if close is not None:
+            close()
 
     def __enter__(self):
         return self
@@ -359,19 +394,137 @@ class ZipMoEEngine:
         return self.u, self.c
 
     # ------------------------------------------------------------------
+    # device-resident slabs (device_cache mode)
+    # ------------------------------------------------------------------
+    def count_h2d(self, nbytes: int):
+        """Charge `nbytes` of host->device expert-weight traffic (the
+        serving layer calls this when it stages host arrays for the GEMM)."""
+        with self._cv:
+            self.h2d_bytes += int(nbytes)
+
+    def _recover_device(self, exp, sm, shape):
+        """Device recovery hook: upload the two u8 planes once, splice on
+        device (Pallas kernel; interpret mode on CPU), return the bf16
+        tensor WITHOUT downloading it — the slab write / grouped GEMM
+        consume it in place."""
+        from repro.kernels.ops import recover_bf16_device
+        exp_np = np.asarray(exp)
+        sm_np = (np.frombuffer(sm, np.uint8)
+                 if isinstance(sm, (bytes, bytearray)) else np.asarray(sm))
+        t0 = time.perf_counter()
+        out = recover_bf16_device(exp_np, sm_np, shape)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        with self._cv:
+            self.h2d_bytes += exp_np.nbytes + sm_np.nbytes
+            self.splice_s += dt
+            self.splice_ops += 1
+        return out
+
+    def _slab(self, layer: int) -> Optional[DeviceSlabCache]:
+        """The layer's slab (lazily built from the store's tensor shapes;
+        capacity = the layer's F-pool size).  None when F capacity is 0."""
+        if not self.device_cache:
+            return None
+        if layer not in self._slabs:
+            cap = self.caches[layer].cap.get("F", 0)
+            if cap <= 0:
+                self._slabs[layer] = None
+            else:
+                expert = min((e for (l, e) in self.store.groups
+                              if l == layer), default=None)
+                if expert is None:
+                    self._slabs[layer] = None
+                else:
+                    shapes = {t.name: tuple(t.shape) for t in
+                              self.store.groups[(layer, expert)].tensors}
+                    self._slabs[layer] = DeviceSlabCache(layer, shapes, cap)
+        return self._slabs[layer]
+
+    def _reconcile_slab(self, layer: int):
+        """Sync the layer's slab with its F pool (decode thread, after the
+        admissions of one collect phase): slots of experts that left F are
+        freed (generation bump — outstanding SlotRefs turn stale), and
+        newly F-resident experts' device tensors are written into a slot
+        via the donated in-place update, their payloads swapped to
+        SlotRefs.  Because F occupancy never exceeds the slab capacity,
+        freeing the leavers always leaves room for the arrivals."""
+        slab = self._slab(layer)
+        if slab is None:
+            return
+        fpool = self.caches[layer].pools["F"]
+        for e in [e for e in slab.slot_of if e not in fpool]:
+            slab.free(e)
+        names = None
+        for e, ent in fpool.items():
+            pl = ent.payload
+            if pl is None or not isinstance(pl, ExpertPayload) or not pl.full:
+                continue
+            if all(isinstance(v, SlotRef) and v.valid
+                   for v in pl.full.values()):
+                continue               # already slab-resident
+            if names is None:
+                names = [t.name for t in
+                         self.store.groups[(layer, e)].tensors]
+            tensors = {}
+            for tidx, v in pl.full.items():
+                tensors[names[tidx]] = v.read() if isinstance(v, SlotRef) \
+                    else v
+            refs = slab.put(e, tensors)
+            pl.full = {tidx: refs[names[tidx]] for tidx in pl.full}
+
+    def _refetch_tensor(self, l: int, e: int, tidx: int):
+        """Materialise one tensor whose slab SlotRef went stale while its
+        job was pending: exact-range store reads on the caller's thread,
+        uploaded (and charged to ``h2d_bytes``) in device mode."""
+        arr = self.store.load_tensor((l, e), tidx)
+        if not self.device_cache:
+            return arr
+        import jax.numpy as jnp
+        with self._cv:
+            self.h2d_bytes += arr.nbytes
+        return jnp.asarray(arr)
+
     @staticmethod
-    def _demote_payload(payload, pool: str) -> Optional["ExpertPayload"]:
+    def _full_payload_usable(pl: "ExpertPayload") -> bool:
+        """No stale SlotRefs: a freed/reused slot must never be re-admitted
+        as if it still held the old expert's weights."""
+        return all((not isinstance(v, SlotRef)) or v.valid
+                   for v in pl.full.values())
+
+    @staticmethod
+    def _sm_plane_of(arr) -> Optional[bytes]:
+        """Re-derive one tensor's SM plane for F→S demotion, whatever the F
+        payload holds: host ndarray (cheap numpy bit-split), fused-mode
+        BitPlanes (already split), a slab SlotRef (one-time slot download),
+        or a device array."""
+        if isinstance(arr, np.ndarray):
+            return bitfield.decompose_np(arr)[1].tobytes()
+        if hasattr(arr, "sm"):                 # fused-mode BitPlanes
+            return np.asarray(arr.sm).tobytes()
+        if isinstance(arr, SlotRef):
+            if not arr.valid:
+                return None
+            return bitfield.decompose_np(arr.read_np())[1].tobytes()
+        try:                                   # device (jax) array
+            return bitfield.decompose_np(np.asarray(arr))[1].tobytes()
+        except Exception:                      # pragma: no cover
+            return None
+
+    def _demote_payload(self, payload, pool: str) -> Optional["ExpertPayload"]:
         """§3.4 demotion hook: keep only the bytes the target pool can serve
         (C→S keeps SM-chunks, C→E keeps E-chunks, F→S re-derives the SM plane
-        from the resident tensors — a cheap numpy bit-split).  Returns None
+        from the resident tensors — a numpy bit-split, preceded by a one-time
+        slot download when the tensors live in a device slab).  Returns None
         when nothing real can back the pool, so the cache drops the entry
         instead of keeping a byte-less placeholder that would count as a hit
         but cost a full refetch."""
         if not isinstance(payload, ExpertPayload):
             return None
         if pool == "F":
-            return ExpertPayload(full=dict(payload.full)) \
-                if payload.full else None
+            if not payload.full or not self._full_payload_usable(payload):
+                return None
+            return ExpertPayload(full=dict(payload.full))
         has_sm = bool(payload.sm)
         has_e = bool(payload.e)
         if pool == "C":
@@ -384,12 +537,10 @@ class ZipMoEEngine:
             if payload.full:
                 sm = {}
                 for tidx, arr in payload.full.items():
-                    if isinstance(arr, np.ndarray):
-                        sm[tidx] = bitfield.decompose_np(arr)[1].tobytes()
-                    elif hasattr(arr, "sm"):          # fused-mode BitPlanes
-                        sm[tidx] = np.asarray(arr.sm).tobytes()
-                    else:
+                    smb = self._sm_plane_of(arr)
+                    if smb is None:
                         return None
+                    sm[tidx] = smb
                 return ExpertPayload(sm=sm)
             return None
         if pool == "E":
@@ -517,6 +668,25 @@ class ZipMoEEngine:
             out["window_steps"] = self._window_every
             out["windows"] = [dict(w) for w in self._windows]
         return out
+
+    def transfer_summary(self) -> Dict[str, float]:
+        """Host↔device weight-traffic telemetry: bytes uploaded for plane
+        recovery / host-array GEMM staging (``h2d_bytes``), bytes downloaded
+        for F→S demotions (``d2h_bytes``), device-splice wall time, and slab
+        occupancy.  A fully cache-hit decode step must add zero to
+        ``h2d_bytes`` in device_cache mode — the regression test's
+        acceptance criterion."""
+        slabs = [s for s in self._slabs.values() if s is not None]
+        return {
+            "device_cache": self.device_cache,
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes + sum(s.d2h_bytes for s in slabs),
+            "splice_ms": self.splice_s * 1e3,
+            "splice_ops": self.splice_ops,
+            "slab_writes": sum(s.writes for s in slabs),
+            "slab_resident": sum(len(s.slot_of) for s in slabs),
+            "slab_bytes": sum(s.nbytes() for s in slabs),
+        }
 
     # ------------------------------------------------------------------
     def fetch_experts(self, layer: int, expert_ids: Sequence[int],
@@ -790,11 +960,17 @@ class ZipMoEEngine:
                 _, seq, _, uid, k = heapq.heappop(self._dec_ready)
                 job = self._jobs[seq]
                 data = job.e_data[(uid, k)]
+                l, e, tidx = job.metas[uid]
+                buf = job.exp_buf.get(uid)
+                if buf is None:
+                    tm = self.store.groups[(l, e)].tensors[tidx]
+                    buf = job.exp_buf[uid] = np.empty(tm.n_elems, np.uint8)
             t = job.task_by_uid[uid]
-            l, e, tidx = job.metas[uid]
-            plane = self.store.decompress_e((l, e), tidx, k, data)
+            # shards land at disjoint shard_bounds offsets of one
+            # preallocated plane — concurrent workers never overlap, and
+            # _finish_tensor consumes the plane without a concatenate
+            self.store.decompress_e_into((l, e), tidx, k, data, buf)
             with self._cv:
-                job.dec_out[(uid, k)] = plane
                 job.dec_needed[uid] -= 1
                 job.stats.dec_ops += 1
                 ready = self._claim_if_ready(job, t)
@@ -818,8 +994,7 @@ class ZipMoEEngine:
         """Bit-splice recovery, off the pool lock (claimed by one thread)."""
         u = t.uid
         l, e, tidx = job.metas[u]
-        shards = [job.dec_out[(u, k)] for k in range(t.k_shards)]
-        exp = np.concatenate(shards)
+        exp = job.exp_buf.pop(u)       # fully assembled (dec_needed hit 0)
         tm = self.store.groups[(l, e)].tensors[tidx]
         arr = self.recover(exp, job.sm_data[u], tm.shape)
         with self._cv:
@@ -856,8 +1031,21 @@ class ZipMoEEngine:
         out: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
         for (l, e) in subset:
             g = self.store.groups[(l, e)]
-            out[(l, e)] = {tm.name: job.done_tensors[(l, e, tidx)]
-                           for tidx, tm in enumerate(g.tensors)}
+            w = {}
+            for tidx, tm in enumerate(g.tensors):
+                v = job.done_tensors[(l, e, tidx)]
+                if isinstance(v, SlotRef) and not v.valid:
+                    # the job seeded this tensor as an F no-op, but the
+                    # expert was evicted (slot freed, maybe reused) while
+                    # the job was pending — e.g. a cross-layer drain
+                    # admitting into a later layer's cache before that
+                    # layer's step pins exist.  The device bytes are gone:
+                    # re-load from the store (rare; the write-back below
+                    # also re-warms the cache on this expert's admission)
+                    v = self._refetch_tensor(l, e, tidx)
+                    job.done_tensors[(l, e, tidx)] = v
+                w[tm.name] = v
+            out[(l, e)] = w
         for (l, e) in subset:
             cache = self.caches[l]
             if (l, e) in job.collected and \
@@ -887,7 +1075,16 @@ class ZipMoEEngine:
                             job.payloads[(l, e)].e.get((tidx, k)))
                         if eb is not None:
                             pl.e[(tidx, k)] = eb
+            elif self.device_cache and not self._full_payload_usable(pl):
+                # a speculative tail seeded from F-residency whose slot was
+                # since freed: the bytes are gone, never admit the stale
+                # refs as if they still named this expert's weights (the
+                # hierarchical path handles this inside the demote hook)
+                continue
             cache.admit(e, pl)
+        if self.device_cache:
+            for l in {l for l, _ in subset}:
+                self._reconcile_slab(l)
         # release this job's own demand pins exactly once per expert (pins
         # are refcounted: a step's independent pin on the same expert, taken
         # via pin_experts, survives this release)

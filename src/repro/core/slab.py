@@ -1,0 +1,158 @@
+"""Device-resident expert slabs: preallocated stacked weight buffers.
+
+The decode hot path historically paid a host-side staging tax the paper's
+CUDA pipeline avoids: every step re-uploaded and re-stacked the active
+experts' full bf16 weights from host numpy, even when every expert was an
+F-pool cache hit.  A :class:`DeviceSlabCache` removes that tax — per MoE
+layer it preallocates one device buffer of shape ``[capacity, *tensor_shape]``
+per expert tensor name (capacity = the layer's F-pool size), and F-pool
+residency maps experts to *slots* in those buffers:
+
+* **write** — a freshly spliced tensor (already on device, see
+  ``kernels/ops.recover_bf16_device``) lands in its slot via a *donated*
+  ``.at[slot].set`` update: XLA reuses the slab buffer in place instead of
+  copying ``capacity × bytes`` per admission.
+* **gather** — the grouped FFN pulls the step's active experts with one
+  ``jnp.take`` per tensor name: a device-side gather, zero host↔device
+  traffic on a cache-hit step.
+* **free/reuse** — slots carry a generation counter; freeing a slot bumps
+  it, so a stale :class:`SlotRef` held by an in-flight speculative job can
+  be detected (``ref.valid``) and is never re-admitted as if it still named
+  the old expert's weights.
+
+Thread model: all slab mutation happens on the engine caller's (decode)
+thread — the same single-mutator discipline as the cache pools.  Worker
+threads only produce the device tensors that are later written here.
+
+Donation caveat (DESIGN.md §3.5): on backends without in-place donation
+support XLA silently falls back to copy-on-write; correctness is unchanged,
+only the write cost grows to O(capacity).  CPU jax ≥ 0.4.3x donates
+in-place (the unit test asserts the old buffer is actually deleted).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slab_set(buf: jnp.ndarray, slot: jnp.ndarray, val: jnp.ndarray
+              ) -> jnp.ndarray:
+    """Donated slot write: the old slab buffer is consumed in place."""
+    return jax.lax.dynamic_update_index_in_dim(buf, val, slot, 0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _slab_take(buf: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(buf, slots, axis=0)
+
+
+@dataclass(frozen=True)
+class SlotRef:
+    """Handle to one tensor of one expert inside a slab.
+
+    Cache payloads in ``device_cache`` mode carry these instead of
+    ndarrays.  A ref is only as durable as its slot's generation: freeing
+    the slot (F-pool eviction/demotion) bumps ``slab.gen[slot]`` and every
+    outstanding ref for the old occupant turns invalid."""
+    slab: "DeviceSlabCache"
+    slot: int
+    gen: int
+    name: str
+
+    @property
+    def valid(self) -> bool:
+        return self.slab.gen[self.slot] == self.gen
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.slab.shapes[self.name]
+
+    def read(self) -> jnp.ndarray:
+        """Device view of the slot's tensor (no host transfer)."""
+        assert self.valid, f"stale SlotRef {self.name}@{self.slot}"
+        return self.slab.bufs[self.name][self.slot]
+
+    def read_np(self) -> np.ndarray:
+        """One-time d2h download (used by F→S payload demotion)."""
+        arr = np.asarray(self.read())
+        self.slab.d2h_bytes += arr.nbytes
+        return arr
+
+
+class DeviceSlabCache:
+    """Per-layer stacked device buffers backing the F pool's residents."""
+
+    def __init__(self, layer: int, shapes: Dict[str, Tuple[int, ...]],
+                 capacity: int, dtype=jnp.bfloat16):
+        assert capacity > 0, capacity
+        self.layer = layer
+        self.capacity = int(capacity)
+        self.shapes = {name: tuple(s) for name, s in shapes.items()}
+        self.dtype = dtype
+        self.bufs: Dict[str, jnp.ndarray] = {
+            name: jnp.zeros((self.capacity,) + tuple(s), dtype)
+            for name, s in self.shapes.items()}
+        self.slot_of: Dict[int, int] = {}          # expert -> slot
+        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
+        self.gen: List[int] = [0] * self.capacity
+        self.writes = 0                             # slot-write count
+        self.d2h_bytes = 0                          # demotion downloads
+
+    # -- queries -----------------------------------------------------------
+    def __contains__(self, expert: int) -> bool:
+        return expert in self.slot_of
+
+    def refs(self, expert: int) -> Dict[str, SlotRef]:
+        slot = self.slot_of[expert]
+        g = self.gen[slot]
+        return {name: SlotRef(self, slot, g, name) for name in self.shapes}
+
+    def nbytes(self) -> int:
+        return sum(int(b.size) * b.dtype.itemsize for b in self.bufs.values())
+
+    # -- mutation (decode thread only) -------------------------------------
+    def put(self, expert: int, tensors: Dict[str, jnp.ndarray]
+            ) -> Dict[str, SlotRef]:
+        """Write `tensors` (device arrays, one per name) into the expert's
+        slot — allocating one if needed — via donated in-place updates."""
+        assert set(tensors) == set(self.shapes), (set(tensors),
+                                                  set(self.shapes))
+        slot = self.slot_of.get(expert)
+        if slot is None:
+            assert self._free, f"slab full (capacity={self.capacity})"
+            slot = self._free.pop()
+            self.slot_of[expert] = slot
+        idx = jnp.int32(slot)
+        for name, val in tensors.items():
+            assert tuple(val.shape) == self.shapes[name], (name, val.shape)
+            self.bufs[name] = _slab_set(self.bufs[name],
+                                        idx, jnp.asarray(val, self.dtype))
+        self.writes += 1
+        return self.refs(expert)
+
+    def free(self, expert: int):
+        """Release the expert's slot; bumping the generation invalidates
+        every outstanding SlotRef to the old occupant."""
+        slot = self.slot_of.pop(expert, None)
+        if slot is None:
+            return
+        self.gen[slot] += 1
+        self._free.append(slot)
+
+    # -- the hot-path read -------------------------------------------------
+    def gather(self, name: str, slots: Sequence[int]) -> jnp.ndarray:
+        """``[len(slots), *shape]`` device gather — the grouped FFN's
+        replacement for stacking host arrays."""
+        return _slab_take(self.bufs[name],
+                          jnp.asarray(list(slots), jnp.int32))
+
+    def summary(self) -> Dict[str, object]:
+        return {"layer": self.layer, "capacity": self.capacity,
+                "resident": len(self.slot_of), "writes": self.writes,
+                "d2h_bytes": self.d2h_bytes, "nbytes": self.nbytes()}

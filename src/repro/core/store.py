@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -141,13 +142,46 @@ class ExpertStore:
         self.bandwidth = bandwidth_gbps * 1e9 if bandwidth_gbps else None
         self.io_bytes = 0           # counters for benchmarks
         self.io_time = 0.0
+        # per-thread FD cache: the I/O thread issues thousands of
+        # exact-range reads per trace against a handful of .bin files —
+        # open/close per chunk read was pure syscall tax.  FDs are
+        # thread-local (seek+read races are impossible) but registered
+        # globally so close() can release every descriptor at shutdown.
+        self._fd_local = threading.local()
+        self._fd_lock = threading.Lock()
+        self._open_files: List = []
+        self.open_calls = 0         # actual open() count (FD-cache telemetry)
+
+    def _fd(self, fname: str):
+        cache = getattr(self._fd_local, "fds", None)
+        if cache is None:
+            cache = self._fd_local.fds = {}
+        f = cache.get(fname)
+        if f is None or f.closed:
+            f = open(os.path.join(self.path, fname), "rb")
+            cache[fname] = f
+            with self._fd_lock:
+                self.open_calls += 1
+                self._open_files.append(f)
+        return f
+
+    def close(self):
+        """Release every cached FD (engine shutdown hook).  Idempotent; a
+        straggler read after close() transparently reopens."""
+        with self._fd_lock:
+            for f in self._open_files:
+                try:
+                    f.close()
+                except OSError:  # pragma: no cover
+                    pass
+            self._open_files.clear()
 
     # -- raw range read (the I/O thread op) --------------------------------
     def _read(self, fname: str, offset: int, size: int) -> bytes:
         t0 = time.perf_counter()
-        with open(os.path.join(self.path, fname), "rb") as f:
-            f.seek(offset)
-            data = f.read(size)
+        f = self._fd(fname)
+        f.seek(offset)
+        data = f.read(size)
         el = time.perf_counter() - t0
         if self.bandwidth:
             want = size / self.bandwidth
@@ -172,6 +206,20 @@ class ExpertStore:
         t = self.groups[key].tensors[tidx]
         return np.frombuffer(
             self.codec.decompress(data, t.e_raw_sizes[shard]), np.uint8)
+
+    def decompress_e_into(self, key, tidx: int, shard: int, data: bytes,
+                          out: np.ndarray) -> int:
+        """Decompress one E-shard directly into the tensor's preallocated
+        exponent plane `out` (u8, length n_elems) at its shard offset —
+        the zero-copy shard-assembly path (no per-shard array, no
+        full-plane concatenate).  Returns bytes written."""
+        t = self.groups[key].tensors[tidx]
+        off = sum(t.e_raw_sizes[:shard])
+        n = t.e_raw_sizes[shard]
+        got = self.codec.decompress_into(
+            data, memoryview(out)[off:off + n], n)
+        assert got == n, (key, tidx, shard, got, n)
+        return n
 
     # -- convenience full loads --------------------------------------------
     def load_tensor(self, key, tidx: int) -> np.ndarray:

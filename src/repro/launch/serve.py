@@ -19,6 +19,10 @@ Cache knobs (§3.4):
                        hierarchy (--flat-policy lru|fifo|lfu|marking,
                        --flat-capacity N; default N = sum of pool sizes)
 --delta              : δ rank-tolerance margin of the dispatch thresholds
+--device-cache       : device-resident expert slabs — the F tier lives on
+                       the accelerator, recovery splices on device, and the
+                       grouped FFN gathers weights by slab slot (zero
+                       host→device weight bytes on a cache-hit step)
 
 Scheduler knobs (§3.3):
 --profile-p-times    : feed Algorithm 1 *measured* per-expert grouped-GEMM
@@ -87,6 +91,10 @@ def main():
                     help="flat-mode capacity (default: sum of pool sizes)")
     ap.add_argument("--delta", type=int, default=1,
                     help="dispatch-threshold rank tolerance δ")
+    ap.add_argument("--device-cache", action="store_true",
+                    help="device-resident expert slabs: splice on device, "
+                         "F pool holds slab slots, grouped FFN gathers by "
+                         "slot index (no per-step host re-upload)")
     ap.add_argument("--profile-p-times", action="store_true",
                     help="sort Algorithm-1 blocks by measured per-expert "
                          "grouped-GEMM times instead of class constants")
@@ -136,7 +144,8 @@ def main():
                    profile_p_times=args.profile_p_times,
                    cross_layer_depth=args.cross_layer_depth,
                    freq_decay=args.freq_decay,
-                   cache_window=args.cache_window)
+                   cache_window=args.cache_window,
+                   device_cache=args.device_cache)
 
     if args.mode == "zipmoe-batch":
         srv = BatchServer(None, cfg, max_batch=args.batch,
@@ -172,6 +181,12 @@ def main():
           f"{ov['total_fetch_s']*1e3:.1f}ms fetch "
           f"(frac={ov['hidden_frac']:.2f}, pred_hits={ov['pred_hits']} "
           f"misses={ov['pred_misses']})")
+    n_steps = max(1, args.max_new)
+    print(f"transfer: h2d={ov['h2d_bytes']/1e6:.2f}MB "
+          f"({ov['h2d_bytes']/n_steps/1e3:.1f}kB/step) "
+          f"splice={ov['splice_ms']:.1f}ms/{ov['splice_ops']}ops "
+          f"slab_writes={ov['slab_writes']} "
+          f"slab_resident={ov['slab_resident']}")
     print_sched_telemetry(zs, args)
     zs.close()
 

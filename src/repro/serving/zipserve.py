@@ -37,6 +37,14 @@ Two beyond-loop mechanisms turn the I/O-bound sync path compute-centric
   hosts, Mosaic on TPU).  With ``fused_recovery=True`` the engine hands back
   the raw bit-planes and ``zip_gemm`` splices them to bf16 on VREGs inside
   the GEMM, skipping the recovered weight's HBM round-trip.
+* **Device-resident expert slabs** (``device_cache=True``) — the F pool
+  lives on the accelerator: recovery uploads the two u8 planes once and
+  splices on device, F-admission writes the tensor into a per-layer
+  ``core/slab.DeviceSlabCache`` slot (donated in-place update), and the
+  grouped FFN gathers the step's experts by *slot index* with one
+  ``jnp.take`` per tensor instead of re-stacking host arrays — a fully
+  cache-hit decode step moves **zero** expert-weight bytes host→device
+  (``overlap_summary()['h2d_bytes']``, regression-tested).
 
 ``ZipServer.decode_step`` is validated against the fully-resident
 ``models.decode_step`` (bit-equal routing; identical logits up to dtype
@@ -61,6 +69,7 @@ import numpy as np
 
 from repro.core.engine import FetchHandle, ZipMoEEngine
 from repro.core.profiles import GemmProfiler
+from repro.core.slab import SlotRef
 from repro.core.store import ExpertStore
 from repro.kernels.ops import fused_zip_gemm, grouped_expert_gemm
 from repro.models import attention as attn_lib
@@ -101,14 +110,19 @@ class ZipServer:
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
                  flat_policy: str = "lru", delta: int = 1,
                  profile_p_times: bool = False, cross_layer_depth: int = 0,
-                 freq_decay: float = 1.0, cache_window: int = 0):
+                 freq_decay: float = 1.0, cache_window: int = 0,
+                 device_cache: bool = False):
         assert ffn_impl in ("grouped", "loop")
         assert cross_layer_depth >= 0
+        assert not (device_cache and fused_recovery), \
+            "fused_recovery keeps weights as host bit-planes; device_cache " \
+            "keeps them spliced on device — pick one"
         self.cfg = cfg
         self.prefetch = prefetch
         self.prefetch_width = prefetch_width
         self.ffn_impl = ffn_impl
         self.fused_recovery = fused_recovery
+        self.device_cache = device_cache
         self.profile_p_times = profile_p_times
         self.cross_layer_depth = cross_layer_depth
         self.layers = unstack_layers(params["decoder"], cfg)
@@ -117,14 +131,22 @@ class ZipServer:
         recover = None
         if fused_recovery:
             recover = _planes_recover
-        elif use_pallas_recovery:
+        elif use_pallas_recovery and not device_cache \
+                and ffn_impl != "grouped":
             from repro.kernels.ops import recover_bf16_host
-            recover = recover_bf16_host
+            recover = recover_bf16_host       # host-loop oracle needs numpy
         self.engine = ZipMoEEngine(
             store, n_experts=max(1, cfg.n_experts), n_layers=cfg.n_layers,
             L=L, pool_sizes=pool_sizes, recover_fn=recover,
             cache_mode=cache_mode, flat_capacity=flat_capacity,
-            flat_policy=flat_policy, delta=delta, freq_decay=freq_decay)
+            flat_policy=flat_policy, delta=delta, freq_decay=freq_decay,
+            device_cache=device_cache)
+        if use_pallas_recovery and not device_cache and ffn_impl == "grouped":
+            # the grouped GEMM consumes the spliced tensor on device — keep
+            # it there instead of the historical device→host→device round
+            # trip, via the engine's counting wrapper so the plane uploads
+            # and splice time land in the h2d_bytes/splice_ms telemetry
+            self.engine.recover = self.engine._recover_device
         self.engine.profile()
         if cache_window:
             self.engine.enable_cache_windows(cache_window)
@@ -382,13 +404,15 @@ class ZipServer:
         in_flight = self._in_flight(layer_idx)
         covered = [e for e in ids if e in in_flight]
         missing = [e for e in ids if e not in in_flight]
-        # pin the covered selection for the whole step (pins are refcounted,
-        # so a pending job releasing its own pin on the same expert cannot
-        # release ours; the missing half is pinned by its own submit below)
-        # and record the access BEFORE any of this step's admissions, so
-        # hit/miss telemetry reflects residency at step start (the demand
-        # fallback records its own at submit)
-        self.engine.pin_experts(layer_idx, covered)
+        # pin the WHOLE selection for the step (pins are refcounted, so a
+        # pending job releasing its own pin on the same expert cannot
+        # release ours; the missing half's submit below also pins, but its
+        # job pins release at collection — before the drain, whose
+        # admissions must still not evict any selected expert) and record
+        # the access BEFORE any of this step's admissions, so hit/miss
+        # telemetry reflects residency at step start (the demand fallback
+        # records its own at submit)
+        self.engine.pin_experts(layer_idx, ids)
         self.engine.note_access(layer_idx, covered)
         # a misprediction's demand fetch is submitted BEFORE waiting on the
         # prediction jobs: `missing` is disjoint from every in-flight
@@ -430,24 +454,31 @@ class ZipServer:
             ov["fetch_wait_s"] += h_m.wait_s
         else:
             ov["pred_hits"] += 1
-        # every admission of this step is done: release the step pins
-        self.engine.unpin_experts(layer_idx, covered)
         blocked = time.perf_counter() - t0
         # drain finished prediction jobs AFTER they served this step's
         # coverage: their unused tails are admitted to the cache and leave
         # the in-flight set, then the next step's prediction excludes every
         # still-in-flight expert (no duplicate fetches) and may re-include
-        # drained residents, which become F-state no-op tasks
+        # drained residents, which become F-state no-op tasks.  The step
+        # pins are still held through the drain — its admissions must never
+        # evict a selected expert before the FFN consumes it (in
+        # device_cache mode an eviction would free the expert's slab slot
+        # under the weights this function is about to return)
         io_bytes += self._drain(layer_idx)
+        self.engine.unpin_experts(layer_idx, ids)
         self._issue_step(layer_idx, [], batch)
         return weights, io_bytes, blocked
 
     def overlap_summary(self) -> Dict[str, float]:
-        """Fetch time hidden under compute / total fetch wall time."""
+        """Fetch time hidden under compute / total fetch wall time, plus
+        the host↔device weight-traffic counters (``h2d_bytes`` /
+        ``splice_ms`` etc. — zero h2d on a fully cache-hit device-mode
+        step; see ``engine.transfer_summary``)."""
         ov = self.overlap_stats
         total = ov["fetch_wall_s"] + ov["blocking_s"]
         hidden = ov["fetch_wall_s"] - ov["fetch_wait_s"]
-        return {**ov, "total_fetch_s": total, "hidden_fetch_s": hidden,
+        return {**ov, **self.engine.transfer_summary(),
+                "total_fetch_s": total, "hidden_fetch_s": hidden,
                 "hidden_frac": hidden / total if total > 0 else 0.0}
 
     def cache_summary(self, per_layer: bool = False,
@@ -476,13 +507,13 @@ class ZipServer:
             acc = jnp.zeros((1, 1, x.shape[-1]), x.dtype)
             for slot in range(cfg.top_k):
                 e = int(top_i[b, 0, slot])
-                w = weights[e]
+                w = {k: self._as_weight(v) for k, v in weights[e].items()}
                 xb = x[b:b + 1]
-                h = jax.nn.silu(xb @ jnp.asarray(w["w_gate"])) * \
-                    (xb @ jnp.asarray(w["w_up"])) if "w_gate" in w else \
-                    jax.nn.gelu(xb @ jnp.asarray(w["w_up"]))
+                h = jax.nn.silu(xb @ w["w_gate"]) * \
+                    (xb @ w["w_up"]) if "w_gate" in w else \
+                    jax.nn.gelu(xb @ w["w_up"])
                 acc = acc + top_p[b, 0, slot].astype(x.dtype) * \
-                    (h @ jnp.asarray(w["w_down"]))
+                    (h @ w["w_down"])
             y = y.at[b:b + 1].set(acc)
         return y
 
@@ -513,6 +544,38 @@ class ZipServer:
                 gates[r, c] = g
         return gather, gates
 
+    def _as_weight(self, v) -> jnp.ndarray:
+        """One expert tensor as a device array: slab slots read in place,
+        device arrays pass through, host ndarrays pay (and are charged) an
+        upload."""
+        if isinstance(v, SlotRef):
+            return v.read()
+        if isinstance(v, np.ndarray):
+            self.engine.count_h2d(v.nbytes)
+        return jnp.asarray(v)
+
+    def _stack_weights(self, name: str, weights, ids) -> jnp.ndarray:
+        """[Ea, ...] stacked expert weights for the grouped GEMM.
+
+        The device-cache fast path: when every selected expert is resident
+        in the SAME layer slab, one ``jnp.take`` gathers the stack straight
+        from the device buffer — zero weight bytes cross host→device.
+        Mixed steps (a fresh reconstruction not yet slab-admitted rides
+        along as a plain device array) fall back to a device-side stack;
+        host ndarrays (host mode) pay the historical per-step re-upload,
+        charged to the engine's ``h2d_bytes`` so the before/after is
+        measurable."""
+        vals = [weights[e][name] for e in ids]
+        if vals and all(isinstance(v, SlotRef) for v in vals):
+            slab = vals[0].slab
+            # validity is part of the fast-path condition: a stale ref must
+            # never be silently gathered as the slot's NEW occupant — it
+            # falls through to _as_weight, whose read() asserts (a crash
+            # tripwire for slot-lifecycle bugs, not a corruption)
+            if all(v.slab is slab and v.valid for v in vals):
+                return slab.gather(name, [v.slot for v in vals])
+        return jnp.stack([self._as_weight(v) for v in vals])
+
     def _ffn_grouped(self, x, top_p, top_i, weights, ids):
         """Gather-by-expert batched FFN on the grouped-GEMM kernel."""
         B, _, d = x.shape
@@ -522,7 +585,7 @@ class ZipServer:
         xg = xpad[gather]                                   # [Ea, C, d]
 
         def stack(name):
-            return jnp.stack([jnp.asarray(weights[e][name]) for e in ids])
+            return self._stack_weights(name, weights, ids)
 
         C = xg.shape[1]
         gg = lambda a, w: grouped_expert_gemm(
@@ -576,6 +639,12 @@ class ZipServer:
         ids = sorted({int(e) for e in np.asarray(top_i).reshape(-1)})
         B = x.shape[0]
         self._last_ids[layer_idx] = ids
+        # expert-weight transfer attributed to this layer-step (background
+        # reconstruction charges the step it lands in — approximate but
+        # exact in the two cases that matter: 0 on a full cache hit, and
+        # the whole re-upload on a host-mode hit)
+        h2d0 = self.engine.h2d_bytes
+        splice0 = self.engine.splice_s
         if self.prefetch:
             # overlap the next MoE layer's reconstruction with this layer's
             # FFN and the following layers' attention compute
@@ -611,7 +680,9 @@ class ZipServer:
             y = y + apply_mlp(ffn["shared"], x, cfg)
         self.stats.append({"layer": layer_idx, "fetch_s": fetch_s,
                            "blocked_s": blocked_s, "io_bytes": io_bytes,
-                           "n_experts": len(ids)})
+                           "n_experts": len(ids),
+                           "h2d_bytes": self.engine.h2d_bytes - h2d0,
+                           "splice_s": self.engine.splice_s - splice0})
         return y
 
     def decode_step(self, tokens: jnp.ndarray, caches: list, pos: int

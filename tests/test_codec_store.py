@@ -82,3 +82,72 @@ def test_store_reopen_and_bandwidth(tmp_path):
     data = store.read_sm(key, 0)
     assert len(data) == t.sm_size
     assert store.io_time >= t.sm_size / 0.05e9 * 0.9  # throttle respected
+
+
+@pytest.mark.parametrize("name", sorted(_REGISTRY))
+def test_codec_decompress_into(name):
+    """decompress_into fills a caller buffer slice in place (the engine's
+    zero-copy E-shard assembly) and agrees with plain decompress."""
+    c = get_codec(name)
+    rng = np.random.default_rng(3)
+    data = bytes(rng.integers(0, 8, 4096, dtype=np.uint8))
+    comp = c.compress(data)
+    out = np.full(6000, 0xAB, np.uint8)
+    n = c.decompress_into(comp, memoryview(out)[100:100 + len(data)],
+                          len(data))
+    assert n == len(data)
+    assert bytes(out[100:100 + n]) == data
+    assert out[99] == 0xAB and out[100 + n] == 0xAB    # stays in bounds
+
+
+def test_store_decompress_e_into_matches_concat(tmp_path):
+    """Shards decompressed at their shard_bounds offsets reassemble the
+    exact exponent plane the per-shard + concatenate path produced."""
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    store = build_store(params, cfg, str(tmp_path), k_shards=4)
+    key = next(iter(store.groups))
+    for tidx, t in enumerate(store.groups[key].tensors):
+        ref = np.concatenate([
+            store.decompress_e(key, tidx, k, store.read_e(key, tidx, k))
+            for k in range(len(t.e_sizes))])
+        buf = np.empty(t.n_elems, np.uint8)
+        for k in range(len(t.e_sizes)):
+            store.decompress_e_into(key, tidx, k,
+                                    store.read_e(key, tidx, k), buf)
+        assert np.array_equal(buf, ref)
+
+
+def test_store_fd_cache_and_close(tmp_path):
+    """The per-thread FD cache opens each .bin at most once per thread no
+    matter how many exact-range reads hit it; close() releases every FD and
+    a straggler read transparently reopens."""
+    import threading
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    build_store(params, cfg, str(tmp_path))
+    store = ExpertStore(str(tmp_path))
+    keys = list(store.groups)[:3]
+    n_reads = 0
+    for _ in range(10):                      # many reads, few files
+        for key in keys:
+            store.read_sm(key, 0)
+            store.read_e(key, 0, 0)
+            n_reads += 2
+    assert store.open_calls <= len(keys) < n_reads
+
+    def reader():
+        for key in keys:
+            store.read_sm(key, 0)
+
+    th = threading.Thread(target=reader)
+    th.start()
+    th.join()
+    assert store.open_calls <= 2 * len(keys)  # one set per thread, max
+    before = store.open_calls
+    store.close()
+    store.close()                             # idempotent
+    data = store.read_sm(keys[0], 0)          # reopens transparently
+    assert len(data) == store.groups[keys[0]].tensors[0].sm_size
+    assert store.open_calls == before + 1

@@ -110,6 +110,13 @@ class _GatedStore(ExpertStore):
             assert self.release.wait(timeout=30.0), "gate never released"
         return super().decompress_e(key, tidx, shard, data)
 
+    def decompress_e_into(self, key, tidx, shard, data, out):
+        # the workers' op since the zero-copy shard-assembly change —
+        # gate it the same way
+        if key[0] == self.gate_layer:
+            assert self.release.wait(timeout=30.0), "gate never released"
+        return super().decompress_e_into(key, tidx, shard, data, out)
+
 
 def test_result_subset_never_blocks_on_other_layers_tail(moe2_setup):
     """With layer 1's decompression gated shut, layer 0's demand subset must
