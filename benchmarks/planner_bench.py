@@ -1,0 +1,69 @@
+"""§3.4 planner online-speed microbench.
+
+Live re-planning runs ``plan_pools`` once per MoE layer every N decode
+steps, so its wall time is a serving-path cost, not an offline one.  Rows
+compare the naive Algorithm-4 evaluation (full Φ tables, scalar scoring,
+no pruning) against the online fast path (memoized Φ interval tables
+truncated at h = k, vectorised grid scoring, duplicate-size dedup,
+lower-bound early pruning) — identical plans, see
+tests/test_live_planner.py — plus a whole-model ``LivePlanner.plan`` call
+at paper scale.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.core.planner import (LivePlanner, PlanConsts, ipf_selection_probs,
+                                plan_pools)
+from repro.core.workload import effective_k, rank_inclusion_probs, zipf_trace
+
+CONSTS = PlanConsts(u=1e-3, v=1e-4, c=3e-4, L=4, K=4, n_tensors=3)
+BPS = {"F": 2.0, "C": 1.4, "S": 1.0, "E": 0.4}
+
+
+def _bench(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(rows: Rows):
+    for n, k0, batch in ((60, 4, 1), (64, 6, 4)):
+        trace = zipf_trace(n, k0, 800, alpha=1.2, seed=3, batch=batch)
+        f = rank_inclusion_probs(trace, n)
+        k = effective_k(trace)
+        q = ipf_selection_probs(f, k)   # shared: the IPF fit is common cost
+        t_naive = _bench(lambda: plan_pools(f, k, 60.0, BPS, CONSTS,
+                                            step=0.125, q=q, memoize=False,
+                                            prune=False))
+        t_fast = _bench(lambda: plan_pools(f, k, 60.0, BPS, CONSTS,
+                                           step=0.125, q=q))
+        rows.add(f"planner/plan_pools/n{n}_k{k}/naive", t_naive * 1e6, "")
+        rows.add(f"planner/plan_pools/n{n}_k{k}/fast", t_fast * 1e6,
+                 f"speedup={t_naive / max(t_fast, 1e-12):.2f}x")
+    # a full online re-plan: 26 MoE layers' plans from live-style stats
+    layers = list(range(26))
+    stats, bps, consts, weights = {}, {}, {}, {}
+    for l in layers:
+        tr = zipf_trace(64, 6, 400, alpha=1.1 + 0.01 * l, seed=l)
+        stats[l] = (rank_inclusion_probs(tr, 64), effective_k(tr))
+        bps[l] = BPS
+        consts[l] = CONSTS
+        weights[l] = float(1 + (l % 5))
+    lp = LivePlanner(26 * 40.0, step=0.125)
+    t_all = _bench(lambda: lp.plan(stats, bps, consts, weights=weights),
+                   reps=1)
+    rows.add("planner/live_replan/26layer", t_all * 1e6,
+             f"{t_all * 1e3 / len(layers):.1f}ms/layer")
+
+
+if __name__ == "__main__":
+    r = Rows()
+    run(r)
+    r.emit()

@@ -11,6 +11,7 @@ prints ``name,us_per_call,derived`` CSV covering:
   thm31      scheduler approximation bound       (benchmarks/scheduler_bound.py)
   roofline   per-cell roofline terms from dryrun (benchmarks/roofline.py)
   splice     recovery→GEMM staging microbench    (benchmarks/splice.py)
+  planner    §3.4 plan_pools online-speed bench  (benchmarks/planner_bench.py)
 """
 from __future__ import annotations
 
@@ -30,6 +31,7 @@ MODULES = {
     "thm31": "benchmarks.scheduler_bound",
     "roofline": "benchmarks.roofline",
     "splice": "benchmarks.splice",
+    "planner": "benchmarks.planner_bench",
 }
 
 

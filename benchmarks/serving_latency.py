@@ -12,9 +12,13 @@ compare constant-p vs profiled-p (GemmProfiler-measured per-expert
 execution times) and single-layer vs cross-layer block schedules
 (``serving_real/{constant,profiled}_p_{single,cross}_layer``).  Every
 ``serving_real`` row carries ``h2d_bytes/step`` + ``splice_ms/step``
-columns — the expert-weight staging tax — and
+columns — the expert-weight staging tax — plus a ``bytes_occ`` column
+(resident expert bytes, the §3.4 planner's denomination);
 ``serving_real/device_slab_cache`` runs the same stack with the F pool
-as device-resident slabs (`--device-cache`)."""
+as device-resident slabs (`--device-cache`), and
+``serving_real/planned_mem_budget`` replaces fixed pool sizes with
+byte-budgeted live pool planning (``--mem-budget``, 30% of the expert
+bytes, re-planned online)."""
 from __future__ import annotations
 
 import numpy as np
@@ -71,7 +75,10 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
     cfg = get_smoke_config("deepseekv2-lite")
     params = init_params(jax.random.PRNGKey(0), cfg)
     d = tempfile.mkdtemp(prefix="zipmoe-serving-")
-    build_store(params, cfg, d, k_shards=4)
+    store = build_store(params, cfg, d, k_shards=4)
+    # byte budget of the planned row: 30% of the reconstructed expert bytes
+    # (a paper-style memory fraction), planned per layer online
+    budget = 0.3 * sum(g.full_bytes for g in store.groups.values())
     rng = np.random.default_rng(0)
     pools = {"F": 2, "C": 2, "S": 2, "E": 2}       # historical-row capacity
     # §3.4 live ablation rows use capacity (4) < n_experts so the flat-vs-
@@ -107,7 +114,13 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
             # the per-step expert-weight staging tax — cold-splice uploads
             # only in slab mode vs a full re-stack per hit in host mode
             ("device_slab_cache", pools,
-             dict(prefetch=True, ffn_impl="grouped", device_cache=True))):
+             dict(prefetch=True, ffn_impl="grouped", device_cache=True)),
+            # byte-budgeted live pool planning (§3.4 online): per-layer
+            # F/C/S/E splits solved from live ranks under one global byte
+            # budget instead of fixed per-layer expert counts
+            ("planned_mem_budget", None,
+             dict(prefetch=True, ffn_impl="grouped", mem_budget=budget,
+                  replan_every=4, plan_step=0.25))):
         zs = ZipServer(params, cfg, d, L=4, pool_sizes=pp, **kw)
         srv = BatchServer(None, cfg, max_batch=2, max_len=64, zip_server=zs)
         for _ in range(n_requests):
@@ -121,9 +134,15 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
             ps = zs.p_time_summary()
             extra = (f" p_buckets={ps['n_buckets']} "
                      f"profiling_ms={ps['measure_wall_s']*1e3:.0f}")
+        if kw.get("mem_budget"):
+            pls = zs.plan_summary()
+            extra += (f" budget={pls['mem_budget']:.0f} "
+                      f"replans={pls['n_replans']}")
         n_steps = max(1, len(zs.stats) // max(1, len(zs._moe_layers)))
         h2d_step = sum(s["h2d_bytes"] for s in zs.stats) / n_steps
         spl_step = sum(s["splice_s"] for s in zs.stats) / n_steps
+        # the planner's denomination: resident expert bytes across layers
+        bytes_occ = sum(zs.cache_summary()["occupancy_bytes"].values())
         rows.add(f"serving_real/{name}/mean_ttft", m["mean_ttft_s"] * 1e6, "")
         rows.add(f"serving_real/{name}/mean_tpot", m["mean_tpot_s"] * 1e6,
                  f"throughput={m['throughput_tok_s']:.1f}tok/s "
@@ -131,7 +150,8 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
                  f"cache={m.get('cache_mode', '-')} "
                  f"hit_rate={m.get('cache_hit_rate', 0.0):.3f} "
                  f"h2d_bytes/step={h2d_step:.0f} "
-                 f"splice_ms/step={spl_step*1e3:.2f}" + extra)
+                 f"splice_ms/step={spl_step*1e3:.2f} "
+                 f"bytes_occ={bytes_occ:.0f}" + extra)
         zs.close()
     # the constant-p single-layer baseline IS the after_prefetch_grouped
     # configuration — alias its measurement instead of re-running it

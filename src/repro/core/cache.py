@@ -39,9 +39,14 @@ POOL_ORDER = ("F", "C", "S", "E")
 
 
 def pool_summary(mode: str, hits, misses: int, occupancy, capacity,
-                 transitions, evictions: int, pinned: int) -> Dict[str, object]:
+                 transitions, evictions: int, pinned: int,
+                 occupancy_bytes=None,
+                 capacity_bytes=None) -> Dict[str, object]:
     """Shared §3.4 telemetry schema of HierarchicalCache and LiveFlatCache
-    (consumed and Counter-merged by ``engine.cache_summary``)."""
+    (consumed and Counter-merged by ``engine.cache_summary``).  The byte
+    views are present whenever residency costs are known (the live engine
+    derives them from the store's real chunk sizes) — the planner thinks
+    in bytes, so the telemetry must too."""
     n_hits = sum(hits.values())
     acc = n_hits + misses
     return {
@@ -52,6 +57,8 @@ def pool_summary(mode: str, hits, misses: int, occupancy, capacity,
         "hit_rate": n_hits / acc if acc else 0.0,
         "occupancy": dict(occupancy),
         "capacity": dict(capacity),
+        "occupancy_bytes": dict(occupancy_bytes or {}),
+        "capacity_bytes": dict(capacity_bytes or {}),
         "transitions": {f"{a}->{b}": n
                         for (a, b), n in sorted(transitions.items())},
         "evictions": evictions,
@@ -85,6 +92,12 @@ class _LiveCacheTelemetry:
     def _init_telemetry(self):
         self.hits = collections.Counter()
         self.misses = 0
+        # per-expert residency cost per pool (bytes), set by the engine from
+        # the layer's real tensor/chunk sizes; None = byte view unavailable
+        self.cost_bytes: Optional[Dict[str, float]] = None
+        # planned byte capacity per pool (the §3.4 planner's γ_p · budget);
+        # kept next to the derived expert-count caps for telemetry
+        self.cap_bytes: Optional[Dict[str, float]] = None
         # refcounted pins: an expert can be pinned independently by the step
         # that selected it AND by the submit_step fetching it; membership
         # (`e in pinned`) means "pinned by at least one owner"
@@ -117,6 +130,24 @@ class _LiveCacheTelemetry:
         self.misses = 0
         self.transitions.clear()
         self.evictions = 0
+
+    def bytes_occupancy(self) -> Dict[str, float]:
+        """Resident bytes per pool (occupancy × per-expert residency cost);
+        empty when the byte costs are unknown (simulator)."""
+        if self.cost_bytes is None:
+            return {}
+        return {p: len(self.pools[p]) * float(self.cost_bytes.get(p, 0.0))
+                for p in POOL_ORDER}
+
+    def bytes_capacity(self) -> Dict[str, float]:
+        """Byte capacity per pool: the planner's cap_bytes when planned,
+        else derived from the expert-count caps × residency costs."""
+        if self.cap_bytes is not None:
+            return dict(self.cap_bytes)
+        if self.cost_bytes is None:
+            return {}
+        return {p: self.cap.get(p, 0) * float(self.cost_bytes.get(p, 0.0))
+                for p in POOL_ORDER}
 
 
 class HierarchicalCache(_LiveCacheTelemetry):
@@ -256,6 +287,41 @@ class HierarchicalCache(_LiveCacheTelemetry):
                 self.evictions += 1
         return placed
 
+    def resize(self, capacities: Dict[str, int],
+               cap_bytes: Optional[Dict[str, float]] = None):
+        """Re-point the pool capacities at a new §3.4 plan (live
+        re-planning; the engine calls this between decode steps).
+
+        Grow is churn-free: capacities rise, every resident keeps its pool
+        and payload.  Shrink is graceful: each over-capacity pool demotes
+        its least-frequent *unpinned* residents one pool down (the payload
+        travels and is downgraded by the demotion hook, exactly like an
+        overflow demotion), cascading F→C→S→E→M in hierarchy order so a
+        pool's arrivals are counted before it is trimmed itself.  A pinned
+        (mid-step / in-flight) resident is never touched — if every
+        resident of an over-full pool is pinned the trim is deferred to the
+        residents' next admission (``_place`` enforces the new caps from
+        now on)."""
+        self.cap = {p: int(capacities.get(p, 0)) for p in POOL_ORDER}
+        if cap_bytes is not None:
+            self.cap_bytes = {p: float(cap_bytes.get(p, 0.0))
+                              for p in POOL_ORDER}
+        for i, p in enumerate(POOL_ORDER):
+            pool = self.pools[p]
+            while len(pool) > self.cap[p]:
+                cand = [e for e in pool if e not in self.pinned]
+                if not cand:
+                    break              # everything pinned: defer the trim
+                victim = self.tracker.least_frequent(cand)
+                ent = pool.pop(victim)
+                placed = None
+                if i + 1 < len(POOL_ORDER):
+                    placed = self._place(victim, POOL_ORDER[i + 1],
+                                         ent.payload)
+                self.transitions[(p, placed or "M")] += 1
+                if placed is None:
+                    self.evictions += 1
+
     def record_access(self, experts: Sequence[int]) -> Dict[int, CState]:
         """Look up states for a step's selected experts + update stats."""
         self.tracker.record(experts)
@@ -276,7 +342,8 @@ class HierarchicalCache(_LiveCacheTelemetry):
         """Per-pool hit rates + residency-transition counts (§3.4 telemetry)."""
         return pool_summary(self.mode, self.hits, self.misses,
                             self.occupancy(), self.cap, self.transitions,
-                            self.evictions, len(self.pinned))
+                            self.evictions, len(self.pinned),
+                            self.bytes_occupancy(), self.bytes_capacity())
 
 
 # ----------------------------------------------------------------------------
@@ -438,10 +505,27 @@ class LiveFlatCache(_LiveCacheTelemetry):
         self.evictions += 1
         return True
 
+    def resize(self, capacity: int,
+               cap_bytes: Optional[Dict[str, float]] = None):
+        """Re-point the flat capacity (live re-planning: the byte budget ÷
+        full-tensor cost).  Shrink evicts unpinned residents per the
+        configured policy until occupancy fits; pinned (mid-step) experts
+        are never victims — an all-pinned overflow defers to the next
+        admission.  Grow is churn-free."""
+        self.capacity = int(capacity)
+        self.cap = {"F": self.capacity, "C": 0, "S": 0, "E": 0}
+        if cap_bytes is not None:
+            self.cap_bytes = {p: float(cap_bytes.get(p, 0.0))
+                              for p in POOL_ORDER}
+        while len(self.entries) > self.capacity:
+            if not self._evict():
+                break                  # everything pinned: defer the trim
+
     def occupancy(self) -> Dict[str, int]:
         return {"F": len(self.entries), "C": 0, "S": 0, "E": 0}
 
     def summary(self) -> Dict[str, object]:
         return pool_summary(self.mode, self.hits, self.misses,
                             self.occupancy(), self.cap, self.transitions,
-                            self.evictions, len(self.pinned))
+                            self.evictions, len(self.pinned),
+                            self.bytes_occupancy(), self.bytes_capacity())

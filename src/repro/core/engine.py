@@ -296,6 +296,9 @@ class ZipMoEEngine:
         self.splice_s = 0.0
         self.splice_ops = 0
         self._slabs: Dict[int, Optional[DeviceSlabCache]] = {}
+        # live-planned slab slot counts (derived from planned F-pool BYTES);
+        # fallback: mirror the F pool's expert-count capacity
+        self._slab_caps: Dict[int, int] = {}
         if device_cache:
             self.recover = self._recover_device
         else:
@@ -321,10 +324,31 @@ class ZipMoEEngine:
             else:
                 self.caches[l] = HierarchicalCache(sizes, tr, delta=delta)
                 self.caches[l].demote_payload = self._demote_payload
-        # profiled constants (rough; refreshed by profile())
+        # profiled constants (rough; refreshed by profile());
+        # per-layer u/c/ρ overlay the global probe (profile_layers())
         self.u = 1e-3
         self.c = 3e-4
         self.rho = store.rho()
+        self._u_layer: Dict[int, float] = {}
+        self._c_layer: Dict[int, float] = {}
+        self._rho_layer: Dict[int, float] = {}
+        # per-expert residency cost per pool, from the layer's REAL tensor
+        # shapes + codec state sizes — the §3.4 byte denomination
+        for l in range(n_layers):
+            bps = self._bytes_per_state(l)
+            if bps is None:
+                continue
+            self.caches[l].cost_bytes = bps if cache_mode != "flat" else \
+                {"F": bps["F"], "C": 0.0, "S": 0.0, "E": 0.0}
+        # live §3.4 planner (configure_planner): byte-budgeted pool plans
+        # applied atomically between steps, re-planned under drift
+        self.planner = None
+        self.replan_every = 0
+        self._plan_steps = 0
+        self._plan_probe_base: Optional[Dict[str, object]] = None
+        self._plan_access_base: Dict[int, int] = {}
+        self._probe_acc_base: Dict[int, int] = {}
+        self._layer_rates: Dict[int, float] = {}   # EMA accesses per probe
 
         # ---- persistent worker pool (one I/O thread + L decompressors) ----
         self._mu = threading.Lock()
@@ -371,7 +395,11 @@ class ZipMoEEngine:
 
         ``layer``/``expert`` pick the probe group; omitting ``expert`` uses
         the layer's first expert group (regression: ``profile(layer=L)``
-        used to die with ``KeyError: (L, None)``)."""
+        used to die with ``KeyError: (L, None)``).  A layer-targeted probe
+        also lands in the per-layer u/c overlay (shard sizes differ per
+        layer, so the I/O and decompression costs do too) — the scheduler's
+        task costs and the planner's PlanConsts read the overlay with the
+        global probe as fallback."""
         if layer is None:
             key = next(iter(self.store.groups))
         else:
@@ -391,7 +419,57 @@ class ZipMoEEngine:
         for _ in range(reps):
             self.store.decompress_e(key, 0, 0, raw)
         self.c = (time.perf_counter() - t0) / reps
+        if layer is not None:
+            self._u_layer[layer] = self.u
+            self._c_layer[layer] = self.c
         return self.u, self.c
+
+    def profile_layers(self, reps: int = 2) -> Dict[int, Tuple[float, float]]:
+        """Per-layer u/c from each layer's real shard sizes (ROADMAP
+        "Profiled u/c per layer"): one probe per layer that has expert
+        groups.  Sharpens both the scheduler's compute-dominance test and
+        the live planner's per-layer PlanConsts."""
+        out = {}
+        for l in sorted({l for (l, _) in self.store.groups}):
+            out[l] = self.profile(layer=l, reps=reps)
+        return out
+
+    def _layer_costs(self, layer: int) -> Tuple[float, float, float]:
+        """(u, c, ρ) for one layer: the profiled per-layer overlay when
+        present, the global probe otherwise."""
+        rho = self._rho_layer.get(layer)
+        if rho is None:
+            has = any(l == layer for (l, _) in self.store.groups)
+            rho = self._rho_layer[layer] = \
+                self.store.layer_rho(layer) if has else self.rho
+        return (self._u_layer.get(layer, self.u),
+                self._c_layer.get(layer, self.c), rho)
+
+    def _bytes_per_state(self, layer: int) -> Optional[Dict[str, float]]:
+        """Per-expert residency cost (bytes) per pool, from the layer's
+        real tensor shapes and codec state sizes: F = reconstructed bf16,
+        S = raw SM planes, E = compressed E-chunks, C = S + E."""
+        expert = min((e for (l, e) in self.store.groups if l == layer),
+                     default=None)
+        if expert is None:
+            return None
+        g = self.store.groups[(layer, expert)]
+        sm, e, full = float(g.sm_bytes), float(g.e_bytes), float(g.full_bytes)
+        return {"F": full, "C": sm + e, "S": sm, "E": e}
+
+    def plan_consts(self, layer: int):
+        """The layer's :class:`~repro.core.planner.PlanConsts`, from the
+        per-layer profiled u/c/ρ and the layer's real chunk layout."""
+        from repro.core.planner import PlanConsts
+        expert = min((e for (l, e) in self.store.groups if l == layer),
+                     default=None)
+        if expert is None:
+            raise KeyError(f"no expert groups for layer {layer}")
+        g = self.store.groups[(layer, expert)]
+        K = max(1, len(g.tensors[0].e_sizes))
+        u, c, rho = self._layer_costs(layer)
+        return PlanConsts(u=u, v=rho * u / K, c=c, L=self.L, K=K,
+                          n_tensors=len(g.tensors))
 
     # ------------------------------------------------------------------
     # device-resident slabs (device_cache mode)
@@ -423,11 +501,13 @@ class ZipMoEEngine:
 
     def _slab(self, layer: int) -> Optional[DeviceSlabCache]:
         """The layer's slab (lazily built from the store's tensor shapes;
-        capacity = the layer's F-pool size).  None when F capacity is 0."""
+        capacity = the live-planned F-pool byte budget when planning is on,
+        else the F pool's expert-count size).  None when the capacity is 0."""
         if not self.device_cache:
             return None
         if layer not in self._slabs:
-            cap = self.caches[layer].cap.get("F", 0)
+            cap = self._slab_caps.get(layer,
+                                      self.caches[layer].cap.get("F", 0))
             if cap <= 0:
                 self._slabs[layer] = None
             else:
@@ -463,13 +543,24 @@ class ZipMoEEngine:
             if all(isinstance(v, SlotRef) and v.valid
                    for v in pl.full.values()):
                 continue               # already slab-resident
+            if e not in slab.slot_of and not slab._free:
+                # a re-plan shrink deferred by all-pinned residents can
+                # leave F transiently over the slab capacity: keep the
+                # overflow's payload host/device-array-backed (still
+                # servable) instead of asserting on a full slab
+                continue
             if names is None:
                 names = [t.name for t in
                          self.store.groups[(layer, e)].tensors]
             tensors = {}
             for tidx, v in pl.full.items():
-                tensors[names[tidx]] = v.read() if isinstance(v, SlotRef) \
-                    else v
+                if isinstance(v, SlotRef):
+                    # a stale ref (its slab re-sized/retired mid-flight)
+                    # has lost its device bytes: re-load from the store
+                    tensors[names[tidx]] = v.read() if v.valid \
+                        else self._refetch_tensor(layer, e, tidx)
+                else:
+                    tensors[names[tidx]] = v
             refs = slab.put(e, tensors)
             pl.full = {tidx: refs[names[tidx]] for tidx in pl.full}
 
@@ -585,6 +676,191 @@ class ZipMoEEngine:
             cache.reset_stats()
         if self._window_every:
             self._window_base = self._cache_counters()
+        if self.planner is not None:
+            self._plan_probe_base = self._cache_counters()
+            # hit/miss counters restart at zero: restart the per-layer
+            # access deltas with them or replan weights would go negative
+            self._plan_access_base = {}
+            self._probe_acc_base = {}
+
+    # ---- live §3.4 planning (byte-budgeted pools, online re-planning) ----
+    def configure_planner(self, mem_budget: float, *, replan_every: int = 32,
+                          plan_step: float = 0.125,
+                          drift_margin: float = 0.05,
+                          profile_per_layer: bool = True,
+                          initial_plan: bool = True):
+        """Turn on byte-budgeted live pool planning: one global byte budget
+        for ALL layers' pools, split by observed layer activity and solved
+        per layer by the §3.4 planner on that layer's live rank statistics,
+        real residency costs, and per-layer profiled PlanConsts.  Plans are
+        applied atomically between decode steps; every ``replan_every``
+        calls to :meth:`note_step` the windowed hit rate is probed and a
+        drift (see ``LivePlanner.should_replan``) triggers a re-plan.
+        ``initial_plan=False`` keeps the constructor capacities (e.g. an
+        explicit ``pool_sizes`` override) until the first drift re-plan."""
+        from repro.core.planner import LivePlanner
+        active = ("F",) if self.cache_mode == "flat" else \
+            ("F", "C", "S", "E")
+        self.planner = LivePlanner(mem_budget, step=plan_step,
+                                   drift_margin=drift_margin, active=active)
+        self.replan_every = max(0, int(replan_every))
+        self._plan_steps = 0
+        self._plan_probe_base = None
+        self._plan_access_base = {}
+        self._probe_acc_base = {}
+        self._layer_rates = {}
+        if profile_per_layer:
+            self.profile_layers()
+        if initial_plan:
+            self.replan(reason="initial")
+        else:
+            # explicit pool_sizes override: the static capacities are the
+            # baseline — only observed drift replaces them, never the
+            # bootstrap "initial" probe
+            self.planner.seed()
+        return self.planner
+
+    def replan(self, reason: str = "manual",
+               hit_rate: Optional[float] = None):
+        """Solve fresh per-layer plans from the live trackers and apply
+        them.  Must run on the decode thread between steps (the same
+        single-mutator discipline as cache admission) — :meth:`note_step`
+        calls it there; tests/benchmarks may call it directly to force a
+        re-plan."""
+        assert self.planner is not None, "configure_planner() first"
+        layers = sorted({l for (l, _) in self.store.groups})
+        stats, bps, consts, acc = {}, {}, {}, {}
+        for l in layers:
+            tr = self.trackers[l]
+            stats[l] = tr.inclusion_probs()
+            bps[l] = self._bytes_per_state(l)
+            consts[l] = self.plan_consts(l)
+            acc[l] = sum(self.caches[l].hits.values()) + self.caches[l].misses
+        # budget weights = RECENT per-layer activity — the probe-interval
+        # EMA when the step clock is running, else accesses since the last
+        # plan.  A layer traffic has abandoned goes genuinely cold (its
+        # tracker counts only decay on its own records, so all-time mass
+        # would keep feeding it budget).  First plan / empty interval falls
+        # back to the decayed tracker mass.
+        weights = {l: self._layer_rates.get(l, 0.0) for l in layers}
+        if not any(weights.values()):
+            base = self._plan_access_base
+            weights = {l: float(max(0, acc[l] - base.get(l, 0)))
+                       for l in layers}
+        if not any(weights.values()):
+            weights = {l: float(self.trackers[l].counts.sum())
+                       for l in layers}
+        self._plan_access_base = acc
+        plans = self.planner.plan(stats, bps, consts, weights=weights)
+        self.apply_plans(plans)
+        self.planner.note_plan(self._plan_steps, reason, hit_rate)
+        return plans
+
+    def apply_plans(self, plans):
+        """Apply per-layer :class:`~repro.core.planner.LayerPlan`s between
+        steps: resize each layer's pools (graceful shrink — pinned/mid-step
+        residents are never evicted; churn-free grow), then re-size the
+        layer's device slab from the planned F-pool **bytes** — a cold
+        layer (zero F bytes) releases its slab's device memory entirely,
+        with generation-counter invalidation of outstanding SlotRefs."""
+        for l, plan in sorted(plans.items()):
+            cache = self.caches[l]
+            if self.cache_mode == "flat":
+                cache.resize(plan.sizes.get("F", 0), plan.cap_bytes)
+            else:
+                cache.resize(plan.sizes, plan.cap_bytes)
+            if self.device_cache:
+                bps = self._bytes_per_state(l)
+                slab_cap = 0
+                if bps and bps["F"] > 0:
+                    slab_cap = int(plan.cap_bytes.get("F", 0.0) // bps["F"])
+                self._apply_slab_plan(l, min(slab_cap, self.trackers[l].n))
+
+    def _apply_slab_plan(self, layer: int, new_cap: int):
+        """Grow/shrink/free one layer's device slab to the byte-planned
+        slot count.  Residents migrate device-side (old-slot read → donated
+        write into a fresh slab, payload refs swapped); the old slab is
+        then retired so every outstanding SlotRef to it turns stale."""
+        self._slab_caps[layer] = max(0, int(new_cap))
+        old = self._slabs.pop(layer, None)
+        if old is None:
+            # not built yet (or memoized as capacity-0): the next _slab()
+            # call lazily builds at the newly planned capacity
+            return
+        if new_cap == old.capacity:
+            self._slabs[layer] = old
+            return
+        if new_cap <= 0:
+            old.retire()
+            self._slabs[layer] = None
+            return
+        new = DeviceSlabCache(layer, old.shapes, new_cap)
+        fpool = self.caches[layer].pools["F"]
+        names = None
+        for e, ent in fpool.items():
+            pl = ent.payload
+            if not isinstance(pl, ExpertPayload) or not pl.full:
+                continue
+            if not self._full_payload_usable(pl):
+                continue               # stale refs: _collect refetches later
+            if not new._free:
+                break    # deferred-trim overflow (all pinned): keep old refs
+            if names is None:
+                names = [t.name for t in
+                         self.store.groups[(layer, e)].tensors]
+            tensors = {}
+            for tidx, v in pl.full.items():
+                tensors[names[tidx]] = v.read() if isinstance(v, SlotRef) \
+                    else v
+            refs = new.put(e, tensors)
+            pl.full = {tidx: refs[names[tidx]] for tidx in pl.full}
+        old.retire()
+        self._slabs[layer] = new
+
+    def _planner_probe(self) -> Optional[float]:
+        """Hit rate over the steps since the last probe — the drift signal,
+        windowed on the planner's own clock so it works at any
+        ``cache_window`` setting (None before any accesses).  The probe
+        also refreshes each layer's recent-activity rate (EMA of accesses
+        per probe interval), which is what the budget split weighs — a
+        layer traffic has abandoned decays toward a zero share within a
+        couple of probe windows."""
+        acc_l = {l: sum(c.hits.values()) + c.misses
+                 for l, c in self.caches.items()}
+        if self._probe_acc_base:
+            for l, a in acc_l.items():
+                d = max(0, a - self._probe_acc_base.get(l, 0))
+                r = self._layer_rates.get(l)
+                self._layer_rates[l] = d if r is None else 0.3 * r + 0.7 * d
+        self._probe_acc_base = acc_l
+        cur = self._cache_counters()
+        base = self._plan_probe_base
+        self._plan_probe_base = cur
+        if base is None:
+            return None
+        hits = sum(cur["hits"].values()) - sum(base["hits"].values())
+        misses = cur["misses"] - base["misses"]
+        acc = hits + misses
+        return hits / acc if acc > 0 else None
+
+    def plan_summary(self) -> Dict[str, object]:
+        """Live §3.4 planning telemetry: per-layer plans (sizes +
+        cap_bytes + budget share), the replan event log, and resident
+        bytes vs the global budget — the byte-denominated complement to
+        :meth:`cache_summary`."""
+        occ = collections.Counter()
+        for cache in self.caches.values():
+            occ.update(cache.bytes_occupancy())
+        out: Dict[str, object] = {
+            "enabled": self.planner is not None,
+            "bytes_occupancy": dict(occ),
+            "bytes_resident": float(sum(occ.values())),
+        }
+        if self.planner is not None:
+            out.update(self.planner.summary())
+            out["replan_every"] = self.replan_every
+            out["plan_steps"] = self._plan_steps
+        return out
 
     # ---- windowed telemetry (warm-up vs steady state) --------------------
     def _cache_counters(self) -> Dict[str, object]:
@@ -609,9 +885,20 @@ class ZipMoEEngine:
             else None
 
     def note_step(self):
-        """Advance the windowed-telemetry step clock (one decode step).  The
-        serving layer calls this once per ``decode_step``; benchmarks
-        replaying traces call it once per trace step."""
+        """Advance the windowed-telemetry + live-planner step clocks (one
+        decode step).  The serving layer calls this once per
+        ``decode_step``; benchmarks replaying traces call it once per trace
+        step.  Every ``replan_every`` steps the planner probes the recent
+        hit rate and — on drift (or when no plan exists yet) — re-plans and
+        applies the new pool plan right here, i.e. atomically *between*
+        steps on the decode thread."""
+        if self.planner is not None and self.replan_every:
+            self._plan_steps += 1
+            if self._plan_steps % self.replan_every == 0:
+                hr = self._planner_probe()
+                reason = self.planner.should_replan(hr)
+                if reason:
+                    self.replan(reason=reason, hit_rate=hr)
         if not self._window_every:
             return
         self._window_steps += 1
@@ -646,6 +933,8 @@ class ZipMoEEngine:
         transitions = collections.Counter()
         occupancy = collections.Counter()
         capacity = collections.Counter()
+        occ_bytes = collections.Counter()
+        cap_bytes = collections.Counter()
         misses = evictions = pinned = 0
         layers = {}
         mode = self.cache_mode
@@ -655,13 +944,16 @@ class ZipMoEEngine:
             transitions.update(cache.transitions)
             occupancy.update(cache.occupancy())
             capacity.update(cache.cap)
+            occ_bytes.update(cache.bytes_occupancy())
+            cap_bytes.update(cache.bytes_capacity())
             misses += cache.misses
             evictions += cache.evictions
             pinned += len(cache.pinned)
             if per_layer:
                 layers[l] = cache.summary()
         out = pool_summary(mode, hits, misses, occupancy, capacity,
-                           transitions, evictions, pinned)
+                           transitions, evictions, pinned, occ_bytes,
+                           cap_bytes)
         if per_layer:
             out["layers"] = layers
         if windows:
@@ -827,13 +1119,17 @@ class ZipMoEEngine:
         for (l, e) in job.expert_keys:
             g = self.store.groups[(l, e)]
             base_p = key_p[(l, e)]
+            # per-layer profiled I/O + decompression costs (global fallback):
+            # shard sizes differ per layer, so the block build prices each
+            # layer's chunks at ITS measured u/c/ρ
+            u_l, c_l, rho_l = self._layer_costs(l)
             for tidx, tm in enumerate(g.tensors):
                 st_t = tensor_state(job.payloads[(l, e)], tidx,
                                     len(tm.e_sizes))
                 job.tasks.append(Task(
                     expert=e, tensor=tidx, state=st_t, p=base_p,
-                    sm_cost=self.u, e_cost=self.rho * self.u / len(tm.e_sizes),
-                    dec_cost=self.c, k_shards=len(tm.e_sizes), uid=uid,
+                    sm_cost=u_l, e_cost=rho_l * u_l / len(tm.e_sizes),
+                    dec_cost=c_l, k_shards=len(tm.e_sizes), uid=uid,
                     layer=l))
                 job.metas[uid] = (l, e, tidx)
                 uid += 1

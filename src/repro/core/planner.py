@@ -12,6 +12,17 @@ Pipeline:
   4. ``plan_pools`` — Algorithm 4: grid search over pool-memory ratios γ,
      scoring E[makespan] under the joint conditional hit distribution
      P(h | Σh = k) = Φ_M(k_rem)/Φ_N(k) · Π_p Φ_p(h_p).
+
+``plan_pools`` is fast enough to run *online*: Φ tables are memoized per
+rank interval across the γ grid (many candidates share interval
+boundaries), DPs are truncated at h = k (the recurrence only flows
+upward, so low entries stay exact), duplicate size-vectors are scored
+once, and a candidate whose partial expected cost already exceeds the
+incumbent is pruned mid-sum.  ``LivePlanner`` builds on that: per-MoE-layer
+plans from live rank statistics under one global byte budget (split by
+observed layer activity), with a drift test on the windowed hit-rate
+series deciding when to re-plan — the engine applies the resulting plans
+between decode steps (see ``engine.configure_planner``).
 """
 from __future__ import annotations
 
@@ -116,12 +127,20 @@ def inclusion_from_q(q: np.ndarray, k: int) -> np.ndarray:
 # ----------------------------------------------------------------------------
 # Algorithm 2: Poisson-binomial hit distribution
 # ----------------------------------------------------------------------------
-def poisson_binomial(qs: Sequence[float]) -> np.ndarray:
-    """Φ(h) for h = 0..len(qs): P[#successes = h]."""
-    phi = np.zeros(len(qs) + 1, dtype=np.float64)
+def poisson_binomial(qs: Sequence[float],
+                     max_h: Optional[int] = None) -> np.ndarray:
+    """Φ(h) for h = 0..len(qs): P[#successes = h].
+
+    ``max_h`` truncates the DP at h = max_h: the recurrence only moves
+    probability mass upward, so entries 0..max_h stay *exact* — the planner
+    never indexes past h = k, which turns the per-interval cost from
+    O(n²) to O(n·k) for the online re-planning path."""
+    hi = len(qs) if max_h is None else min(int(max_h), len(qs))
+    phi = np.zeros(hi + 1, dtype=np.float64)
     phi[0] = 1.0
     for i, q in enumerate(qs):
-        phi[1:i + 2] = phi[1:i + 2] * (1 - q) + phi[0:i + 1] * q
+        top = min(i + 1, hi)
+        phi[1:top + 1] = phi[1:top + 1] * (1 - q) + phi[0:top] * q
         phi[0] *= (1 - q)
     return phi
 
@@ -168,18 +187,90 @@ def _ratio_grid(active: Sequence[str], step: float):
             yield dict(zip(active, [p / m for p in parts] + [last / m]))
 
 
+def _score_candidate(k: int, sizes: Dict[str, int],
+                     phi_p: Dict[str, np.ndarray], phi_M: np.ndarray,
+                     denom: float, consts: PlanConsts,
+                     limit: Optional[float] = None) -> Optional[float]:
+    """E[makespan] of one size-vector candidate under the conditional joint
+    hit distribution (reference scalar evaluation).  Every term is
+    non-negative, so once the partial sum reaches ``limit`` (the
+    incumbent's cost) the candidate can never win — returns None (pruned)."""
+    cost = 0.0
+    for hF in range(min(sizes["F"], k) + 1):
+        for hC in range(min(sizes["C"], k) + 1):
+            for hS in range(min(sizes["S"], k) + 1):
+                for hE in range(min(sizes["E"], k) + 1):
+                    rem = k - hF - hC - hS - hE
+                    if rem < 0 or rem >= phi_M.size:
+                        continue
+                    pr = (phi_M[rem] / denom *
+                          phi_p["F"][hF] * phi_p["C"][hC] *
+                          phi_p["S"][hS] * phi_p["E"][hE])
+                    if pr <= 0:
+                        continue
+                    d = estimate_makespan(
+                        k, {"F": hF, "C": hC, "S": hS, "E": hE}, consts)
+                    cost += pr * d
+                if limit is not None and cost >= limit:
+                    return None
+    return cost
+
+
+def _score_candidate_np(k: int, sizes: Dict[str, int],
+                        phi_p: Dict[str, np.ndarray], phi_M: np.ndarray,
+                        denom: float, consts: PlanConsts) -> float:
+    """Vectorised `_score_candidate`: the whole (h_F, h_C, h_S, h_E) grid —
+    probabilities AND Algorithm-3 makespans — as one broadcast expression.
+    Exact same sum as the scalar loop (modulo fp summation order); ~10–30×
+    faster, which is what makes per-layer online re-planning affordable."""
+    n, K, L = consts.n_tensors, consts.K, consts.L
+    HF, HC, HS, HE = np.ix_(*(np.arange(min(sizes[p], k) + 1)
+                              for p in POOL_ORDER))
+    rem = k - HF - HC - HS - HE
+    valid = (rem >= 0) & (rem < phi_M.size)
+    pr = (phi_M[np.clip(rem, 0, phi_M.size - 1)] / denom *
+          phi_p["F"][HF] * phi_p["C"][HC] * phi_p["S"][HS] * phi_p["E"][HE])
+    n_sm = n * (k - HF - HC - HS)
+    n_e = n * K * (k - HF - HC - HE)
+    t_io = n_sm * consts.u + n_e * consts.v
+    n_d = n * K * (k - HF)
+    t_dec = (n_e * consts.v + n_d * consts.c) / max(1, L)
+    d = np.maximum(t_io, t_dec)
+    return float((np.where(valid, pr, 0.0) * d).sum())
+
+
 def plan_pools(f: np.ndarray, k: int, mem_budget: float,
                bytes_per_state: Dict[str, float], consts: PlanConsts, *,
                active: Sequence[str] = POOL_ORDER, step: float = 0.125,
-               q: Optional[np.ndarray] = None) -> Plan:
+               q: Optional[np.ndarray] = None, memoize: bool = True,
+               prune: bool = True) -> Plan:
     """Returns the expected-makespan-minimising pool partition.
 
     bytes_per_state: per-expert residency cost for pools F/C/S/E.
-    """
+
+    ``memoize`` shares Φ interval tables (truncated at h = k) across the γ
+    grid and scores each distinct size-vector once; ``prune`` abandons a
+    candidate whose partial expected cost already exceeds the incumbent.
+    Both are exact — the returned plan is identical to the naive
+    evaluation's (``tests/test_live_planner.py`` pins it); together they
+    make per-layer *online* re-planning affordable (``benchmarks.run
+    --only planner`` measures the gap)."""
     n_experts = f.size
     q = ipf_selection_probs(f, k) if q is None else np.asarray(q)
-    phi_N = poisson_binomial(q)
+    phi_N = poisson_binomial(q, k)     # only Φ_N(k) is read: truncate
+    denom = phi_N[k] if k < phi_N.size else 0.0
+    phi_cache: Dict[Tuple[int, int], np.ndarray] = {}
+
+    def phi_interval(a: int, b: int) -> np.ndarray:
+        if not memoize:
+            return poisson_binomial(q[a:b], k)
+        tab = phi_cache.get((a, b))
+        if tab is None:
+            tab = phi_cache[(a, b)] = poisson_binomial(q[a:b], k)
+        return tab
+
     best: Optional[Plan] = None
+    seen_sizes: set = set()
     for ratios in _ratio_grid(list(active), step):
         sizes = {p: 0 for p in POOL_ORDER}
         for p in active:
@@ -191,29 +282,196 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
             sizes[p] = s
             intervals[p] = (u0, u0 + s)
             u0 += s
-        phi_p = {p: poisson_binomial(q[a:b]) for p, (a, b) in intervals.items()}
-        phi_M = poisson_binomial(q[u0:])
-        denom = phi_N[k] if k < phi_N.size else 0.0
+        if memoize:
+            key = tuple(sizes[p] for p in POOL_ORDER)
+            if key in seen_sizes:
+                continue        # same size vector: same cost, first one kept
+            seen_sizes.add(key)
         if denom <= 0:
             continue
-        cost = 0.0
-        ranges = [range(min(sizes[p], k) + 1) for p in POOL_ORDER]
-        for hF in ranges[0]:
-            for hC in ranges[1]:
-                for hS in ranges[2]:
-                    for hE in ranges[3]:
-                        rem = k - hF - hC - hS - hE
-                        if rem < 0 or rem >= phi_M.size:
-                            continue
-                        pr = (phi_M[rem] / denom *
-                              phi_p["F"][hF] * phi_p["C"][hC] *
-                              phi_p["S"][hS] * phi_p["E"][hE])
-                        if pr <= 0:
-                            continue
-                        d = estimate_makespan(
-                            k, {"F": hF, "C": hC, "S": hS, "E": hE}, consts)
-                        cost += pr * d
+        if prune and best is not None:
+            # cheap certificate: the makespan at the componentwise-maximal
+            # hit pattern lower-bounds every pattern's makespan (Alg. 3 is
+            # monotone non-increasing in each h), and the conditional joint
+            # distribution sums to 1 — so E[makespan] >= that bound.  A
+            # candidate whose bound already exceeds the incumbent is
+            # skipped without building its Φ tables or scoring the grid.
+            lb = max(0.0, estimate_makespan(
+                k, {p: min(sizes[p], k) for p in POOL_ORDER}, consts))
+            if lb * (1.0 - 1e-9) >= best.cost:
+                continue
+        phi_p = {p: phi_interval(a, b) for p, (a, b) in intervals.items()}
+        phi_M = phi_interval(u0, n_experts)
+        if memoize:
+            cost = _score_candidate_np(k, sizes, phi_p, phi_M, denom, consts)
+        else:
+            cost = _score_candidate(
+                k, sizes, phi_p, phi_M, denom, consts,
+                limit=best.cost if (prune and best is not None) else None)
+            if cost is None:
+                continue                      # pruned: cannot beat incumbent
         if best is None or cost < best.cost:
             best = Plan(dict(ratios), dict(sizes), cost)
     assert best is not None
     return best
+
+
+# ----------------------------------------------------------------------------
+# Live (online) planning: per-layer byte budgets + drift-triggered re-planning
+# ----------------------------------------------------------------------------
+@dataclass
+class LayerPlan:
+    """One layer's byte-budgeted pool plan (what the engine applies)."""
+    layer: int
+    sizes: Dict[str, int]            # experts per pool (cache capacities)
+    cap_bytes: Dict[str, float]      # byte capacity per pool (γ_p · budget)
+    ratios: Dict[str, float]
+    cost: float                      # E[makespan] under the fitted workload
+    budget: float                    # this layer's share of the global budget
+
+
+class LivePlanner:
+    """Online §3.4 planner: one global byte budget, per-layer pool plans.
+
+    Pure solver — no engine or store dependencies (unit-testable like
+    GemmProfiler).  The caller supplies, per MoE layer, the live rank-based
+    inclusion probabilities ``(f, k)`` (``FreqTracker.inclusion_probs``),
+    the layer's real per-expert residency costs (``bytes_per_state`` from
+    the store's chunk sizes), its profiled :class:`PlanConsts`, and an
+    activity weight.  :meth:`plan` splits the global budget across layers
+    proportionally to activity (a layer nobody routes to gets ~nothing —
+    its pools shrink to zero and, in device mode, its slab is freed
+    entirely) and solves Algorithm 4 per layer on its share.
+
+    Re-planning policy (:meth:`should_replan`): the first call plans
+    unconditionally; afterwards a re-plan triggers when the recent windowed
+    hit rate drops more than ``drift_margin`` below the best rate seen
+    since the last plan — the signature of activation-rank drift making the
+    current partition stale.  The decision is evaluated every
+    ``replan_every`` steps by the engine's step clock (``note_step``)."""
+
+    def __init__(self, mem_budget: float, *, step: float = 0.125,
+                 drift_margin: float = 0.05,
+                 active: Sequence[str] = POOL_ORDER):
+        assert mem_budget >= 0, mem_budget
+        self.mem_budget = float(mem_budget)
+        self.step = float(step)
+        self.drift_margin = float(drift_margin)
+        # pools the grid may allocate to: ("F",) collapses the search to a
+        # single full-tensor pool — the flat-cache mode's byte budgeting
+        self.active = tuple(active)
+        self.plans: Dict[int, LayerPlan] = {}
+        self.replans: List[Dict[str, object]] = []    # event log
+        self._plan_hit: Optional[float] = None  # best windowed rate since plan
+        self._seeded = False                    # external static capacities
+        self._replan_on_stats = False           # bootstrap plan needs revisit
+
+    def seed(self):
+        """Mark externally-provided capacities (an explicit ``pool_sizes``
+        override) as the live baseline: :meth:`should_replan` then never
+        fires the unconditional "initial" bootstrap — only observed drift
+        replaces the static configuration."""
+        self._seeded = True
+
+    # -- budget split -------------------------------------------------------
+    def layer_budgets(self, weights: Dict[int, float]) -> Dict[int, float]:
+        """Global budget → per-layer shares, proportional to activity
+        weight; uniform when nothing has been observed yet."""
+        layers = sorted(weights)
+        total = sum(max(0.0, w) for w in weights.values())
+        if total <= 0:
+            share = self.mem_budget / max(1, len(layers))
+            return {l: share for l in layers}
+        return {l: self.mem_budget * max(0.0, weights[l]) / total
+                for l in layers}
+
+    # -- planning -----------------------------------------------------------
+    def plan(self, stats: Dict[int, Tuple[np.ndarray, int]],
+             bytes_per_state: Dict[int, Dict[str, float]],
+             consts: Dict[int, PlanConsts],
+             weights: Optional[Dict[int, float]] = None
+             ) -> Dict[int, LayerPlan]:
+        """Solve every layer's pool partition on its budget share.
+
+        ``stats[l] = (f, k)``: the layer's rank-ordered inclusion
+        probabilities and effective per-step selection size."""
+        if weights is None:
+            weights = {l: 1.0 for l in stats}
+        budgets = self.layer_budgets({l: weights.get(l, 0.0) for l in stats})
+        plans: Dict[int, LayerPlan] = {}
+        for l, (f, k) in sorted(stats.items()):
+            budget = budgets.get(l, 0.0)
+            bps = bytes_per_state[l]
+            if budget < min(bps.values()):
+                # cold layer: its share cannot hold even one resident in the
+                # cheapest pool — release everything
+                plans[l] = LayerPlan(
+                    layer=l, sizes={p: 0 for p in POOL_ORDER},
+                    cap_bytes={p: 0.0 for p in POOL_ORDER},
+                    ratios={p: 0.0 for p in POOL_ORDER}, cost=float("inf"),
+                    budget=budget)
+                continue
+            p = plan_pools(np.asarray(f, np.float64), int(k), budget, bps,
+                           consts[l], step=self.step, active=self.active)
+            plans[l] = LayerPlan(
+                layer=l, sizes=dict(p.sizes),
+                cap_bytes={k2: r * budget for k2, r in p.ratios.items()},
+                ratios=dict(p.ratios), cost=p.cost, budget=budget)
+        self.plans = plans
+        return plans
+
+    # -- re-plan policy -----------------------------------------------------
+    def should_replan(self, hit_rate: Optional[float]) -> Optional[str]:
+        """Reason to re-plan now, or None.  ``hit_rate`` is the windowed
+        (recent-delta) cache hit rate; the first window after a plan
+        establishes the baseline, later windows trigger on degradation.
+        With neither a plan nor seeded capacities the first probe plans
+        unconditionally ("initial")."""
+        if not self.plans and not self._seeded:
+            return "initial"
+        if hit_rate is None:
+            return None
+        if self._replan_on_stats:
+            # the bootstrap plan was solved from zero observations (uniform
+            # f, k_eff=1); the first probe with real traffic behind it
+            # re-plans once unconditionally — a stable workload would never
+            # degrade past the drift margin, leaving the maximum-ignorance
+            # partition permanent otherwise
+            return "warmup"
+        if self._plan_hit is None:
+            self._plan_hit = hit_rate         # post-plan baseline window
+            return None
+        ref = self._plan_hit
+        self._plan_hit = max(ref, hit_rate)
+        if hit_rate < ref - self.drift_margin:
+            return "drift"
+        return None
+
+    def note_plan(self, step: int, reason: str,
+                  hit_rate: Optional[float] = None):
+        """Record one applied plan in the event log and reset the drift
+        baseline (the next window re-establishes it).  A bootstrap
+        ("initial") plan arms the one-shot warmup re-plan."""
+        self._plan_hit = None
+        self._replan_on_stats = reason == "initial"
+        self.replans.append({
+            "step": int(step), "reason": reason, "hit_rate": hit_rate,
+            "budgets": {l: p.budget for l, p in self.plans.items()},
+            "sizes": {l: dict(p.sizes) for l, p in self.plans.items()},
+        })
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "mem_budget": self.mem_budget,
+            "n_plans": len(self.replans),
+            # the unconditional bootstrap plan is not a RE-plan: a static
+            # (plan-once) run must report 0 here
+            "n_replans": sum(1 for ev in self.replans
+                             if ev["reason"] != "initial"),
+            "replans": [dict(ev) for ev in self.replans],
+            "layers": {l: {"sizes": dict(p.sizes),
+                           "cap_bytes": dict(p.cap_bytes),
+                           "budget": p.budget,
+                           "cost": p.cost}
+                       for l, p in sorted(self.plans.items())},
+        }

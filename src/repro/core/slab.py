@@ -145,6 +145,20 @@ class DeviceSlabCache:
         self.gen[slot] += 1
         self._free.append(slot)
 
+    def retire(self):
+        """Decommission the whole slab (live re-planning: the layer's F
+        pool was re-sized — residents migrate to a fresh slab — or went
+        cold and releases its device memory entirely).  Every slot's
+        generation is bumped so ALL outstanding SlotRefs turn stale, and
+        the buffers are dropped so XLA can reclaim the device memory once
+        the last reference dies; a read through a stale ref trips the
+        usual validity assertion instead of returning zombie bytes."""
+        for slot in range(self.capacity):
+            self.gen[slot] += 1
+        self.slot_of.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.bufs = {}
+
     # -- the hot-path read -------------------------------------------------
     def gather(self, name: str, slots: Sequence[int]) -> jnp.ndarray:
         """``[len(slots), *shape]`` device gather — the grouped FFN's

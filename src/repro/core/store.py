@@ -249,3 +249,14 @@ class ExpertStore:
         e = sum(g.e_bytes for g in self.groups.values())
         raw = sum(g.e_raw_bytes for g in self.groups.values())
         return e / max(1, raw)
+
+    def layer_rho(self, layer: int) -> float:
+        """One layer's compressed/raw exponent ratio — entropy varies per
+        layer, so the per-layer scheduler costs and PlanConsts use the
+        layer's own ρ instead of the store-wide average.  Falls back to the
+        global ρ for layers with no expert groups."""
+        gs = [g for g in self.groups.values() if g.layer == layer]
+        if not gs:
+            return self.rho()
+        return sum(g.e_bytes for g in gs) / max(1, sum(g.e_raw_bytes
+                                                       for g in gs))

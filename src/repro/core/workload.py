@@ -21,14 +21,21 @@ class FreqTracker:
         self.n = n_experts
         self.counts = np.zeros(n_experts, dtype=np.float64)
         self.decay = decay
+        self.n_records = 0           # record() calls (≈ steps touching this layer)
+        self.k_ema = 0.0             # EMA of per-record selection size
         self._order_dirty = True
         self._ranks = np.arange(n_experts)
 
     def record(self, experts: Iterable[int]):
+        experts = list(experts)
         if self.decay < 1.0:
             self.counts *= self.decay
         for e in experts:
             self.counts[e] += 1.0
+        if experts:
+            self.n_records += 1
+            self.k_ema += 0.25 * (len(experts) - self.k_ema) if self.k_ema \
+                else len(experts)
         self._order_dirty = True
 
     def _refresh(self):
@@ -54,6 +61,21 @@ class FreqTracker:
 
     def least_frequent(self, candidates: Sequence[int]) -> int:
         return min(candidates, key=lambda e: self.counts[e])
+
+    def inclusion_probs(self) -> "tuple[np.ndarray, int]":
+        """Live rank-based workload model for the §3.4 planner: the
+        rank-ordered inclusion probabilities ``(f_r)`` (normalised so
+        Σf = k_eff) and the effective per-step selection size k_eff.  With
+        ``decay < 1`` the counts — and therefore f — track popularity
+        drift instead of the all-time average.  Before any traffic the
+        model is uniform (maximum ignorance ⇒ maximum entropy)."""
+        k = int(round(self.k_ema)) if self.n_records else 1
+        k = max(1, min(k, self.n - 1 if self.n > 1 else 1))
+        total = self.counts.sum()
+        if total <= 0:
+            return np.full(self.n, k / self.n), k
+        f = np.sort(self.counts)[::-1] * (k / total)
+        return f, k
 
 
 # ----------------------------------------------------------------------------

@@ -13,8 +13,18 @@ params.
                       store end-to-end, with per-request TTFT/TPOT.
 
 Cache knobs (§3.4):
+--mem-budget BYTES   : byte-budgeted live pool planning — ONE global byte
+                       budget for all layers' pools; per-layer F/C/S/E
+                       splits are solved online by the §3.4 planner from
+                       live activation ranks and re-planned under drift
+                       (--replan-every N steps, --plan-step grid).  The
+                       primary sizing interface; --pool-sizes becomes a
+                       static override.
 --pool-sizes F,C,S,E : hierarchical pool capacities (experts per layer),
-                       e.g. ``--pool-sizes 2,2,4,8``
+                       e.g. ``--pool-sizes 2,2,4,8``.  Without
+                       --mem-budget this is the static default; with it,
+                       explicit pool sizes seed the capacities until the
+                       first drift re-plan.
 --cache-mode flat    : flat full-tensor baseline instead of the F≺C≺S≺E
                        hierarchy (--flat-policy lru|fifo|lfu|marking,
                        --flat-capacity N; default N = sum of pool sizes)
@@ -64,6 +74,16 @@ def print_sched_telemetry(zs, args):
         print(f"p-times: {ps['n_buckets']} buckets, "
               f"{ps['n_measurements']} measured "
               f"({ps['measure_wall_s']*1e3:.1f}ms profiling)")
+    if args.mem_budget is not None:
+        pls = zs.plan_summary()
+        sizes = {l: "".join(f"{p}{s[p]}" for p in "FCSE")
+                 for l, s in sorted((int(l), d["sizes"])
+                                    for l, d in pls["layers"].items())}
+        print(f"plan: budget={pls['mem_budget']:.0f}B "
+              f"resident={pls['bytes_resident']:.0f}B "
+              f"replans={pls['n_replans']} "
+              f"({', '.join(ev['reason'] for ev in pls['replans'])}) "
+              f"sizes={sizes}")
 
 
 def main():
@@ -81,8 +101,19 @@ def main():
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--bandwidth-gbps", type=float, default=None,
                     help="emulate a slow offload tier")
-    ap.add_argument("--pool-sizes", default="2,2,4,8",
-                    help="hierarchical pool capacities F,C,S,E per layer")
+    ap.add_argument("--pool-sizes", default=None,
+                    help="hierarchical pool capacities F,C,S,E per layer "
+                         "(default 2,2,4,8; with --mem-budget: a static "
+                         "override of the initial plan)")
+    ap.add_argument("--mem-budget", type=float, default=None,
+                    help="global cache byte budget: per-layer pools are "
+                         "planned online (§3.4) and re-planned under "
+                         "drift instead of using fixed --pool-sizes")
+    ap.add_argument("--replan-every", type=int, default=16,
+                    help="probe the windowed hit rate every N decode steps "
+                         "and re-plan the pools on drift (--mem-budget)")
+    ap.add_argument("--plan-step", type=float, default=0.25,
+                    help="γ grid resolution of the §3.4 pool-ratio search")
     ap.add_argument("--cache-mode", default="hier", choices=["hier", "flat"],
                     help="hierarchical F/C/S/E pools vs flat full-tensor map")
     ap.add_argument("--flat-policy", default="lru",
@@ -108,14 +139,19 @@ def main():
                     help="record cache hit/miss deltas every N decode steps "
                          "(cache_summary windowed series; 0 = off)")
     args = ap.parse_args()
-    parts = args.pool_sizes.split(",")
-    try:
-        pool_sizes = dict(zip("FCSE", (int(x) for x in parts)))
-    except ValueError:
-        pool_sizes = None
-    if pool_sizes is None or len(parts) != 4:
-        ap.error("--pool-sizes expects exactly 4 comma-separated integers "
-                 "(F,C,S,E), e.g. 2,2,4,8")
+    pool_sizes = None
+    if args.pool_sizes is None:
+        if args.mem_budget is None:
+            args.pool_sizes = "2,2,4,8"     # static default, no planner
+    if args.pool_sizes is not None:
+        parts = args.pool_sizes.split(",")
+        try:
+            pool_sizes = dict(zip("FCSE", (int(x) for x in parts)))
+        except ValueError:
+            pool_sizes = None
+        if pool_sizes is None or len(parts) != 4:
+            ap.error("--pool-sizes expects exactly 4 comma-separated "
+                     "integers (F,C,S,E), e.g. 2,2,4,8")
 
     cfg = get_smoke_config(args.arch, d_model=256, n_layers=6, vocab_size=2048)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -145,7 +181,10 @@ def main():
                    cross_layer_depth=args.cross_layer_depth,
                    freq_decay=args.freq_decay,
                    cache_window=args.cache_window,
-                   device_cache=args.device_cache)
+                   device_cache=args.device_cache,
+                   mem_budget=args.mem_budget,
+                   replan_every=args.replan_every,
+                   plan_step=args.plan_step)
 
     if args.mode == "zipmoe-batch":
         srv = BatchServer(None, cfg, max_batch=args.batch,

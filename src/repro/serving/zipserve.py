@@ -45,6 +45,17 @@ Two beyond-loop mechanisms turn the I/O-bound sync path compute-centric
   ``jnp.take`` per tensor instead of re-stacking host arrays — a fully
   cache-hit decode step moves **zero** expert-weight bytes host→device
   (``overlap_summary()['h2d_bytes']``, regression-tested).
+* **Byte-budgeted live pool planning** (``mem_budget=...``) — instead of
+  fixed per-layer expert counts, one global byte budget is split across
+  MoE layers by observed activity and each layer's F/C/S/E partition is
+  solved by the §3.4 planner on its live rank statistics, real per-expert
+  residency costs (tensor shapes + codec state sizes), and per-layer
+  profiled u/c.  Every ``replan_every`` steps a windowed hit-rate probe
+  detects drift and re-plans; plans apply atomically between steps
+  (graceful pool shrink, churn-free grow, device slabs re-sized from the
+  planned F-pool *bytes* — a cold layer's slab is freed entirely).
+  ``plan_summary()`` reports per-layer plans, replan events, and byte
+  occupancy.
 
 ``ZipServer.decode_step`` is validated against the fully-resident
 ``models.decode_step`` (bit-equal routing; identical logits up to dtype
@@ -111,7 +122,9 @@ class ZipServer:
                  flat_policy: str = "lru", delta: int = 1,
                  profile_p_times: bool = False, cross_layer_depth: int = 0,
                  freq_decay: float = 1.0, cache_window: int = 0,
-                 device_cache: bool = False):
+                 device_cache: bool = False,
+                 mem_budget: Optional[float] = None,
+                 replan_every: int = 32, plan_step: float = 0.125):
         assert ffn_impl in ("grouped", "loop")
         assert cross_layer_depth >= 0
         assert not (device_cache and fused_recovery), \
@@ -148,6 +161,15 @@ class ZipServer:
             # and splice time land in the h2d_bytes/splice_ms telemetry
             self.engine.recover = self.engine._recover_device
         self.engine.profile()
+        if mem_budget is not None:
+            # byte-budgeted live pool planning (§3.4 online): per-layer
+            # plans from one global byte budget, re-planned under drift.
+            # An explicit pool_sizes override keeps the static capacities
+            # until the first drift-triggered re-plan.
+            self.engine.configure_planner(mem_budget,
+                                          replan_every=replan_every,
+                                          plan_step=plan_step,
+                                          initial_plan=pool_sizes is None)
         if cache_window:
             self.engine.enable_cache_windows(cache_window)
         # measured per-expert grouped-GEMM times feeding Algorithm 1's p_n
@@ -494,6 +516,12 @@ class ZipServer:
         """Measured p-time buckets feeding Algorithm 1 (empty when
         ``profile_p_times`` is off)."""
         return self.profiler.summary()
+
+    def plan_summary(self) -> Dict[str, object]:
+        """Live §3.4 planning telemetry (``mem_budget`` mode): per-layer
+        plans, replan events, and byte occupancy — next to
+        :meth:`cache_summary` / :meth:`overlap_summary`."""
+        return self.engine.plan_summary()
 
     # ------------------------------------------------------------------
     # expert FFN implementations

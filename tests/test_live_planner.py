@@ -1,0 +1,396 @@
+"""Byte-budgeted live pool planning (§3.4 online) tests:
+
+* ``plan_pools`` fast path (memoized Φ tables, truncated DPs, vectorised
+  scoring, early pruning) returns the exact same plan as the naive
+  evaluation,
+* ``FreqTracker.inclusion_probs`` — the live rank-based workload model,
+* ``LivePlanner`` — activity-weighted budget split, cold layers, drift
+  re-plan policy,
+* cache ``resize`` invariants — shrink never evicts a pinned (mid-step)
+  expert and demotes payloads down the hierarchy, grow preserves payload
+  tiers, in both hier and flat modes,
+* engine re-planning — heterogeneous per-layer plans, device slabs sized
+  from planned F-pool *bytes*, a cold layer's slab freed with
+  generation-counter invalidation of outstanding SlotRefs (the PR-4
+  staleness tripwire), byte-occupancy telemetry,
+* losslessness — logits bit-identical across a replan boundary vs a
+  static-pool run, hier and flat modes,
+* the drift acceptance path — a drifting trace under ``mem_budget``
+  re-plans at least once and ends with heterogeneous per-layer pools.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.cache import HierarchicalCache, LiveFlatCache
+from repro.core.engine import ExpertPayload, ZipMoEEngine
+from repro.core.planner import (LivePlanner, PlanConsts, plan_pools,
+                                poisson_binomial)
+from repro.core.slab import SlotRef
+from repro.core.store import ExpertStore, build_store
+from repro.core.workload import (FreqTracker, rank_inclusion_probs,
+                                 zipf_trace)
+from repro.models import init_params
+from repro.serving.zipserve import ZipServer
+
+CONSTS = PlanConsts(u=1.0, v=0.1, c=0.15, L=4, K=4, n_tensors=3)
+BPS = {"F": 2.0, "C": 1.4, "S": 1.0, "E": 0.4}
+
+
+@pytest.fixture(scope="module")
+def moe2_setup(tmp_path_factory):
+    cfg = get_smoke_config("qwen2-moe-a2.7b", n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store_planner"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+# ---------------------------------------------------------------------------
+# planner core: fast path exactness
+# ---------------------------------------------------------------------------
+def test_poisson_binomial_truncation_exact():
+    qs = list(np.linspace(0.05, 0.9, 20))
+    full = poisson_binomial(qs)
+    for max_h in (0, 1, 4, 7, 20, 50):
+        trunc = poisson_binomial(qs, max_h)
+        hi = min(max_h, len(qs))
+        assert trunc.size == hi + 1
+        assert np.allclose(trunc, full[:hi + 1], atol=0, rtol=0)
+
+
+@pytest.mark.parametrize("n,k0,batch,seed", [(60, 4, 1, 3), (64, 6, 4, 7),
+                                             (16, 2, 1, 0)])
+def test_plan_pools_fast_equals_naive(n, k0, batch, seed):
+    """Memoization + truncation + vectorised scoring + pruning are exact:
+    same winning sizes, same expected cost as the reference evaluation."""
+    from repro.core.workload import effective_k
+    trace = zipf_trace(n, k0, 800, alpha=1.2, seed=seed, batch=batch)
+    f = rank_inclusion_probs(trace, n)
+    k = effective_k(trace)
+    from repro.core.planner import ipf_selection_probs
+    q = ipf_selection_probs(f, k)
+    naive = plan_pools(f, k, 30.0, BPS, CONSTS, step=0.25, q=q,
+                       memoize=False, prune=False)
+    fast = plan_pools(f, k, 30.0, BPS, CONSTS, step=0.25, q=q)
+    assert naive.sizes == fast.sizes
+    assert abs(naive.cost - fast.cost) < 1e-9 * max(1.0, naive.cost)
+
+
+# ---------------------------------------------------------------------------
+# live workload model
+# ---------------------------------------------------------------------------
+def test_freq_tracker_inclusion_probs():
+    tr = FreqTracker(8)
+    f, k = tr.inclusion_probs()
+    assert k == 1 and np.allclose(f, 1 / 8)       # no data: uniform
+    for _ in range(50):
+        tr.record([0, 1])
+    for _ in range(10):
+        tr.record([0, 5])
+    f, k = tr.inclusion_probs()
+    assert k == 2
+    assert abs(f.sum() - k) < 1e-9
+    assert (np.diff(f) <= 1e-12).all()            # rank-ordered, descending
+    assert f[0] >= f[1] > f[2] > 0                # 0 hotter than 1 than 5
+
+
+def test_freq_tracker_decay_tracks_drift():
+    tr = FreqTracker(4, decay=0.5)
+    for _ in range(20):
+        tr.record([0])
+    for _ in range(20):
+        tr.record([3])
+    f, _ = tr.inclusion_probs()
+    # rank 0 (expert 3 after drift) holds nearly all the decayed mass
+    assert tr.rank(3) == 0 and f[0] > 0.9
+
+
+# ---------------------------------------------------------------------------
+# LivePlanner: budget split, cold layers, drift policy
+# ---------------------------------------------------------------------------
+def _layer_stats(alpha, n=32, k0=4, seed=1):
+    trace = zipf_trace(n, k0, 500, alpha=alpha, seed=seed)
+    from repro.core.workload import effective_k
+    return rank_inclusion_probs(trace, n), effective_k(trace)
+
+
+def test_live_planner_budget_follows_activity_and_cold_layer():
+    s = _layer_stats(1.2)
+    lp = LivePlanner(40.0, step=0.25)
+    plans = lp.plan({0: s, 1: s, 2: s},
+                    {l: BPS for l in range(3)},
+                    {l: CONSTS for l in range(3)},
+                    weights={0: 8.0, 1: 2.0, 2: 0.0})
+    assert abs(plans[0].budget - 32.0) < 1e-9
+    assert abs(plans[1].budget - 8.0) < 1e-9
+    assert plans[2].budget == 0.0
+    assert all(v == 0 for v in plans[2].sizes.values())   # cold: everything 0
+    assert sum(plans[0].sizes.values()) > sum(plans[1].sizes.values())
+    # cap_bytes is the byte denomination of each pool (γ_p × budget share)
+    assert abs(sum(plans[0].cap_bytes.values()) - plans[0].budget) < 1e-6
+    # no observations at all: uniform split
+    eq = lp.layer_budgets({0: 0.0, 1: 0.0})
+    assert eq[0] == eq[1] == 20.0
+
+
+def test_live_planner_drift_policy():
+    lp = LivePlanner(10.0, drift_margin=0.1)
+    assert lp.should_replan(None) == "initial"    # no plan yet
+    s = _layer_stats(1.2)
+    lp.plan({0: s}, {0: BPS}, {0: CONSTS})
+    lp.note_plan(step=0, reason="initial")
+    # the bootstrap was solved from zero observations: the first probe
+    # with real stats behind it re-plans once unconditionally
+    assert lp.should_replan(None) is None         # still no traffic
+    assert lp.should_replan(0.8) == "warmup"
+    lp.note_plan(step=8, reason="warmup")
+    assert lp.should_replan(0.8) is None          # baseline window
+    assert lp.should_replan(0.75) is None         # within margin
+    assert lp.should_replan(0.65) == "drift"      # dropped > margin
+    lp.note_plan(step=16, reason="drift")
+    assert lp.should_replan(0.4) is None          # fresh baseline post-plan
+    assert lp.should_replan(0.45) is None         # improving: no replan
+    assert lp.should_replan(0.25) == "drift"
+    assert [ev["reason"] for ev in lp.replans] == \
+        ["initial", "warmup", "drift"]
+    assert lp.summary()["n_replans"] == 2         # bootstrap isn't a RE-plan
+    assert lp.summary()["n_plans"] == 3
+
+
+def test_live_planner_seeded_static_override_replans_only_on_drift():
+    """An explicit pool_sizes override is the baseline: no unconditional
+    bootstrap plan — the static capacities survive until observed drift."""
+    lp = LivePlanner(10.0, drift_margin=0.1)
+    lp.seed()
+    assert lp.should_replan(None) is None         # never "initial"
+    assert lp.should_replan(0.8) is None          # establishes baseline
+    assert lp.should_replan(0.75) is None         # stable: override kept
+    assert lp.should_replan(0.6) == "drift"       # degradation replaces it
+
+
+# ---------------------------------------------------------------------------
+# cache resize invariants
+# ---------------------------------------------------------------------------
+def _warm_hier(caps, n=16, delta=1):
+    tr = FreqTracker(n)
+    cache = HierarchicalCache(dict(caps), tr, delta=delta)
+    # payload hook: tag which pool the payload was fitted for (engine-style
+    # downgrade without real bytes)
+    cache.demote_payload = lambda pl, pool: {"expert": pl["expert"],
+                                             "pool": pool}
+    # rank experts 0 (hottest) .. n-1 (coldest), admit them all
+    for e in range(n):
+        for _ in range(n - e):
+            tr.record([e])
+    for e in range(n):
+        cache.admit(e, {"expert": e, "pool": None})
+    return cache, tr
+
+
+def test_hier_resize_shrink_demotes_and_never_evicts_pinned():
+    cache, tr = _warm_hier({"F": 4, "C": 0, "S": 4, "E": 4})
+    assert len(cache.pools["F"]) == 4
+    pinned = sorted(cache.pools["F"])           # a mid-step selection
+    cache.pin(pinned)
+    cache.resize({"F": 1, "C": 0, "S": 4, "E": 4})
+    # every F resident is pinned: the trim is deferred, nobody evicted
+    assert sorted(cache.pools["F"]) == pinned
+    cache.unpin(pinned)
+    cache.resize({"F": 1, "C": 0, "S": 4, "E": 4})
+    assert len(cache.pools["F"]) == 1
+    # the survivor is the hottest of the pinned set; the demoted ones
+    # cascaded down (payload downgraded to the pool it landed in)
+    keep = min(pinned, key=tr.rank)
+    assert keep in cache.pools["F"]
+    for e in pinned:
+        if e == keep:
+            continue
+        for p in ("S", "E"):
+            if e in cache.pools[p]:
+                assert cache.pools[p][e].payload["pool"] == p
+    assert sum(n for (a, b), n in cache.transitions.items() if a == "F") >= 3
+
+
+def test_hier_resize_grow_is_churn_free():
+    cache, _ = _warm_hier({"F": 2, "C": 2, "S": 2, "E": 2})
+    before = {p: dict(cache.pools[p]) for p in cache.pools}
+    ev0 = cache.evictions
+    cache.resize({"F": 8, "C": 8, "S": 8, "E": 8})
+    for p, entries in before.items():
+        assert cache.pools[p].keys() == entries.keys()
+        for e, ent in entries.items():
+            assert cache.pools[p][e] is ent     # same entry, same payload
+    assert cache.evictions == ev0
+
+
+def test_flat_resize_respects_pins():
+    tr = FreqTracker(16)
+    cache = LiveFlatCache(8, tr, policy="lru")
+    for e in range(8):
+        tr.record([e])
+        cache.admit(e, payload=e)
+    cache.pin([0, 1])
+    cache.resize(2)
+    assert cache.capacity == 2 and len(cache.entries) == 2
+    assert set(cache.entries) == {0, 1}         # pinned survive, rest evicted
+    cache.resize(6)                             # grow: churn-free
+    assert set(cache.entries) == {0, 1}
+    assert cache.cap["F"] == 6
+
+
+# ---------------------------------------------------------------------------
+# engine re-planning: slabs sized from bytes, cold-layer free, telemetry
+# ---------------------------------------------------------------------------
+def test_engine_replan_frees_cold_layer_slab(moe2_setup):
+    """Drive two layers, let layer 1 go cold under decay, re-plan: the
+    budget shifts to layer 0 (heterogeneous sizes), layer 1's pools shrink
+    to zero and its device slab is FREED — outstanding SlotRefs invalidate
+    (the staleness tripwire) and a later fetch reloads losslessly."""
+    cfg, params, d = moe2_setup
+    store = ExpertStore(d)
+    bps = None
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts, n_layers=2, L=3,
+                       pool_sizes={"F": 2, "C": 1, "S": 1, "E": 1},
+                       device_cache=True, freq_decay=0.7)
+    try:
+        bps = eng._bytes_per_state(0)
+        # traffic: layer 1 briefly hot, then layer 0 only (decay ages 1)
+        for step in range(4):
+            eng.fetch_experts(1, [0, 1])
+            eng.note_step()
+        def as_np(v):
+            return np.asarray(v.read() if isinstance(v, SlotRef) else v)
+        ref_w = {e: {k: as_np(v) for k, v in w.items()}
+                 for e, w in eng.fetch_experts(1, [0, 1])[0].items()}
+        assert eng._slabs.get(1) is not None          # slab built + resident
+        stale = [v for ent in eng.caches[1].pools["F"].values()
+                 for v in ent.payload.full.values()
+                 if isinstance(v, SlotRef)]
+        assert stale and all(r.valid for r in stale)
+        # budget fits ~4 full experts; the initial plan splits by all-time
+        # mass, the NEXT plan by accesses since — and layer 1 sees none
+        eng.configure_planner(4 * bps["F"], replan_every=0, plan_step=0.25,
+                              profile_per_layer=True)
+        for step in range(12):
+            eng.fetch_experts(0, [step % 4, 4 + step % 2])
+            eng.note_step()
+        eng.replan(reason="test")
+        ps = eng.plan_summary()
+        assert ps["enabled"] and ps["n_plans"] == 2 and ps["n_replans"] == 1
+        sizes = {l: ps["layers"][l]["sizes"] for l in ps["layers"]}
+        assert sum(sizes[0].values()) > 0
+        assert sum(sizes[1].values()) == 0            # cold layer released
+        assert sizes[0] != sizes[1]                   # heterogeneous plans
+        # slab freed with generation invalidation of outstanding refs
+        assert eng._slabs[1] is None
+        assert all(not r.valid for r in stale)
+        assert not eng.caches[1].pools["F"]
+        # slab capacity of the hot layer derives from planned F-pool BYTES
+        slab0 = eng._slab(0)
+        cap_f = ps["layers"][0]["cap_bytes"]["F"]
+        if slab0 is not None:
+            assert slab0.capacity == min(int(cap_f // bps["F"]),
+                                         cfg.n_experts)
+        # byte telemetry: occupancy within the global budget
+        cs = eng.cache_summary()
+        assert sum(cs["occupancy_bytes"].values()) <= 4 * bps["F"] + 1e-6
+        # the cold layer still serves, bit-exactly, by re-reading the store
+        w2, _ = eng.fetch_experts(1, [0, 1])
+        for e, w in ref_w.items():
+            for k, v in w.items():
+                assert np.array_equal(as_np(w2[e][k]), v)
+    finally:
+        eng.shutdown()
+
+
+@pytest.mark.parametrize("cache_mode", ["hier", "flat"])
+def test_replan_boundary_logits_bitidentical(moe2_setup, cache_mode):
+    """Losslessness across re-planning: a mem_budget server that re-plans
+    mid-decode produces bit-identical logits to a static-pool server."""
+    cfg, params, d = moe2_setup
+    steps, B, S = 6, 2, 12
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (B, 1)),
+        jnp.int32)
+
+    def decode(zs, replan_at=None):
+        caches = zs.init_cache(B, S + steps)
+        out, tok = [], tokens
+        for i in range(steps):
+            if i == replan_at:
+                zs.engine.replan(reason="forced")
+            lg, caches = zs.decode_step(tok, caches, S - 1 + i)
+            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            out.append(np.asarray(lg, np.float32))
+        return np.stack(out)
+
+    pools = {"F": 1, "C": 1, "S": 1, "E": 1}      # eviction-inducing
+    zs_s = ZipServer(params, cfg, d, L=3, pool_sizes=pools,
+                     cache_mode=cache_mode)
+    store_bps = zs_s.engine._bytes_per_state(0)
+    budget = 6 * store_bps["F"]
+    zs_p = ZipServer(params, cfg, d, L=3, cache_mode=cache_mode,
+                     mem_budget=budget, replan_every=2, plan_step=0.25)
+    try:
+        ref = decode(zs_s)
+        out = decode(zs_p, replan_at=3)
+        assert np.array_equal(ref, out)
+        ps = zs_p.plan_summary()
+        assert ps["n_plans"] >= 2                 # initial + forced
+        assert ps["n_replans"] >= 1               # the forced one
+        assert ps["bytes_resident"] <= budget + 1e-6
+    finally:
+        zs_s.close()
+        zs_p.close()
+
+
+def test_drifting_trace_triggers_drift_replan_and_frees_slab(moe2_setup):
+    """The acceptance path, one drifting run: the popular set flips at
+    mid-trace AND layer 1's traffic stops — the windowed hit-rate probe
+    detects the drop, triggers a 'drift' re-plan, the run ends with
+    heterogeneous per-layer pool sizes, and the now-cold layer 1's device
+    slab is freed (its F byte share can no longer hold one expert)."""
+    cfg, params, d = moe2_setup
+    eng = ZipMoEEngine(ExpertStore(d), n_experts=cfg.n_experts, n_layers=2,
+                       L=3, freq_decay=0.9, device_cache=True)
+    try:
+        bps = eng._bytes_per_state(0)
+        # pin PlanConsts: measured u/c wobble with host fs/CPU timing and
+        # could tip the planner between F- and S-heavy plans — the
+        # scenario below must be deterministic (per-layer profiling itself
+        # is exercised by test_engine_replan_frees_cold_layer_slab).  A
+        # decompression-bound persona (c = u) makes F pools worth their
+        # bytes, so slabs actually get built.
+        eng.plan_consts = lambda layer: PlanConsts(u=1.0, v=0.1, c=1.0,
+                                                   L=4, K=4, n_tensors=3)
+        # 10 full-experts of budget: the initial 50/50 split gives BOTH
+        # layers F > 0 (slabs built), yet layer 0 alone cannot hold every
+        # expert — the mid-trace rank flip is visible as a hit-rate drop
+        eng.configure_planner(10 * bps["F"], replan_every=8,
+                              plan_step=0.25, drift_margin=0.05,
+                              profile_per_layer=False)
+        n = cfg.n_experts
+        phase1 = zipf_trace(n, 2, 40, alpha=1.4, seed=5)
+        phase2 = zipf_trace(n, 2, 40, alpha=1.4, seed=99)   # flipped ranks
+        slab1_seen = False
+        for i, sel in enumerate(phase1 + phase2):
+            eng.fetch_experts(0, sorted(sel))
+            if i < len(phase1) and i % 3 == 0:    # layer 1 idles at T/2
+                eng.fetch_experts(1, sorted(sel))
+            slab1_seen = slab1_seen or eng._slabs.get(1) is not None
+            eng.note_step()
+        ps = eng.plan_summary()
+        reasons = [ev["reason"] for ev in ps["replans"]]
+        assert "drift" in reasons, reasons        # re-planned at least once
+        sizes = {l: ps["layers"][l]["sizes"] for l in ps["layers"]}
+        assert sizes[0] != sizes[1], sizes        # heterogeneous end state
+        assert sizes[0]["F"] > 0 and sizes[1]["F"] == 0
+        # the cold layer's slab existed while hot and is freed now
+        assert slab1_seen and eng._slabs.get(1) is None
+        assert eng._slab(0) is not None
+    finally:
+        eng.shutdown()
