@@ -17,8 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (HW1, PAPER_SPECS, Rows, eval_trace,
-                               expert_store_bytes, make_system)
+from benchmarks.common import (HW1, PAPER_SPECS, Rows, eval_trace, expert_store_bytes)
 from repro.core.simulator import ZipMoESim
 
 VARIANTS = [("fifo", dict(plan=False, eviction="fifo")),

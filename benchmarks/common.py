@@ -7,9 +7,8 @@ import sys
 import time
 from typing import Dict, List
 
-import numpy as np
 
-from repro.core.simulator import HW, MoESpec, ZipMoESim, make_layer_trace, run_decode
+from repro.core.simulator import HW, MoESpec, ZipMoESim, make_layer_trace
 from repro.core.baselines import BASELINES
 
 # The paper's evaluation models (§5), expert-offload view.

@@ -47,6 +47,22 @@ def run(rows: Rows):
         rows.add(f"planner/plan_pools/n{n}_k{k}/naive", t_naive * 1e6, "")
         rows.add(f"planner/plan_pools/n{n}_k{k}/fast", t_fast * 1e6,
                  f"speedup={t_naive / max(t_fast, 1e-12):.2f}x")
+        # IPF warm-start (the live re-plan path's dominant cost): seeded
+        # from the previous fixed point.  Two re-plan flavours: budget-only
+        # (f unchanged — activity weights moved the layer's share) and a
+        # 0.5% drift in the observed inclusion probabilities.
+        rng = np.random.default_rng(7)
+        f2 = np.sort(np.clip(f * (1.0 + 0.005 * rng.standard_normal(n)),
+                             1e-6, None))[::-1]
+        f2 = f2 * (f.sum() / f2.sum())
+        t_cold = _bench(lambda: ipf_selection_probs(f2, k))
+        t_same = _bench(lambda: ipf_selection_probs(f, k, q0=q, f0=f))
+        t_warm = _bench(lambda: ipf_selection_probs(f2, k, q0=q, f0=f))
+        rows.add(f"planner/ipf_fit/n{n}_k{k}/cold", t_cold * 1e6, "")
+        rows.add(f"planner/ipf_fit/n{n}_k{k}/warm_same_f", t_same * 1e6,
+                 f"speedup={t_cold / max(t_same, 1e-12):.2f}x")
+        rows.add(f"planner/ipf_fit/n{n}_k{k}/warm_drift", t_warm * 1e6,
+                 f"speedup={t_cold / max(t_warm, 1e-12):.2f}x")
     # a full online re-plan: 26 MoE layers' plans from live-style stats
     layers = list(range(26))
     stats, bps, consts, weights = {}, {}, {}, {}

@@ -5,7 +5,7 @@ The 10 assigned architectures plus the paper's own evaluation models.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.configs.base import ModelConfig, SHAPES, SHAPE_BY_NAME, reduced
 

@@ -16,7 +16,7 @@ the same traces and hardware constants as ZipMoESim:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Sequence, Set
 
 import numpy as np
 

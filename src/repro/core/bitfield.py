@@ -14,7 +14,6 @@ jnp versions are the oracle for the Pallas recovery kernel.
 """
 from __future__ import annotations
 
-import math
 from typing import List, Tuple
 
 import jax.numpy as jnp

@@ -29,9 +29,10 @@ the Fig. 10 live ablation compares against.
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Set, Tuple
 
+from repro.core import checkz
 from repro.core.states import CState
 from repro.core.workload import FreqTracker
 
@@ -90,6 +91,10 @@ class _LiveCacheTelemetry:
     never diverge — see pool_summary)."""
 
     def _init_telemetry(self):
+        # the live caches have NO locks by design: every mutator runs on the
+        # engine caller's (decode) thread.  ZIPMOE_CHECK=1 turns that prose
+        # contract into an owning-thread assertion (checkz.MutatorGuard).
+        self._guard = checkz.make_guard(f"{type(self).__name__}")
         self.hits = collections.Counter()
         self.misses = 0
         # per-expert residency cost per pool (bytes), set by the engine from
@@ -111,10 +116,12 @@ class _LiveCacheTelemetry:
         survives a fetch job independently releasing its own.  The engine
         pins a step's selected experts while their fetch is in flight so
         admitting one of them can never churn another out mid-step."""
+        self._guard.check()
         for e in experts:
             self.pinned[int(e)] += 1
 
     def unpin(self, experts: Sequence[int]):
+        self._guard.check()
         for e in experts:
             k = int(e)
             n = self.pinned.get(k, 0) - 1
@@ -247,6 +254,7 @@ class HierarchicalCache(_LiveCacheTelemetry):
 
     def admit(self, expert: int, payload=None) -> Optional[str]:
         """Place expert per dispatch rule (called after its execution)."""
+        self._guard.check()
         prev = self.residency(expert)
         target = self.target_pool(expert)
         # drop from any other pool (state change / re-placement)
@@ -302,6 +310,7 @@ class HierarchicalCache(_LiveCacheTelemetry):
         resident of an over-full pool is pinned the trim is deferred to the
         residents' next admission (``_place`` enforces the new caps from
         now on)."""
+        self._guard.check()
         self.cap = {p: int(capacities.get(p, 0)) for p in POOL_ORDER}
         if cap_bytes is not None:
             self.cap_bytes = {p: float(cap_bytes.get(p, 0.0))
@@ -324,6 +333,7 @@ class HierarchicalCache(_LiveCacheTelemetry):
 
     def record_access(self, experts: Sequence[int]) -> Dict[int, CState]:
         """Look up states for a step's selected experts + update stats."""
+        self._guard.check()
         self.tracker.record(experts)
         out = {}
         for e in experts:
@@ -461,6 +471,7 @@ class LiveFlatCache(_LiveCacheTelemetry):
     def record_access(self, experts: Sequence[int]) -> Dict[int, CState]:
         """Probe-only lookup: stats + recency/marks/tracker updates, no
         insertion (admission happens post-reconstruction via :meth:`admit`)."""
+        self._guard.check()
         self.tracker.record(experts)
         out = {}
         for e in experts:
@@ -479,6 +490,7 @@ class LiveFlatCache(_LiveCacheTelemetry):
     def admit(self, expert: int, payload=None) -> Optional[str]:
         """Insert (classic caches always admit on miss), evicting an unpinned
         victim per policy when full."""
+        self._guard.check()
         if expert in self.entries:
             if payload is not None:
                 self.entries[expert].payload = payload
@@ -512,6 +524,7 @@ class LiveFlatCache(_LiveCacheTelemetry):
         configured policy until occupancy fits; pinned (mid-step) experts
         are never victims — an all-pinned overflow defers to the next
         admission.  Grow is churn-free."""
+        self._guard.check()
         self.capacity = int(capacity)
         self.cap = {"F": self.capacity, "C": 0, "S": 0, "E": 0}
         if cap_bytes is not None:

@@ -8,7 +8,7 @@ identity codec used by baselines and ablations.
 from __future__ import annotations
 
 import zlib
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 try:
     import zstandard as zstd

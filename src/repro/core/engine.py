@@ -78,9 +78,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import bitfield
-from repro.core.cache import (HierarchicalCache, LiveFlatCache, PoolEntry,
-                              pool_summary)
+from repro.core import bitfield, checkz
+from repro.core.cache import HierarchicalCache, LiveFlatCache, pool_summary
 from repro.core.scheduler import build_blocks
 from repro.core.slab import DeviceSlabCache, SlotRef
 from repro.core.states import CState, Task
@@ -290,11 +289,12 @@ class ZipMoEEngine:
         self.device_cache = device_cache
         # h2d/splice telemetry (device mode uploads the two u8 planes once
         # per reconstruction; the serving layer also charges host-array
-        # GEMM staging here so "zero weight bytes moved" is provable)
-        self.h2d_bytes = 0
-        self.d2h_bytes = 0
-        self.splice_s = 0.0
-        self.splice_ops = 0
+        # GEMM staging here so "zero weight bytes moved" is provable).
+        # Written from the io/dec workers AND the decode thread -> locked.
+        self.h2d_bytes = 0      # guarded-by: _cv
+        self.d2h_bytes = 0      # guarded-by: _cv
+        self.splice_s = 0.0     # guarded-by: _cv
+        self.splice_ops = 0     # guarded-by: _cv
         self._slabs: Dict[int, Optional[DeviceSlabCache]] = {}
         # live-planned slab slot counts (derived from planned F-pool BYTES);
         # fallback: mirror the F pool's expert-count capacity
@@ -351,18 +351,22 @@ class ZipMoEEngine:
         self._layer_rates: Dict[int, float] = {}   # EMA accesses per probe
 
         # ---- persistent worker pool (one I/O thread + L decompressors) ----
-        self._mu = threading.Lock()
-        self._cv = threading.Condition(self._mu)   # guards the queues below
+        # checkz factories return plain primitives unless ZIPMOE_CHECK=1,
+        # in which case acquires feed the lock-order cycle detector.
+        self._mu = checkz.make_lock("engine._mu")
+        self._cv = checkz.make_condition(self._mu, "engine._cv")
         # demand (urgent) fetches are served before speculative prefetches so
         # a misprediction fallback never queues behind background warming
-        self._io_urgent: "collections.deque[_FetchJob]" = collections.deque()
-        self._io_spec: "collections.deque[_FetchJob]" = collections.deque()
-        self._dec_ready: List[Tuple[int, int, int, int, int]] = []
+        self._io_urgent: "collections.deque[_FetchJob]" = \
+            collections.deque()                    # guarded-by: _cv
+        self._io_spec: "collections.deque[_FetchJob]" = \
+            collections.deque()                    # guarded-by: _cv
+        self._dec_ready: List[Tuple[int, int, int, int, int]] = []  # guarded-by: _cv
         #                 (urgency, seq, prio, uid, shard)
-        self._io_busy = False
-        self._jobs: Dict[int, _FetchJob] = {}      # seq -> live job
+        self._io_busy = False                      # guarded-by: _cv
+        self._jobs: Dict[int, _FetchJob] = {}      # guarded-by: _cv
         self._seq = itertools.count()
-        self._stop = False
+        self._stop = False                         # guarded-by: _cv
         self._threads = [threading.Thread(target=self._io_loop, daemon=True,
                                           name="zipmoe-io")]
         self._threads += [threading.Thread(target=self._dec_loop, daemon=True,
@@ -480,18 +484,19 @@ class ZipMoEEngine:
         with self._cv:
             self.h2d_bytes += int(nbytes)
 
-    def _recover_device(self, exp, sm, shape):
+    def _recover_device(self, exp, sm, shape):  # hot-path
         """Device recovery hook: upload the two u8 planes once, splice on
         device (Pallas kernel; interpret mode on CPU), return the bf16
         tensor WITHOUT downloading it — the slab write / grouped GEMM
         consume it in place."""
         from repro.kernels.ops import recover_bf16_device
-        exp_np = np.asarray(exp)
+        exp_np = np.asarray(exp)    # host-sync-ok: planes arrive as host bytes
         sm_np = (np.frombuffer(sm, np.uint8)
-                 if isinstance(sm, (bytes, bytearray)) else np.asarray(sm))
+                 if isinstance(sm, (bytes, bytearray))
+                 else np.asarray(sm))   # host-sync-ok: plane bytes, pre-upload
         t0 = time.perf_counter()
         out = recover_bf16_device(exp_np, sm_np, shape)
-        out.block_until_ready()
+        out.block_until_ready()     # host-sync-ok: timed splice, off decode thread
         dt = time.perf_counter() - t0
         with self._cv:
             self.h2d_bytes += exp_np.nbytes + sm_np.nbytes
@@ -969,16 +974,17 @@ class ZipMoEEngine:
         ``h2d_bytes`` in device_cache mode — the regression test's
         acceptance criterion."""
         slabs = [s for s in self._slabs.values() if s is not None]
-        return {
-            "device_cache": self.device_cache,
-            "h2d_bytes": self.h2d_bytes,
-            "d2h_bytes": self.d2h_bytes + sum(s.d2h_bytes for s in slabs),
-            "splice_ms": self.splice_s * 1e3,
-            "splice_ops": self.splice_ops,
-            "slab_writes": sum(s.writes for s in slabs),
-            "slab_resident": sum(len(s.slot_of) for s in slabs),
-            "slab_bytes": sum(s.nbytes() for s in slabs),
-        }
+        with self._cv:   # counters are written by the io/dec workers
+            return {
+                "device_cache": self.device_cache,
+                "h2d_bytes": self.h2d_bytes,
+                "d2h_bytes": self.d2h_bytes + sum(s.d2h_bytes for s in slabs),
+                "splice_ms": self.splice_s * 1e3,
+                "splice_ops": self.splice_ops,
+                "slab_writes": sum(s.writes for s in slabs),
+                "slab_resident": sum(len(s.slot_of) for s in slabs),
+                "slab_bytes": sum(s.nbytes() for s in slabs),
+            }
 
     # ------------------------------------------------------------------
     def fetch_experts(self, layer: int, expert_ids: Sequence[int],
@@ -1070,7 +1076,7 @@ class ZipMoEEngine:
             if sel:
                 cache = self.caches[layer]
                 cache.record_access(sel)
-                cache.pin(sel)
+                cache.pin(sel)   # pin-release: _collect (unpinned at drain)
         job.payloads = {(l, e): self._payload(l, e) or ExpertPayload()
                         for l, e in job.expert_keys}
 
@@ -1240,7 +1246,7 @@ class ZipMoEEngine:
                         self._finish_tensor(job, t)
 
     # ---- persistent decompression workers --------------------------------
-    def _drained_locked(self) -> bool:
+    def _drained_locked(self) -> bool:  # holds-lock: _cv
         """With the lock held: stopping AND no work can still appear —
         workers may only exit then, or an in-flight fetch would strand."""
         return (self._stop and not self._dec_ready and not self._io_urgent
@@ -1275,7 +1281,7 @@ class ZipMoEEngine:
                 self._finish_tensor(job, t)
 
     # ---- recovery + completion -------------------------------------------
-    def _claim_if_ready(self, job: _FetchJob, t: Task) -> bool:
+    def _claim_if_ready(self, job: _FetchJob, t: Task) -> bool:  # holds-lock: _cv
         """With the pool lock held: claim `t` for recovery iff all of its
         inputs are in and nobody else claimed it."""
         u = t.uid

@@ -27,7 +27,6 @@ between decode steps (see ``engine.configure_planner``).
 from __future__ import annotations
 
 import itertools
-import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -91,13 +90,40 @@ def project_feasible(f: np.ndarray, k: int, *, eps: float = 1e-9
 
 
 def ipf_selection_probs(f: np.ndarray, k: int, *, iters: int = 600,
-                        tol: float = 1e-10) -> np.ndarray:
+                        tol: float = 1e-10,
+                        q0: Optional[np.ndarray] = None,
+                        f0: Optional[np.ndarray] = None) -> np.ndarray:
     """f: inclusion probabilities (Σf = k expected).  Returns q_r ∈ (0,1).
-    Infeasible inputs (f_i ≥ 1 after rescale) are projected first."""
+    Infeasible inputs (f_i ≥ 1 after rescale) are projected first.
+
+    ``q0`` warm-starts the fit from a previous solution's q (same expert
+    count): under live re-planning f drifts slowly between plans, so the
+    old fixed point is a near-solution — an unchanged f (a budget-only
+    re-plan) converges in one sweep instead of tens-to-hundreds.  ``f0``
+    (the inclusion probs q0 was fitted FOR) additionally applies a
+    first-order odds correction ``w0 = w_prev · odds(f)/odds(f0)`` that
+    absorbs most of the drift.  The IPF fixed point for a given (f, k) is
+    unique up to the weight scale (normalised away each sweep), so warm
+    and cold starts converge to the same q — only faster
+    (``tests/test_live_planner.py`` pins the equivalence,
+    ``benchmarks/planner_bench.py`` the speedup).
+
+    The sweep loop also exits when the error stops improving (relative
+    progress < 0.1% for 30 consecutive sweeps): stiff fits (entries
+    projected against the q < 1 boundary) hit a numerical error floor
+    above ``tol`` and further sweeps only burn time at the floor."""
     k = int(k)
     f = project_feasible(f, k)
     n = f.size
-    w = f / (1.0 - f)
+    if q0 is not None and np.asarray(q0).size == n:
+        q0 = np.clip(np.asarray(q0, np.float64), 1e-12, 1 - 1e-12)
+        w = q0 / (1.0 - q0)
+        if f0 is not None and np.asarray(f0).size == n:
+            f0p = project_feasible(np.asarray(f0, np.float64), k)
+            w = w * ((f / (1.0 - f)) / (f0p / (1.0 - f0p)))
+    else:
+        w = f / (1.0 - f)
+    best_err, stall = np.inf, 0
     for _ in range(iters):
         w = w / np.max(w)            # scale-invariant; keeps the DP in range
         R = esp(w, k)
@@ -110,6 +136,12 @@ def ipf_selection_probs(f: np.ndarray, k: int, *, iters: int = 600,
         w = w * (f / fi)
         if err < tol:
             break
+        if err < best_err * (1.0 - 1e-3):
+            best_err, stall = err, 0
+        else:
+            stall += 1
+            if stall >= 30:
+                break                # converged to the numerical floor
     return np.clip(w / (1.0 + w), 1e-12, 1 - 1e-12)
 
 
@@ -177,6 +209,7 @@ class Plan:
     ratios: Dict[str, float]
     sizes: Dict[str, int]           # experts per pool
     cost: float
+    q: Optional[np.ndarray] = None  # fitted selection probs (warm-start seed)
 
 
 def _ratio_grid(active: Sequence[str], step: float):
@@ -243,10 +276,16 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
                bytes_per_state: Dict[str, float], consts: PlanConsts, *,
                active: Sequence[str] = POOL_ORDER, step: float = 0.125,
                q: Optional[np.ndarray] = None, memoize: bool = True,
-               prune: bool = True) -> Plan:
+               prune: bool = True, q0: Optional[np.ndarray] = None,
+               f0: Optional[np.ndarray] = None) -> Plan:
     """Returns the expected-makespan-minimising pool partition.
 
     bytes_per_state: per-expert residency cost for pools F/C/S/E.
+
+    ``q0``/``f0`` warm-start the IPF fit from a previous plan's fitted q
+    (and the f it was fitted for); ignored when ``q`` is supplied directly.
+    The returned plan carries its q so the live planner can chain warm
+    starts across re-plans.
 
     ``memoize`` shares Φ interval tables (truncated at h = k) across the γ
     grid and scores each distinct size-vector once; ``prune`` abandons a
@@ -256,7 +295,8 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
     make per-layer *online* re-planning affordable (``benchmarks.run
     --only planner`` measures the gap)."""
     n_experts = f.size
-    q = ipf_selection_probs(f, k) if q is None else np.asarray(q)
+    q = ipf_selection_probs(f, k, q0=q0, f0=f0) if q is None \
+        else np.asarray(q)
     phi_N = poisson_binomial(q, k)     # only Φ_N(k) is read: truncate
     denom = phi_N[k] if k < phi_N.size else 0.0
     phi_cache: Dict[Tuple[int, int], np.ndarray] = {}
@@ -311,7 +351,7 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
             if cost is None:
                 continue                      # pruned: cannot beat incumbent
         if best is None or cost < best.cost:
-            best = Plan(dict(ratios), dict(sizes), cost)
+            best = Plan(dict(ratios), dict(sizes), cost, q=q)
     assert best is not None
     return best
 
@@ -362,6 +402,9 @@ class LivePlanner:
         self.active = tuple(active)
         self.plans: Dict[int, LayerPlan] = {}
         self.replans: List[Dict[str, object]] = []    # event log
+        # per-layer (f, fitted q) from the last solve: warm-starts the next
+        # re-plan's IPF fit (the dominant share of live re-plan latency)
+        self._prev_fit: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self._plan_hit: Optional[float] = None  # best windowed rate since plan
         self._seeded = False                    # external static capacities
         self._replan_on_stats = False           # bootstrap plan needs revisit
@@ -411,8 +454,13 @@ class LivePlanner:
                     ratios={p: 0.0 for p in POOL_ORDER}, cost=float("inf"),
                     budget=budget)
                 continue
-            p = plan_pools(np.asarray(f, np.float64), int(k), budget, bps,
-                           consts[l], step=self.step, active=self.active)
+            f64 = np.asarray(f, np.float64)
+            f_prev, q_prev = self._prev_fit.get(l, (None, None))
+            p = plan_pools(f64, int(k), budget, bps,
+                           consts[l], step=self.step, active=self.active,
+                           q0=q_prev, f0=f_prev)
+            if p.q is not None:
+                self._prev_fit[l] = (f64, p.q)
             plans[l] = LayerPlan(
                 layer=l, sizes=dict(p.sizes),
                 cap_bytes={k2: r * budget for k2, r in p.ratios.items()},

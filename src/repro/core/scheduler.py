@@ -21,7 +21,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.states import CState, Task, lower_bound
+from repro.core.states import Task, lower_bound
 
 
 # ----------------------------------------------------------------------------
@@ -168,10 +168,16 @@ def build_blocks(tasks: Sequence[Task], L: int, *,
                  fast_threshold: int = 48) -> List[List[Task]]:
     # F-state tasks carry no I/O/decompression ops but their expert execution
     # still serialises on the accelerator stream — keep them (as Type-II).
+    #
+    # Concurrency contract (tools/zipcheck): this module is pure functions
+    # over caller-owned Task lists — no module/self state, so no locks.  The
+    # one mutation below touches the caller's Tasks before the job is
+    # published to the worker pool (submit_steps holds them single-threaded
+    # until the `with self._cv` publish).
     live = list(tasks)
     for i, t in enumerate(live):
         if t.uid < 0:
-            t.uid = i
+            t.uid = i           # single-writer: decode (pre-publish)
     s1 = _sorted_group([t for t in live if t.type_i])
     s2 = _sorted_group([t for t in live if not t.type_i])
     blocks: List[List[Task]] = []

@@ -17,14 +17,14 @@ Hardware model (constants profiled or taken from the paper's testbed):
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
 from repro.core.cache import FlatCache, HierarchicalCache
 from repro.core.planner import PlanConsts, plan_pools
-from repro.core.scheduler import schedule, simulate
+from repro.core.scheduler import schedule
 from repro.core.states import CState, Task
 from repro.core.workload import FreqTracker, rank_inclusion_probs
 

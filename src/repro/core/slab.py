@@ -33,11 +33,13 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import checkz
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -103,6 +105,9 @@ class DeviceSlabCache:
         self.gen: List[int] = [0] * self.capacity
         self.writes = 0                             # slot-write count
         self.d2h_bytes = 0                          # demotion downloads
+        # no locks by design: all mutation on the engine caller's (decode)
+        # thread; ZIPMOE_CHECK=1 asserts that (see checkz.MutatorGuard)
+        self._guard = checkz.make_guard(f"DeviceSlabCache(layer={layer})")
 
     # -- queries -----------------------------------------------------------
     def __contains__(self, expert: int) -> bool:
@@ -123,6 +128,7 @@ class DeviceSlabCache:
         slot — allocating one if needed — via donated in-place updates."""
         assert set(tensors) == set(self.shapes), (set(tensors),
                                                   set(self.shapes))
+        self._guard.check()
         slot = self.slot_of.get(expert)
         if slot is None:
             assert self._free, f"slab full (capacity={self.capacity})"
@@ -139,6 +145,7 @@ class DeviceSlabCache:
     def free(self, expert: int):
         """Release the expert's slot; bumping the generation invalidates
         every outstanding SlotRef to the old occupant."""
+        self._guard.check()
         slot = self.slot_of.pop(expert, None)
         if slot is None:
             return
@@ -153,6 +160,7 @@ class DeviceSlabCache:
         the buffers are dropped so XLA can reclaim the device memory once
         the last reference dies; a read through a stale ref trips the
         usual validity assertion instead of returning zombie bytes."""
+        self._guard.check()
         for slot in range(self.capacity):
             self.gen[slot] += 1
         self.slot_of.clear()
@@ -160,9 +168,10 @@ class DeviceSlabCache:
         self.bufs = {}
 
     # -- the hot-path read -------------------------------------------------
-    def gather(self, name: str, slots: Sequence[int]) -> jnp.ndarray:
+    def gather(self, name: str, slots: Sequence[int]) -> jnp.ndarray:  # hot-path
         """``[len(slots), *shape]`` device gather — the grouped FFN's
-        replacement for stacking host arrays."""
+        replacement for stacking host arrays.  Callers must generation-check
+        their SlotRefs first (conventions pass: slotref-gen)."""
         return _slab_take(self.bufs[name],
                           jnp.asarray(list(slots), jnp.int32))
 

@@ -17,8 +17,8 @@ decompression overlaps the SM reads.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 
 class CState(enum.Enum):

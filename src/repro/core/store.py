@@ -39,7 +39,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import bitfield
+from repro.core import bitfield, checkz
 from repro.core.chunks import (GroupMeta, manifest_from_json, manifest_to_json,
                                pack_group, unpack_tensor)
 from repro.core.codec import Codec, get_codec
@@ -140,17 +140,19 @@ class ExpertStore:
         self.extra = extra
         self.groups: Dict[Tuple[int, int], GroupMeta] = {g.key: g for g in groups}
         self.bandwidth = bandwidth_gbps * 1e9 if bandwidth_gbps else None
-        self.io_bytes = 0           # counters for benchmarks
-        self.io_time = 0.0
+        # benchmark counters: bumped by _read(), which runs on the engine's
+        # I/O thread AND on the decode thread (full loads / SM refetches)
+        self.io_bytes = 0           # guarded-by: _fd_lock
+        self.io_time = 0.0          # guarded-by: _fd_lock
         # per-thread FD cache: the I/O thread issues thousands of
         # exact-range reads per trace against a handful of .bin files —
         # open/close per chunk read was pure syscall tax.  FDs are
         # thread-local (seek+read races are impossible) but registered
         # globally so close() can release every descriptor at shutdown.
         self._fd_local = threading.local()
-        self._fd_lock = threading.Lock()
-        self._open_files: List = []
-        self.open_calls = 0         # actual open() count (FD-cache telemetry)
+        self._fd_lock = checkz.make_lock("store._fd_lock")
+        self._open_files: List = []     # guarded-by: _fd_lock
+        self.open_calls = 0             # guarded-by: _fd_lock
 
     def _fd(self, fname: str):
         cache = getattr(self._fd_local, "fds", None)
@@ -188,8 +190,11 @@ class ExpertStore:
             if el < want:
                 time.sleep(want - el)
                 el = want
-        self.io_bytes += size
-        self.io_time += el
+        # engine I/O thread and decode thread both land here concurrently:
+        # unlocked `+=` loses increments (found by tools/zipcheck)
+        with self._fd_lock:
+            self.io_bytes += size
+            self.io_time += el
         return data
 
     def read_sm(self, key, tidx: int) -> bytes:

@@ -8,8 +8,7 @@ list to map concrete expert ids to ranks.
 """
 from __future__ import annotations
 
-import collections
-from typing import Dict, Iterable, List, Sequence, Set
+from typing import Iterable, List, Sequence, Set
 
 import numpy as np
 

@@ -19,8 +19,6 @@ the dry-run variant proves the schedule lowers and compiles on the
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import recovery
-from repro.kernels import ref as ref_ops
 
 
 def _on_tpu() -> bool:

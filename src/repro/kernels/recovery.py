@@ -13,7 +13,6 @@ Grid: 2-D over (M / block_m, N / block_n).  Inputs must be tile-padded —
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

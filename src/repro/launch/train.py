@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPE_BY_NAME, ShapeConfig, get_config, get_smoke_config
+from repro.configs import ShapeConfig, get_config
 from repro.models import init_params
 from repro.training.checkpoint import CheckpointManager
 from repro.training.data import data_iter

@@ -15,7 +15,6 @@ The new token's K/V is written by the shard that owns position ``pos``.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

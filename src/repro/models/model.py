@@ -12,14 +12,13 @@ Decode:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tfm
-from repro.models.layers import (apply_lm_head, apply_norm, init_embed,
-                                 init_lm_head, init_norm)
+from repro.models.layers import apply_norm, init_embed, init_lm_head, init_norm
 
 
 # ----------------------------------------------------------------------------

@@ -13,8 +13,7 @@ leaves carry a leading ``m = (n_layers - first_dense) / period`` dim.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

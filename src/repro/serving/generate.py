@@ -18,7 +18,6 @@ routing and dtype-noise-equal logits.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -1,7 +1,6 @@
 """KV-cache utilities: allocation, growth, merging, memory accounting."""
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

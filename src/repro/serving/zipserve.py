@@ -582,7 +582,7 @@ class ZipServer:
             self.engine.count_h2d(v.nbytes)
         return jnp.asarray(v)
 
-    def _stack_weights(self, name: str, weights, ids) -> jnp.ndarray:
+    def _stack_weights(self, name: str, weights, ids) -> jnp.ndarray:  # hot-path
         """[Ea, ...] stacked expert weights for the grouped GEMM.
 
         The device-cache fast path: when every selected expert is resident
@@ -602,9 +602,10 @@ class ZipServer:
             # tripwire for slot-lifecycle bugs, not a corruption)
             if all(v.slab is slab and v.valid for v in vals):
                 return slab.gather(name, [v.slot for v in vals])
+        # host-sync-ok: fallback — host/mixed steps pay the re-upload (h2d_bytes)
         return jnp.stack([self._as_weight(v) for v in vals])
 
-    def _ffn_grouped(self, x, top_p, top_i, weights, ids):
+    def _ffn_grouped(self, x, top_p, top_i, weights, ids):  # hot-path
         """Gather-by-expert batched FFN on the grouped-GEMM kernel."""
         B, _, d = x.shape
         gather, gates = self._gather_by_expert(top_p, top_i, ids)
@@ -714,7 +715,7 @@ class ZipServer:
         return y
 
     def decode_step(self, tokens: jnp.ndarray, caches: list, pos: int
-                    ) -> Tuple[jnp.ndarray, list]:
+                    ) -> Tuple[jnp.ndarray, list]:  # hot-path
         """tokens: [B, 1] -> (logits [B,1,V], caches)."""
         cfg = self.cfg
         p = self.globals
@@ -722,6 +723,8 @@ class ZipServer:
         if cfg.pos == "learned":
             x = x + p["embed"]["pos"][pos][None, None]
         new_caches = []
+        # loop-ok: per-LAYER structure (hot-path bans per-EXPERT loops;
+        # expert work inside goes through the grouped-GEMM path)
         for idx, (lp, cache) in enumerate(zip(self.layers, caches)):
             h = apply_norm(lp["norm1"], x, cfg)
             if "attn" in lp:

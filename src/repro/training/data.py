@@ -8,7 +8,7 @@ so checkpoint/restore resumes the stream exactly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

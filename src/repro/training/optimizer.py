@@ -1,7 +1,7 @@
 """AdamW in pure JAX (f32 moments, works on bf16 params), plus LR schedules."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,7 @@ Options:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Property tests for the BF16 bit-field decomposition (hypothesis)."""
 import numpy as np
-import pytest
 
 from _hyp_compat import given, settings, st
 

@@ -7,7 +7,7 @@ from _hyp_compat import given, settings, st
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core.codec import get_codec, compression_ratio, _REGISTRY
+from repro.core.codec import get_codec, _REGISTRY
 from repro.core.store import ExpertStore, build_store, iter_expert_groups
 from repro.models import init_params
 

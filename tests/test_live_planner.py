@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core.cache import HierarchicalCache, LiveFlatCache
-from repro.core.engine import ExpertPayload, ZipMoEEngine
+from repro.core.engine import ZipMoEEngine
 from repro.core.planner import (LivePlanner, PlanConsts, plan_pools,
                                 poisson_binomial)
 from repro.core.slab import SlotRef
@@ -78,6 +78,60 @@ def test_plan_pools_fast_equals_naive(n, k0, batch, seed):
     fast = plan_pools(f, k, 30.0, BPS, CONSTS, step=0.25, q=q)
     assert naive.sizes == fast.sizes
     assert abs(naive.cost - fast.cost) < 1e-9 * max(1.0, naive.cost)
+
+
+@pytest.mark.parametrize("n,k0,batch,seed", [(60, 4, 1, 3), (64, 6, 4, 7)])
+def test_ipf_warm_start_equals_cold(n, k0, batch, seed):
+    """Warm-starting the IPF fit from a previous fixed point (q0/f0) lands
+    on the same solution as a cold start — the fixed point for (f, k) is
+    unique up to the per-sweep weight normalisation — and the plans solved
+    from the two fits are identical."""
+    from repro.core.planner import ipf_selection_probs
+    from repro.core.workload import effective_k
+    trace = zipf_trace(n, k0, 800, alpha=1.2, seed=seed, batch=batch)
+    f = rank_inclusion_probs(trace, n)
+    k = effective_k(trace)
+    q_prev = ipf_selection_probs(f, k)
+
+    # budget-only re-plan: identical f — the warm start must short-circuit
+    # to the same q (one sweep) and the same plan
+    q_same = ipf_selection_probs(f, k, q0=q_prev, f0=f)
+    assert np.allclose(q_same, q_prev, atol=1e-6)
+
+    # drifted f: warm and cold fits agree, and so do the solved plans
+    rng = np.random.default_rng(seed + 1)
+    f2 = np.sort(np.clip(f * (1.0 + 0.005 * rng.standard_normal(n)),
+                         1e-6, None))[::-1]
+    f2 = f2 * (f.sum() / f2.sum())
+    q_cold = ipf_selection_probs(f2, k)
+    q_warm = ipf_selection_probs(f2, k, q0=q_prev, f0=f)
+    assert np.allclose(q_cold, q_warm, atol=1e-5)
+    cold = plan_pools(f2, k, 30.0, BPS, CONSTS, step=0.25)
+    warm = plan_pools(f2, k, 30.0, BPS, CONSTS, step=0.25,
+                      q0=q_prev, f0=f)
+    assert cold.sizes == warm.sizes
+    assert abs(cold.cost - warm.cost) < 1e-6 * max(1.0, cold.cost)
+    assert warm.q is not None      # the plan carries its fit for chaining
+
+
+def test_live_planner_chains_warm_starts():
+    """LivePlanner.plan() reuses each layer's previous fit: repeated plans
+    over a stable workload produce identical layer plans, and the cached
+    (f, q) pair is refreshed every solve."""
+    from repro.core.workload import effective_k
+    stats, bps, consts = {}, {}, {}
+    for l in range(2):
+        tr = zipf_trace(32, 4, 400, alpha=1.2, seed=l)
+        stats[l] = (rank_inclusion_probs(tr, 32), effective_k(tr))
+        bps[l] = BPS
+        consts[l] = CONSTS
+    lp = LivePlanner(2 * 30.0, step=0.25)
+    p1 = lp.plan(stats, bps, consts)
+    assert set(lp._prev_fit) == {0, 1}
+    p2 = lp.plan(stats, bps, consts)   # warm-started from p1's fits
+    for l in stats:
+        assert p1[l].sizes == p2[l].sizes
+        assert p1[l].ratios == p2[l].ratios
 
 
 # ---------------------------------------------------------------------------

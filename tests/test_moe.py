@@ -3,7 +3,6 @@ routing variants, load-balance loss."""
 import dataclasses
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -2,14 +2,13 @@
 brute-force comparison (hypothesis property tests)."""
 import random
 
-import pytest
 
 from _hyp_compat import given, settings, st
 
 from repro.core.scheduler import (brute_force_best, build_blocks,
                                   compute_dominant, naive_schedule, schedule,
                                   simulate)
-from repro.core.states import CState, Task, lower_bound, make_tasks
+from repro.core.states import CState, lower_bound, make_tasks
 
 STATES = [CState.M, CState.E, CState.S, CState.C]
 

@@ -4,9 +4,9 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ShapeConfig, get_smoke_config
+from repro.configs import get_smoke_config
 from repro.models import forward, init_cache, init_params, prefill
-from repro.serving.generate import generate, make_steps, sample_tokens
+from repro.serving.generate import generate, sample_tokens
 from repro.serving.kv_cache import (cache_bytes, grow_cache, restack_layers,
                                     unstack_layers)
 from repro.serving.server import BatchServer

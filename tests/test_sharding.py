@@ -92,7 +92,6 @@ def test_collective_parse():
 
 def test_small_mesh_lowering():
     """End-to-end pjit lowering on a tiny in-process mesh (1 device)."""
-    import jax.numpy as jnp
     from repro.configs import get_smoke_config, ShapeConfig
     from repro.distributed.sharding import batch_pspecs, param_shardings
     from repro.models.inputs import batch_spec, make_batch_structs

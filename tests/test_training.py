@@ -1,7 +1,6 @@
 """Training substrate tests: learning, grad compression, checkpoint/restore,
 elastic re-mesh, data determinism."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
@@ -83,7 +82,7 @@ def test_checkpoint_roundtrip_and_retention(tmp_path):
 
 def test_checkpoint_elastic_remesh(tmp_path):
     """Save unsharded, restore onto an explicit (1,1) mesh placement."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import param_shardings
     cfg = get_smoke_config("granite-8b")
     params = init_params(jax.random.PRNGKey(0), cfg)

@@ -1,0 +1,541 @@
+"""tools/zipcheck (static passes, fixture snippets + repo self-check) and
+repro.core.checkz (runtime lock-order / owning-thread checker), plus
+multi-threaded stress & fuzz tests of the decode stack's concurrency
+contracts under ``ZIPMOE_CHECK=1``."""
+import sys
+import textwrap
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:            # `tools` lives at the repo root
+    sys.path.insert(0, str(REPO))
+
+from tools.zipcheck import __main__ as zipcheck_cli
+from tools.zipcheck.core import Source, run_paths, run_sources
+
+from repro.configs import get_smoke_config
+from repro.core import checkz
+from repro.core.engine import ZipMoEEngine
+from repro.core.store import ExpertStore, build_store
+from repro.models import init_params
+from repro.serving.zipserve import ZipServer
+
+POOLS = {"F": 2, "C": 2, "S": 2, "E": 2}
+
+
+def findings(text, rel="src/repro/core/fixture.py"):
+    src = Source(Path(rel), rel, text=textwrap.dedent(text))
+    return run_sources([src])
+
+
+def by_rule(fs, rule):
+    return [f for f in fs if f.rule == rule]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_lock_graph():
+    checkz.reset_lock_order()
+    yield
+    checkz.reset_lock_order()
+
+
+# ---------------------------------------------------------------------------
+# guarded-by pass
+# ---------------------------------------------------------------------------
+GUARDED_FIXTURE = """
+    import threading
+
+    class Eng:
+        def __init__(self):
+            self._mu = threading.Lock()
+            self._cv = threading.Condition(self._mu)
+            self._jobs = {}     # guarded-by: _cv
+            self.free = 0
+
+        def ok_with(self):
+            with self._cv:
+                return len(self._jobs)
+
+        def ok_alias(self):
+            with self._mu:      # _cv guards == _mu: alias resolves
+                self._jobs[1] = 2
+
+        def ok_contract(self):  # holds-lock: _cv
+            return len(self._jobs)
+
+        def ok_waived(self):
+            return len(self._jobs)  # unguarded-ok: test fixture
+
+        def ok_unrelated(self):
+            return self.free    # not annotated: not checked
+
+        def bad_read(self):
+            return len(self._jobs)
+
+        def bad_write(self):
+            self._jobs = {}
+"""
+
+
+def test_guarded_pass_positive_and_negative():
+    fs = by_rule(findings(GUARDED_FIXTURE), "guarded-by")
+    assert sorted(f.msg.split()[2].rstrip(".") for f in fs) == \
+        ["Eng.bad_read", "Eng.bad_write"], [f.render() for f in fs]
+    assert all(f.obj == "Eng._jobs" for f in fs)
+
+
+def test_guarded_pass_checkz_factories_recognised():
+    fs = by_rule(findings("""
+        from repro.core import checkz
+
+        class S:
+            def __init__(self):
+                self._mu = checkz.make_lock("s._mu")
+                self._cv = checkz.make_condition(self._mu, "s._cv")
+                self.n = 0      # guarded-by: _cv
+
+            def ok(self):
+                with self._mu:
+                    self.n += 1
+
+            def bad(self):
+                self.n += 1
+    """), "guarded-by")
+    assert len(fs) == 1 and "S.bad" in fs[0].msg
+
+
+# ---------------------------------------------------------------------------
+# thread-domain pass
+# ---------------------------------------------------------------------------
+DOMAIN_FIXTURE = """
+    import threading
+
+    class ZipMoEEngine:
+        def __init__(self):
+            self._mu = threading.Lock()
+            self.racy = 0
+            self.locked = 0
+            self.waived = 0     # single-writer: decode (fixture)
+            self.dec_only = 0
+
+        def _io_loop(self):
+            self.racy += 1
+            self.waived += 1
+            with self._mu:
+                self.locked += 1
+
+        def _dec_loop(self):
+            self.dec_only += 1
+
+        def bump(self):         # public: decode domain
+            self.racy += 1
+            self.waived += 1
+            with self._mu:
+                self.locked += 1
+"""
+
+
+def test_domain_pass_flags_multi_domain_unguarded_writes():
+    fs = by_rule(findings(DOMAIN_FIXTURE), "thread-domain")
+    assert [f.obj for f in fs] == ["ZipMoEEngine.racy"], \
+        [f.render() for f in fs]
+    assert "decode" in fs[0].msg and "io" in fs[0].msg
+
+
+def test_domain_pass_follows_call_graph():
+    # the write happens in a private helper only reachable from _io_loop
+    # and a public method — the pass must propagate domains over the edges
+    fs = by_rule(findings("""
+        class ZipMoEEngine:
+            def __init__(self):
+                self.n = 0
+
+            def _io_loop(self):
+                self._helper()
+
+            def touch(self):
+                self._helper()
+
+            def _helper(self):
+                self.n += 1
+    """), "thread-domain")
+    assert [f.obj for f in fs] == ["ZipMoEEngine.n"]
+
+
+# ---------------------------------------------------------------------------
+# hot-path pass
+# ---------------------------------------------------------------------------
+HOTPATH_FIXTURE = """
+    import numpy as np
+    import jax.numpy as jnp
+
+    class S:
+        def hot_bad(self, xs):  # hot-path
+            a = np.asarray(xs)
+            b = jnp.stack(xs)
+            c = xs[0].item()
+            for x in xs:
+                a = a + x
+            return float(a)
+
+        def hot_waived(self, xs):  # hot-path
+            a = np.asarray(xs)  # host-sync-ok: fixture
+            # loop-ok: fixture
+            for x in xs:
+                a = a + x
+            return a
+
+        def cold(self, xs):
+            return np.asarray(xs)
+"""
+
+
+def test_hotpath_pass_positive_and_negative():
+    fs = by_rule(findings(HOTPATH_FIXTURE), "hot-path")
+    assert {f.obj for f in fs} == {"S.hot_bad"}, [f.render() for f in fs]
+    kinds = sorted(f.msg.split()[0] for f in fs)
+    assert kinds == [".item()", "float()", "jnp.stack", "np.asarray",
+                     "python"], kinds
+
+
+# ---------------------------------------------------------------------------
+# convention lints
+# ---------------------------------------------------------------------------
+def test_codec_threadlocal_convention():
+    fs = by_rule(findings("""
+        import threading
+        import zstandard as zstd
+
+        class C:
+            def __init__(self):
+                self._tl = threading.local()
+                self.shared = zstd.ZstdCompressor()
+
+            def _ctx(self):
+                self._tl.c = zstd.ZstdCompressor()
+                local = zstd.ZstdDecompressor()
+                return local
+    """), "codec-threadlocal")
+    assert len(fs) == 1 and "shared" in fs[0].obj, [f.render() for f in fs]
+
+
+def test_slotref_gen_convention():
+    fs = by_rule(findings("""
+        class G:
+            def ok(self, slab, refs):
+                if all(r.valid for r in refs):
+                    return slab.gather("w", [r.slot for r in refs])
+
+            def ok_waived(self, slab, slots):
+                return slab.gather("w", slots)  # gen-checked: fixture
+
+            def bad(self, slab, slots):
+                return slab.gather("w", slots)
+    """), "slotref-gen")
+    assert len(fs) == 1 and fs[0].obj == "G.bad", [f.render() for f in fs]
+
+
+def test_pin_unpin_convention():
+    fs = by_rule(findings("""
+        class P:
+            def ok(self, cache, ids):
+                cache.pin(ids)
+                n = len(ids)
+                cache.unpin(ids)
+                return n
+
+            def ok_finally(self, cache, ids):
+                cache.pin(ids)
+                try:
+                    return len(ids)
+                finally:
+                    cache.unpin(ids)
+
+            def ok_handoff(self, cache, ids):
+                cache.pin(ids)   # pin-release: collector (fixture)
+
+            def bad_leak(self, cache, ids):
+                cache.pin(ids)
+
+            def bad_return(self, cache, ids):
+                cache.pin(ids)
+                if not ids:
+                    return None
+                cache.unpin(ids)
+                return 1
+    """), "pin-unpin")
+    assert sorted(f.obj for f in fs) == ["P.bad_leak", "P.bad_return"], \
+        [f.render() for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# driver: repo self-check + baseline mechanics
+# ---------------------------------------------------------------------------
+def test_zipcheck_repo_is_clean():
+    """The annotated stack passes with the shipped (empty) baseline."""
+    new, stale = run_paths([str(REPO / "src")],
+                           baseline=REPO / "tools" / "zipcheck" /
+                           "baseline.txt")
+    assert not new, "\n".join(f.render() for f in new)
+    assert not stale
+
+
+def test_zipcheck_cli_baseline_roundtrip(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""
+        import threading
+
+        class X:
+            def __init__(self):
+                self._mu = threading.Lock()
+                self.n = 0   # guarded-by: _mu
+
+            def bump(self):
+                self.n += 1
+    """))
+    assert zipcheck_cli.main([str(bad)]) == 1
+    base = tmp_path / "baseline.txt"
+    assert zipcheck_cli.main([str(bad), "--write-baseline", str(base)]) == 0
+    assert zipcheck_cli.main([str(bad), "--baseline", str(base)]) == 0
+    # fixing the violation leaves a stale entry but still exits 0
+    bad.write_text("class X:\n    pass\n")
+    assert zipcheck_cli.main([str(bad), "--baseline", str(base)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# checkz runtime: lock order + owning-thread guards
+# ---------------------------------------------------------------------------
+def test_checkz_disabled_returns_plain_primitives(monkeypatch):
+    monkeypatch.delenv("ZIPMOE_CHECK", raising=False)
+    assert not checkz.enabled()
+    assert not isinstance(checkz.make_lock("x"), checkz.CheckedLock)
+    g = checkz.make_guard("x")
+    assert not isinstance(g, checkz.MutatorGuard)
+    g.check()                              # no-op from any thread
+    t = threading.Thread(target=g.check)
+    t.start(); t.join()
+
+
+def test_checkz_lock_order_cycle_detected(monkeypatch):
+    monkeypatch.setenv("ZIPMOE_CHECK", "1")
+    a, b = checkz.make_lock("A"), checkz.make_lock("B")
+    with a:
+        with b:                            # records A -> B
+            pass
+    with b:
+        with pytest.raises(checkz.LockOrderError):
+            a.acquire()                    # B -> A closes the cycle
+    assert "A" in checkz.lock_order_edges()
+
+
+def test_checkz_condition_over_checked_lock(monkeypatch):
+    monkeypatch.setenv("ZIPMOE_CHECK", "1")
+    mu = checkz.make_lock("cv-lock")
+    cv = checkz.make_condition(mu, "cv")
+    hit = []
+
+    def waiter():
+        with cv:
+            while not hit:
+                cv.wait(timeout=5.0)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    with cv:
+        hit.append(1)
+        cv.notify_all()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert not mu.locked()
+
+
+def test_checkz_mutator_guard(monkeypatch):
+    monkeypatch.setenv("ZIPMOE_CHECK", "1")
+    g = checkz.make_guard("cache[0]")
+    g.check()                              # binds this thread as owner
+    g.check()
+    boom = []
+
+    def other():
+        try:
+            g.check()
+        except checkz.GuardError as e:
+            boom.append(e)
+
+    t = threading.Thread(target=other)
+    t.start(); t.join()
+    assert len(boom) == 1 and "cache[0]" in str(boom[0])
+    g.rebind()
+    t2 = threading.Thread(target=g.check)  # new owner after rebind
+    t2.start(); t2.join()
+
+
+# ---------------------------------------------------------------------------
+# live stack under ZIPMOE_CHECK=1
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def moe_setup(tmp_path_factory):
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+def test_store_io_counters_exact_under_contention(moe_setup):
+    """Regression for the race zipcheck found: ``_read`` bumped
+    io_bytes/io_time unlocked from the engine I/O thread and the decode
+    thread concurrently, losing increments.  With the counters under
+    _fd_lock the totals are exact."""
+    cfg, params, d = moe_setup
+    store = ExpertStore(d)
+    key = sorted(store.groups)[0]
+    sm_size = store.groups[key].tensors[0].sm_size
+    n_threads, reps = 4, 300
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)            # force frequent preemption
+    try:
+        ts = [threading.Thread(
+            target=lambda: [store.read_sm(key, 0) for _ in range(reps)])
+            for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+    assert store.io_bytes == n_threads * reps * sm_size
+    store.close()
+
+
+def _assert_bitexact(store, out, layer, experts):
+    for e in experts:
+        ref = store.load_group((layer, e))
+        for name, arr in out[e].items():
+            assert np.array_equal(np.asarray(arr, np.float32),
+                                  np.asarray(ref[name], np.float32)), \
+                (layer, e, name)
+
+
+def test_stress_engine_checked(moe_setup, monkeypatch):
+    """Hammer prefetch/collect/replan while reader threads poll every
+    summary: no guard violations, no lock-order cycles, payloads stay
+    bit-identical to the store's ground truth."""
+    monkeypatch.setenv("ZIPMOE_CHECK", "1")
+    cfg, params, d = moe_setup
+    store = ExpertStore(d)
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=3, pool_sizes=dict(POOLS))
+    eng.configure_planner(4e6, replan_every=0)
+    stop = threading.Event()
+    reader_err = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                eng.cache_summary()
+                eng.transfer_summary()
+                eng.plan_summary()
+        except Exception as e:             # pragma: no cover
+            reader_err.append(e)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in readers:
+        t.start()
+    rng = np.random.default_rng(0)
+    try:
+        for i in range(30):
+            layer = int(i % cfg.n_layers)
+            sel = sorted(int(e) for e in rng.choice(
+                cfg.n_experts, size=cfg.top_k, replace=False))
+            out, _stats = eng.prefetch_experts(layer, sel).result()
+            _assert_bitexact(store, out, layer, sel)
+            if i % 10 == 9:
+                eng.replan("stress")
+    finally:
+        stop.set()
+        for t in readers:
+            t.join()
+        eng.shutdown()
+    assert not reader_err, reader_err
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_fuzz_engine_interleavings_checked(moe_setup, monkeypatch, seed):
+    """Seeded fuzz: random mixes of demand/speculative prefetches, replans
+    and summary polls under a tiny switch interval.  Any guard violation
+    or lock-order cycle raises; payloads must stay bit-identical."""
+    monkeypatch.setenv("ZIPMOE_CHECK", "1")
+    cfg, params, d = moe_setup
+    store = ExpertStore(d)
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=2, pool_sizes=dict(POOLS))
+    eng.configure_planner(4e6, replan_every=0)
+    rng = np.random.default_rng(seed)
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    pending = []
+    try:
+        for _ in range(25):
+            op = rng.integers(0, 5)
+            layer = int(rng.integers(0, cfg.n_layers))
+            if op <= 1:
+                spec = bool(op)
+                sel = sorted(int(e) for e in rng.choice(
+                    cfg.n_experts, size=int(rng.integers(1, cfg.top_k + 1)),
+                    replace=False))
+                pending.append((layer, sel, spec, eng.prefetch_experts(
+                    layer, sel, speculative=spec)))
+            elif op == 2 and pending:
+                layer, sel, spec, h = pending.pop(
+                    int(rng.integers(len(pending))))
+                out, _ = h.result()
+                if sel and not spec:
+                    _assert_bitexact(store, out, layer, sel)
+            elif op == 3:
+                eng.replan("fuzz")
+            else:
+                eng.cache_summary()
+                eng.transfer_summary()
+        for layer, sel, spec, h in pending:
+            h.result()
+    finally:
+        sys.setswitchinterval(old)
+        eng.shutdown()
+
+
+def test_decode_bitidentical_with_checks(moe_setup, monkeypatch):
+    """ZIPMOE_CHECK=1 must be behaviour-transparent: the checked decode's
+    logits are bit-identical to the unchecked run's."""
+    cfg, params, d = moe_setup
+    B, S = 2, 8
+    tokens = np.asarray(np.random.default_rng(5).integers(
+        0, cfg.vocab_size, (B, 1)), np.int32)
+
+    def run(check):
+        if check:
+            monkeypatch.setenv("ZIPMOE_CHECK", "1")
+        else:
+            monkeypatch.delenv("ZIPMOE_CHECK", raising=False)
+        zs = ZipServer(params, cfg, d, L=2, pool_sizes=dict(POOLS))
+        caches = zs.init_cache(B, S + 4)
+        logits = []
+        tok = jnp.asarray(tokens)
+        for i in range(3):
+            lg, caches = zs.decode_step(tok, caches, S + i)
+            logits.append(np.asarray(lg, np.float32))
+            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        zs.engine.shutdown()
+        return logits
+
+    plain = run(False)
+    checked = run(True)
+    for a, b in zip(plain, checked):
+        assert np.array_equal(a, b)

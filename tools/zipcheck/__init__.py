@@ -1,0 +1,27 @@
+"""zipcheck — concurrency-contract static analysis for the ZipMoE stack.
+
+Four AST passes (stdlib only, no third-party deps):
+
+* ``guarded``     — fields annotated ``# guarded-by: <lock>`` may only be
+                    touched while the enclosing class holds that lock
+                    (lexical ``with self.<lock>:`` or a ``# holds-lock:``
+                    caller contract on the method).
+* ``domains``     — infers which thread domains (io / dec / decode) reach
+                    each function over a call graph of core/ + serving/ and
+                    flags attributes written from >= 2 domains with no guard
+                    and no ``# single-writer:`` waiver.
+* ``hotpath``     — purity lints for functions marked ``# hot-path``: no
+                    host syncs, no ``jnp.stack``, no Python statement loops
+                    (waivers: ``# host-sync-ok:`` / ``# loop-ok:``).
+* ``conventions`` — codec objects must live in thread-local storage,
+                    ``SlotRef`` gathers need a generation (``.valid``) check,
+                    ``pin()`` needs a matching ``unpin()`` on every exit path
+                    (waiver: ``# pin-release: <func>``).
+
+Run ``python -m tools.zipcheck src/ [--baseline tools/zipcheck/baseline.txt]``.
+The runtime half (lock-order cycles, owning-thread guards) lives in
+``src/repro/core/checkz.py`` and is enabled with ``ZIPMOE_CHECK=1``.
+"""
+from .core import Finding, Source, load_sources, run_paths, run_sources
+
+__all__ = ["Finding", "Source", "load_sources", "run_paths", "run_sources"]

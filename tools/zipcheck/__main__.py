@@ -1,0 +1,59 @@
+"""CLI driver: ``python -m tools.zipcheck src/ [--baseline FILE]``.
+
+Exit status 0 when every finding is covered by the baseline; 1 otherwise.
+``--write-baseline`` rewrites the baseline from the current findings (each
+entry must then survive review — the baseline is the explicit list of
+accepted violations, not a mute button).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .core import run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.zipcheck",
+        description="ZipMoE concurrency-contract static analyzer")
+    ap.add_argument("paths", nargs="*", default=["src/"],
+                    help="files/directories to scan (default: src/)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="suppression baseline file (one finding ident per "
+                         "line, '#' comments allowed)")
+    ap.add_argument("--write-baseline", type=Path, default=None,
+                    help="write current finding idents to FILE and exit 0")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src/"]
+    new, stale = run_paths(paths, baseline=args.baseline)
+
+    if args.write_baseline is not None:
+        all_new, _ = run_paths(paths, baseline=None)
+        body = "".join(f.ident + "\n" for f in all_new)
+        args.write_baseline.write_text(
+            "# zipcheck suppression baseline — every line is an accepted,\n"
+            "# reviewed finding (see DESIGN.md 'Threading model').\n" + body)
+        print(f"zipcheck: wrote {len(all_new)} baseline entries to "
+              f"{args.write_baseline}")
+        return 0
+
+    for f in new:
+        print(f.render())
+    for ident in stale:
+        print(f"zipcheck: warning: stale baseline entry (no longer "
+              f"triggered): {ident}", file=sys.stderr)
+    if new:
+        print(f"zipcheck: {len(new)} finding(s) not covered by baseline",
+              file=sys.stderr)
+        return 1
+    print("zipcheck: OK"
+          + (f" ({len(stale)} stale baseline entr"
+             f"{'y' if len(stale) == 1 else 'ies'})" if stale else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,164 @@
+"""convention lints — three repo-specific rules:
+
+* **codec-threadlocal** — zstd/zlib (de)compressor objects are stateful and
+  NOT thread-safe (codec.py).  Constructing one is fine as a function local
+  (thread-confined) but storing it on ``self`` requires the attribute chain
+  to be rooted in a ``threading.local()`` attr of the class
+  (waiver: ``# threadlocal-ok: <reason>``).
+* **slotref-gen** — slab gathers hand back device rows whose slots may have
+  been retired; any ``<recv>.gather(...)`` call must be preceded (same
+  function, earlier line) by a ``.valid`` generation check
+  (waiver: ``# gen-checked: <reason>``).
+* **pin-unpin** — a function that pins cache entries must unpin them on
+  every exit path: a matching ``unpin``/``unpin_experts`` call with no
+  ``return`` between the first pin and the last unpin, unless the unpin
+  sits in a ``finally`` block.  Functions that intentionally hand the pins
+  to someone else declare it: ``# pin-release: <who releases>``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from .core import Finding, Source, iter_classes, _self_attr
+
+CODEC_CTORS = {"ZstdCompressor", "ZstdDecompressor",
+               "compressobj", "decompressobj"}
+PIN_NAMES = {"pin", "pin_experts"}
+UNPIN_NAMES = {"unpin", "unpin_experts"}
+_SKIP_RECV = {"lax", "jax", "jnp"}        # jnp/lax .gather is device-side
+
+
+def _ctor_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    name = f.id if isinstance(f, ast.Name) else \
+        f.attr if isinstance(f, ast.Attribute) else None
+    return name if name in CODEC_CTORS else None
+
+
+def _root_attr(node: ast.AST) -> Optional[str]:
+    """First attribute after ``self`` in a (possibly nested) chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        got = _self_attr(node)
+        if got is not None:
+            return got
+        node = node.value
+    return None
+
+
+def _enclosing(src: Source, node: ast.AST, kinds) -> Optional[ast.AST]:
+    cur = src.parent(node)
+    while cur is not None and not isinstance(cur, kinds):
+        cur = src.parent(cur)
+    return cur
+
+
+def _check_codec(src: Source, findings: List[Finding]):
+    tl_attrs = {a for cls in iter_classes(src) for a in cls.locals_}
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call) or _ctor_name(node) is None:
+            continue
+        if src.marker(node.lineno, "threadlocal-ok") is not None:
+            continue
+        assign = _enclosing(src, node, (ast.Assign, ast.AnnAssign))
+        if assign is None:
+            continue                       # transient (arg/local expression)
+        targets = assign.targets if isinstance(assign, ast.Assign) \
+            else [assign.target]
+        for t in targets:
+            root = _root_attr(t)
+            if root is None:               # plain local: thread-confined
+                continue
+            if root not in tl_attrs:
+                fn = _enclosing(src, node, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef))
+                where = fn.name if fn is not None else "<module>"
+                findings.append(Finding(
+                    rule="codec-threadlocal", path=src.rel,
+                    line=node.lineno, obj=f"{where}.{root}",
+                    msg=(f"{_ctor_name(node)} stored on self.{root}, which "
+                         f"is not a threading.local() attribute — "
+                         f"(de)compressors are not thread-safe")))
+
+
+def _check_gather(src: Source, fn: ast.FunctionDef, qual: str,
+                  findings: List[Finding]):
+    valid_lines = [n.lineno for n in ast.walk(fn)
+                   if isinstance(n, ast.Attribute) and n.attr == "valid"]
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Attribute) and
+                node.func.attr == "gather"):
+            continue
+        recv = node.func.value
+        if isinstance(recv, ast.Name) and recv.id in _SKIP_RECV:
+            continue
+        if src.marker(node.lineno, "gen-checked") is not None:
+            continue
+        if any(ln <= node.lineno for ln in valid_lines):
+            continue
+        findings.append(Finding(
+            rule="slotref-gen", path=src.rel, line=node.lineno, obj=qual,
+            msg=("slab gather without a preceding .valid generation check "
+                 "(retired slots may hold another expert's rows)")))
+
+
+def _in_finally(src: Source, node: ast.AST) -> bool:
+    cur, prev = src.parent(node), node
+    while cur is not None:
+        if isinstance(cur, ast.Try):
+            for stmt in cur.finalbody:
+                if stmt is prev or any(n is prev for n in ast.walk(stmt)):
+                    return True
+        prev, cur = cur, src.parent(cur)
+    return False
+
+
+def _check_pins(src: Source, fn: ast.FunctionDef, qual: str,
+                findings: List[Finding]):
+    if fn.name in PIN_NAMES | UNPIN_NAMES:
+        return                             # the primitives themselves
+    pins, unpins = [], []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute):
+            if node.func.attr in PIN_NAMES:
+                pins.append(node)
+            elif node.func.attr in UNPIN_NAMES:
+                unpins.append(node)
+    if not pins:
+        return
+    if src.def_marker(fn, "pin-release") is not None or \
+            any(src.marker(p.lineno, "pin-release") is not None for p in pins):
+        return
+    if not unpins:
+        findings.append(Finding(
+            rule="pin-unpin", path=src.rel, line=pins[0].lineno, obj=qual,
+            msg="pin() without a matching unpin() "
+                "(waive with '# pin-release: <who releases>')"))
+        return
+    if any(_in_finally(src, u) for u in unpins):
+        return                             # released on every exit path
+    first_pin = min(p.lineno for p in pins)
+    last_unpin = max(u.lineno for u in unpins)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and \
+                first_pin < node.lineno < last_unpin:
+            findings.append(Finding(
+                rule="pin-unpin", path=src.rel, line=node.lineno, obj=qual,
+                msg="return between pin() and unpin() leaks the pin"))
+
+
+def check(sources: Sequence[Source]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        _check_codec(src, findings)
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            parent = src.parent(fn)
+            qual = f"{parent.name}.{fn.name}" \
+                if isinstance(parent, ast.ClassDef) else fn.name
+            _check_gather(src, fn, qual, findings)
+            _check_pins(src, fn, qual, findings)
+    return findings

@@ -1,0 +1,310 @@
+"""Shared machinery for the zipcheck passes: source loading, marker-comment
+parsing, per-class lock/annotation scanning, and lexical held-lock tracking.
+
+Annotation grammar (all line comments; see DESIGN.md "Threading model"):
+
+    self._mu = checkz.make_lock("engine._mu")      # a recognized lock
+    self._cv = checkz.make_condition(self._mu)     # alias: _cv guards == _mu
+    self._jobs = {}          # guarded-by: _cv
+    def _drained(self):      # holds-lock: _cv      (caller-holds contract)
+    self.stat += 1           # unguarded-ok: benign monotonic telemetry
+    self.x = f(...)          # single-writer: decode  (thread-domain waiver)
+    def decode_step(...):    # hot-path
+    y = np.asarray(x)        # host-sync-ok: router ids must reach host
+    for l in layers:         # loop-ok: per-layer structure, not per-expert
+    def submit(...):         # pin-release: _collect  (unpin happens there)
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+MARKER_NAMES = (
+    "guarded-by", "holds-lock", "single-writer", "unguarded-ok",
+    "host-sync-ok", "loop-ok", "pin-release", "gen-checked", "threadlocal-ok",
+)
+_MARKER_RE = re.compile(
+    r"#\s*(" + "|".join(re.escape(m) for m in MARKER_NAMES) + r")\s*:\s*([^#\n]*)")
+HOT_PATH_FLAG = "# hot-path"
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str     # pass name, e.g. "guarded-by"
+    path: str     # repo-relative path (stable across checkouts)
+    line: int     # 1-based; NOT part of the baseline ident
+    obj: str      # what the finding is about, e.g. "ZipMoEEngine._jobs"
+    msg: str
+
+    @property
+    def ident(self) -> str:
+        """Stable baseline key — deliberately excludes the line number so
+        unrelated edits above a suppressed finding don't invalidate it."""
+        return f"{self.rule} {self.path} {self.obj}: {self.msg}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.obj}: {self.msg}"
+
+
+class Source:
+    """One parsed python file plus comment-marker lookups."""
+
+    def __init__(self, path: Path, rel: str, text: Optional[str] = None):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[id(child)] = node
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents.get(id(node))
+
+    def line(self, lineno: int) -> str:
+        return self.lines[lineno - 1] if 1 <= lineno <= len(self.lines) else ""
+
+    def markers(self, lineno: int) -> Dict[str, str]:
+        return {m.group(1): m.group(2).strip()
+                for m in _MARKER_RE.finditer(self.line(lineno))}
+
+    def marker(self, lineno: int, name: str) -> Optional[str]:
+        return self.markers(lineno).get(name)
+
+    def _def_lines(self, fn: ast.AST) -> List[int]:
+        """Lines where a marker may annotate a def: the def line, the line
+        above it, and the line above the first decorator."""
+        lines = [fn.lineno, fn.lineno - 1]
+        deco = getattr(fn, "decorator_list", None)
+        if deco:
+            lines.append(deco[0].lineno - 1)
+        return lines
+
+    def def_marker(self, fn: ast.AST, name: str) -> Optional[str]:
+        for ln in self._def_lines(fn):
+            val = self.marker(ln, name)
+            if val is not None:
+                return val
+        return None
+
+    def def_flag(self, fn: ast.AST, flag: str = HOT_PATH_FLAG) -> bool:
+        return any(flag in self.line(ln) for ln in self._def_lines(fn))
+
+
+def load_sources(paths: Sequence[str]) -> List[Source]:
+    """Collect .py files under the given files/directories."""
+    out: List[Source] = []
+    root = Path.cwd()
+    for p in paths:
+        base = Path(p)
+        files = [base] if base.is_file() else sorted(base.rglob("*.py"))
+        for f in files:
+            if "__pycache__" in f.parts:
+                continue
+            try:
+                rel = str(f.resolve().relative_to(root.resolve()))
+            except ValueError:
+                rel = str(f)
+            out.append(Source(f, rel))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lock / annotation scanning per class
+# ---------------------------------------------------------------------------
+_LOCK_CTORS = {("threading", "Lock"), ("threading", "RLock"),
+               ("checkz", "make_lock")}
+_COND_CTORS = {("threading", "Condition"), ("checkz", "make_condition")}
+
+
+def _dotted(func: ast.AST) -> Optional[Tuple[str, str]]:
+    """`mod.attr` call target as a (mod, attr) pair."""
+    if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+        return (func.value.id, func.attr)
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """`self.X` -> "X" (one level only; nested chains return None)."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class ClassScan:
+    """Locks, Condition aliases, thread-local attrs, guarded-by fields, and
+    constructor-inferred attribute types for one class."""
+
+    def __init__(self, src: Source, node: ast.ClassDef):
+        self.src = src
+        self.node = node
+        self.name = node.name
+        self.methods: List[ast.FunctionDef] = [
+            n for n in node.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        self.locks: Dict[str, str] = {}        # attr -> canonical lock attr
+        self.locals_: Set[str] = set()         # threading.local() attrs
+        self.guarded: Dict[str, str] = {}      # attr -> canonical lock attr
+        self.single_writer: Dict[str, str] = {}  # attr decl waivers
+        self.attr_types: Dict[str, Set[str]] = {}  # attr -> class names
+        self._scan()
+
+    def canon(self, lock: str) -> str:
+        return self.locks.get(lock, lock)
+
+    def _scan(self):
+        assigns = []
+        for meth in self.methods:
+            for n in ast.walk(meth):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1:
+                    attr = _self_attr(n.targets[0])
+                    if attr is not None:
+                        assigns.append((attr, n))
+        # locks / thread-locals / ctor-inferred types first…
+        for attr, n in assigns:
+            if isinstance(n.value, ast.Call):
+                dot = _dotted(n.value.func)
+                if dot in _LOCK_CTORS:
+                    self.locks[attr] = attr
+                elif dot == ("threading", "local"):
+                    self.locals_.add(attr)
+                elif isinstance(n.value.func, ast.Name):
+                    self.attr_types.setdefault(attr, set()).add(n.value.func.id)
+        # …then Condition aliases (they reference an already-seen lock)…
+        for attr, n in assigns:
+            if isinstance(n.value, ast.Call) and \
+                    _dotted(n.value.func) in _COND_CTORS and n.value.args:
+                base = _self_attr(n.value.args[0])
+                if base is not None:
+                    self.locks[attr] = self.canon(base)
+        # …then field annotations, which may name either a lock or its alias.
+        for attr, n in assigns:
+            marks = self.src.markers(n.lineno)
+            if "guarded-by" in marks:
+                self.guarded[attr] = self.canon(marks["guarded-by"].strip())
+            if "single-writer" in marks:
+                self.single_writer[attr] = marks["single-writer"].strip()
+
+
+def iter_classes(src: Source) -> Iterable[ClassScan]:
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.ClassDef):
+            yield ClassScan(src, node)
+
+
+# ---------------------------------------------------------------------------
+# lexical held-lock tracking
+# ---------------------------------------------------------------------------
+@dataclass
+class Access:
+    node: ast.AST
+    held: frozenset = field(default_factory=frozenset)
+
+
+def _with_locks(node: ast.With, cls: ClassScan) -> Set[str]:
+    got: Set[str] = set()
+    for item in node.items:
+        attr = _self_attr(item.context_expr)
+        if attr is not None and attr in cls.locks:
+            got.add(cls.canon(attr))
+    return got
+
+
+def held_walk(fn: ast.FunctionDef, cls: ClassScan, src: Source) -> List[Access]:
+    """Every AST node of `fn` paired with the set of class locks lexically
+    held there.  Seeded from a ``# holds-lock:`` contract on the def."""
+    seed: Set[str] = set()
+    contract = src.def_marker(fn, "holds-lock")
+    if contract:
+        seed = {cls.canon(x.strip()) for x in contract.split(",") if x.strip()}
+    out: List[Access] = []
+
+    def visit(node: ast.AST, held: frozenset):
+        out.append(Access(node, held))
+        if isinstance(node, ast.With):
+            inner = frozenset(held | _with_locks(node, cls))
+            for item in node.items:
+                visit(item.context_expr, held)   # the acquire itself
+                if item.optional_vars:
+                    visit(item.optional_vars, inner)
+            for stmt in node.body:
+                visit(stmt, inner)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in fn.body:
+        visit(stmt, frozenset(seed))
+    return out
+
+
+def write_targets(node: ast.AST) -> List[str]:
+    """self-attributes written by an Assign/AugAssign statement (one level:
+    ``self.x = ...``, ``self.x[...] = ...``, ``self.x += ...``; nested
+    chains like ``self._tl.c`` are thread-local by construction and out of
+    scope)."""
+    targets: List[ast.AST] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        targets = [node.target]
+    out = []
+    for t in targets:
+        if isinstance(t, ast.Subscript):
+            t = t.value
+        if isinstance(t, ast.Tuple):
+            for el in t.elts:
+                a = _self_attr(el)
+                if a is not None:
+                    out.append(a)
+            continue
+        a = _self_attr(t)
+        if a is not None:
+            out.append(a)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def run_sources(sources: Sequence[Source]) -> List[Finding]:
+    from . import conventions, domains, guarded, hotpath
+    findings: List[Finding] = []
+    findings += guarded.check(sources)
+    findings += domains.check(sources)
+    findings += hotpath.check(sources)
+    findings += conventions.check(sources)
+    seen: Set[str] = set()
+    uniq = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        if f.ident not in seen:
+            seen.add(f.ident)
+            uniq.append(f)
+    return uniq
+
+
+def load_baseline(path: Path) -> List[str]:
+    if not path.exists():
+        return []
+    out = []
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            out.append(line)
+    return out
+
+
+def run_paths(paths: Sequence[str], baseline: Optional[Path] = None):
+    """Returns (new_findings, stale_baseline_idents)."""
+    sources = load_sources(paths)
+    findings = run_sources(sources)
+    allowed = set(load_baseline(baseline)) if baseline else set()
+    new = [f for f in findings if f.ident not in allowed]
+    stale = sorted(allowed - {f.ident for f in findings})
+    return new, stale

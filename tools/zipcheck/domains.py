@@ -1,0 +1,282 @@
+"""thread-domain pass: which thread domains can reach each function?
+
+Three entry domains (DESIGN.md "Threading model"):
+
+* ``io``     — the persistent I/O worker (``ZipMoEEngine._io_loop``),
+* ``dec``    — the decompress workers (``ZipMoEEngine._dec_loop``),
+* ``decode`` — the engine caller's thread: every public method/function.
+
+Reachability is propagated over a conservative call graph of core/ +
+serving/: ``self.m()`` resolves through the class (with base-class lookup),
+``Name()`` calls resolve to module-level functions and class constructors,
+and ``<recv>.m()`` resolves via (a) constructor-inferred attribute/local
+types, (b) a small documented receiver-name heuristic table (HINT_TYPES),
+(c) a unique-method fallback when exactly one scanned class defines ``m``.
+
+A self-attribute written from >= 2 domains must either be written under a
+common lock (lexical ``with`` / ``# holds-lock:``), be ``# guarded-by``
+annotated (the guarded pass then enforces it), or carry a
+``# single-writer: <domain>`` waiver on the write line or the field's
+declaration.  Nested attribute chains (``self._tl.c``) are out of scope —
+they are thread-local by construction in this codebase.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import (ClassScan, Finding, Source, held_walk, iter_classes,
+                   write_targets, _self_attr)
+
+# Receiver-name -> candidate classes, for receivers whose type the ctor
+# inference cannot see (constructor args, dict-of-caches, helper returns).
+HINT_TYPES: Dict[str, Tuple[str, ...]] = {
+    "store": ("ExpertStore",),
+    "engine": ("ZipMoEEngine",), "_engine": ("ZipMoEEngine",),
+    "eng": ("ZipMoEEngine",),
+    "caches": ("HierarchicalCache", "LiveFlatCache"),
+    "cache": ("HierarchicalCache", "LiveFlatCache"),
+    "primary_cache": ("HierarchicalCache", "LiveFlatCache"),
+    "tracker": ("FreqTracker",), "trackers": ("FreqTracker",),
+    "planner": ("LivePlanner",),
+    "slab": ("DeviceSlabCache",), "_slabs": ("DeviceSlabCache",),
+    "codec": ("ZlibCodec", "ZstdCodec"),
+    "profiler": ("GemmProfiler",),
+    "zip": ("ZipServer",),
+}
+# self.<attr>(...) callables that are function-valued attributes, not
+# methods (bound in __init__); mapped to their usual target.
+ATTR_CALLABLES: Dict[str, Tuple[Tuple[str, str], ...]] = {
+    "recover": (("ZipMoEEngine", "_recover_device"),),
+}
+# Method names too generic for the unique-method fallback (stdlib container
+# and threading vocabulary — receivers are usually dicts/deques/locks).
+COMMON_NAMES = {
+    "get", "put", "pop", "add", "append", "appendleft", "popleft", "extend",
+    "extendleft", "items", "keys", "values", "update", "clear", "close",
+    "join", "start", "wait", "notify", "notify_all", "acquire", "release",
+    "set", "sort", "remove", "insert", "copy", "read", "write", "open",
+    "index", "count", "flush", "seek", "tell", "move_to_end", "setdefault",
+    "discard", "record",
+}
+
+FuncKey = Tuple[str, str, str]          # (file rel, class name or "", name)
+
+
+@dataclass
+class FuncInfo:
+    key: FuncKey
+    node: ast.FunctionDef
+    src: Source
+    cls: Optional[ClassScan]
+    edges: Set[FuncKey] = field(default_factory=set)
+
+    @property
+    def qual(self) -> str:
+        return f"{self.key[1]}.{self.key[2]}" if self.key[1] else self.key[2]
+
+
+class _Graph:
+    def __init__(self, sources: Sequence[Source]):
+        self.sources = list(sources)
+        self.funcs: Dict[FuncKey, FuncInfo] = {}
+        self.classes: Dict[str, List[ClassScan]] = {}
+        self.bases: Dict[str, List[str]] = {}
+        self.by_method: Dict[str, List[FuncKey]] = {}
+        self.mod_funcs: Dict[str, List[FuncKey]] = {}
+        self._index()
+        for fi in self.funcs.values():
+            self._edges(fi)
+
+    # -- indexing -----------------------------------------------------------
+    def _index(self):
+        for src in self.sources:
+            for node in src.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    key = (src.rel, "", node.name)
+                    self.funcs[key] = FuncInfo(key, node, src, None)
+                    self.mod_funcs.setdefault(node.name, []).append(key)
+            for cls in iter_classes(src):
+                self.classes.setdefault(cls.name, []).append(cls)
+                self.bases[cls.name] = [
+                    b.id for b in cls.node.bases if isinstance(b, ast.Name)]
+                for meth in cls.methods:
+                    key = (src.rel, cls.name, meth.name)
+                    self.funcs[key] = FuncInfo(key, meth, src, cls)
+                    self.by_method.setdefault(meth.name, []).append(key)
+
+    def resolve_method(self, cls_name: str, meth: str,
+                       _seen: Optional[Set[str]] = None) -> Optional[FuncKey]:
+        """Lookup `meth` on `cls_name`, walking Name-bases (mixins)."""
+        seen = _seen or set()
+        if cls_name in seen:
+            return None
+        seen.add(cls_name)
+        for cls in self.classes.get(cls_name, ()):
+            key = (cls.src.rel, cls_name, meth)
+            if key in self.funcs:
+                return key
+        for base in self.bases.get(cls_name, ()):
+            got = self.resolve_method(base, meth, seen)
+            if got:
+                return got
+        return None
+
+    # -- receiver typing ----------------------------------------------------
+    def _attr_classes(self, cls: Optional[ClassScan], attr: str) -> Tuple[str, ...]:
+        if cls is not None:
+            inferred = tuple(c for c in cls.attr_types.get(attr, ())
+                             if c in self.classes)
+            if inferred:
+                return inferred
+        return HINT_TYPES.get(attr, ())
+
+    def _local_types(self, fi: FuncInfo) -> Dict[str, Tuple[str, ...]]:
+        out: Dict[str, Tuple[str, ...]] = {}
+        for n in ast.walk(fi.node):
+            if not (isinstance(n, ast.Assign) and len(n.targets) == 1 and
+                    isinstance(n.targets[0], ast.Name)):
+                continue
+            name, val = n.targets[0].id, n.value
+            if isinstance(val, ast.Subscript):
+                val = val.value
+            if isinstance(val, ast.Call) and isinstance(val.func, ast.Name) \
+                    and val.func.id in self.classes:
+                out[name] = (val.func.id,)
+            else:
+                attr = _self_attr(val)
+                if attr is not None:
+                    got = self._attr_classes(fi.cls, attr)
+                    if got:
+                        out[name] = got
+        return out
+
+    # -- edge construction --------------------------------------------------
+    def _edges(self, fi: FuncInfo):
+        local_types = self._local_types(fi)
+
+        def link_method(cands: Sequence[str], meth: str) -> bool:
+            hit = False
+            for c in cands:
+                key = self.resolve_method(c, meth)
+                if key:
+                    fi.edges.add(key)
+                    hit = True
+            return hit
+
+        for n in ast.walk(fi.node):
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            if isinstance(f, ast.Name):
+                name = f.id
+                if name in self.classes:           # constructor
+                    link_method([name], "__init__")
+                else:
+                    same = [k for k in self.mod_funcs.get(name, ())
+                            if k[0] == fi.key[0]]
+                    alts = self.mod_funcs.get(name, ())
+                    for k in (same or (alts if len(alts) == 1 else ())):
+                        fi.edges.add(k)
+                continue
+            if not isinstance(f, ast.Attribute):
+                continue
+            meth, recv = f.attr, f.value
+            if isinstance(recv, ast.Subscript):
+                recv = recv.value
+            if isinstance(recv, ast.Name) and recv.id == "self":
+                if fi.cls and self.resolve_method(fi.cls.name, meth):
+                    fi.edges.add(self.resolve_method(fi.cls.name, meth))
+                    continue
+                for cls_name, target in ATTR_CALLABLES.get(meth, ()):
+                    key = self.resolve_method(cls_name, target)
+                    if key:
+                        fi.edges.add(key)
+                continue
+            attr = _self_attr(recv)
+            if attr is not None:                    # self.<a>.m() / self.<a>[..].m()
+                if link_method(self._attr_classes(fi.cls, attr), meth):
+                    continue
+            elif isinstance(recv, ast.Name):        # v.m()
+                cands = local_types.get(recv.id) or HINT_TYPES.get(recv.id, ())
+                if link_method(cands, meth):
+                    continue
+            # unique-method fallback
+            if meth not in COMMON_NAMES and len(meth) > 3:
+                owners = {k[1] for k in self.by_method.get(meth, ())}
+                if len(owners) == 1:
+                    for k in self.by_method[meth]:
+                        fi.edges.add(k)
+
+
+def _propagate(g: _Graph) -> Dict[FuncKey, Set[str]]:
+    domains: Dict[FuncKey, Set[str]] = {k: set() for k in g.funcs}
+    todo: List[FuncKey] = []
+
+    def seed(key: FuncKey, dom: str):
+        if dom not in domains[key]:
+            domains[key].add(dom)
+            todo.append(key)
+
+    for key in g.funcs:
+        rel, cls, name = key
+        if cls == "ZipMoEEngine" and name == "_io_loop":
+            seed(key, "io")
+        if cls == "ZipMoEEngine" and name == "_dec_loop":
+            seed(key, "dec")
+        if not name.startswith("_"):
+            seed(key, "decode")
+    while todo:
+        key = todo.pop()
+        for dst in g.funcs[key].edges:
+            for dom in domains[key]:
+                seed(dst, dom)
+    return domains
+
+
+def check(sources: Sequence[Source]) -> List[Finding]:
+    scoped = [s for s in sources
+              if "/core/" in s.rel.replace("\\", "/")
+              or "/serving/" in s.rel.replace("\\", "/")]
+    g = _Graph(scoped or sources)
+    domains = _propagate(g)
+
+    # (class, attr) -> list of (func, lineno, held, write-line waiver)
+    writes: Dict[Tuple[str, str], List[Tuple[FuncInfo, int, frozenset, bool]]] = {}
+    for fi in g.funcs.values():
+        if fi.cls is None or fi.key[2] == "__init__":
+            continue
+        for acc in held_walk(fi.node, fi.cls, fi.src):
+            if not isinstance(acc.node, (ast.Assign, ast.AugAssign,
+                                         ast.AnnAssign)):
+                continue
+            for attr in write_targets(acc.node):
+                waived = fi.src.marker(
+                    acc.node.lineno, "single-writer") is not None
+                writes.setdefault((fi.cls.name, attr), []).append(
+                    (fi, acc.node.lineno, acc.held, waived))
+
+    findings: List[Finding] = []
+    for (cls_name, attr), ws in sorted(writes.items()):
+        cls = ws[0][0].cls
+        if attr in cls.guarded or attr in cls.single_writer:
+            continue
+        if any(w[3] for w in ws):          # waiver on any write line
+            continue
+        doms: Set[str] = set()
+        for fi, _, _, _ in ws:
+            doms |= domains[fi.key]
+        if len(doms) < 2:
+            continue
+        common = frozenset.intersection(*[w[2] for w in ws])
+        if common:
+            continue                       # every write under one shared lock
+        writers = sorted({fi.qual for fi, _, _, _ in ws})
+        findings.append(Finding(
+            rule="thread-domain", path=ws[0][0].src.rel, line=ws[0][1],
+            obj=f"{cls_name}.{attr}",
+            msg=(f"written from domains {{{', '.join(sorted(doms))}}} "
+                 f"with no common lock and no single-writer waiver "
+                 f"(writers: {', '.join(writers)})")))
+    return findings

@@ -1,0 +1,44 @@
+"""guarded-by pass: fields annotated ``# guarded-by: <lock>`` may only be
+read or written while the enclosing class holds that lock — lexically inside
+a ``with self.<lock>:`` (or an alias Condition built over it), or in a method
+carrying a ``# holds-lock: <lock>`` caller contract.
+
+``__init__`` is exempt (construction precedes sharing).  Individual accesses
+are waived with ``# unguarded-ok: <reason>`` on the line.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Sequence
+
+from .core import Finding, Source, held_walk, iter_classes, _self_attr
+
+
+def check(sources: Sequence[Source]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        for cls in iter_classes(src):
+            if not cls.guarded:
+                continue
+            for meth in cls.methods:
+                if meth.name == "__init__":
+                    continue
+                for acc in held_walk(meth, cls, src):
+                    attr = _self_attr(acc.node)
+                    if attr is None or attr not in cls.guarded:
+                        continue
+                    need = cls.guarded[attr]
+                    if need in acc.held:
+                        continue
+                    if src.marker(acc.node.lineno, "unguarded-ok") is not None:
+                        continue
+                    kind = ("written" if isinstance(
+                        getattr(acc.node, "ctx", None),
+                        (ast.Store, ast.Del)) else "read")
+                    findings.append(Finding(
+                        rule="guarded-by", path=src.rel,
+                        line=acc.node.lineno,
+                        obj=f"{cls.name}.{attr}",
+                        msg=(f"{kind} in {cls.name}.{meth.name} without "
+                             f"holding {need}")))
+    return findings

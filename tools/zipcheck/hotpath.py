@@ -1,0 +1,76 @@
+"""hot-path purity pass: functions marked ``# hot-path`` (on the def line,
+the line above it, or above the first decorator) must stay free of
+
+* host syncs — ``np.asarray``, ``.item()``, ``.block_until_ready()``,
+  ``float(<non-literal>)``  (waiver: ``# host-sync-ok: <reason>``),
+* ``jnp.stack`` (stacking host arrays re-uploads per step; the slab gather
+  path exists precisely to avoid it)  (waiver: ``# host-sync-ok:``),
+* Python statement loops — ``for``/``while`` iterate per expert on the
+  interpreter, the grouped-GEMM path exists to avoid that
+  (waiver: ``# loop-ok: <reason>``).
+
+Comprehensions are NOT flagged (they build index lists, not per-expert
+device work), and the check is per-function: helpers a hot function calls
+are only checked if they are themselves marked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Tuple
+
+from .core import Finding, Source
+
+_NP_NAMES = {"np", "numpy", "onp"}
+_JNP_NAMES = {"jnp"}
+
+
+def _violation(node: ast.AST) -> Optional[Tuple[str, str]]:
+    """(kind, waiver-marker) when `node` breaks hot-path purity."""
+    if isinstance(node, (ast.For, ast.While)):
+        return ("python loop (per-expert iteration)", "loop-ok")
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Name) and f.id == "float" and node.args and \
+            not isinstance(node.args[0], ast.Constant):
+        return ("float() on array (host sync)", "host-sync-ok")
+    if not isinstance(f, ast.Attribute):
+        return None
+    if isinstance(f.value, ast.Name) and f.value.id in _NP_NAMES and \
+            f.attr == "asarray":
+        return ("np.asarray (host sync)", "host-sync-ok")
+    if isinstance(f.value, ast.Name) and f.value.id in _JNP_NAMES and \
+            f.attr == "stack":
+        return ("jnp.stack (host-array restack)", "host-sync-ok")
+    if f.attr == "item" and not node.args:
+        return (".item() (host sync)", "host-sync-ok")
+    if f.attr == "block_until_ready":
+        return (".block_until_ready() (host sync)", "host-sync-ok")
+    return None
+
+
+def check(sources: Sequence[Source]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not src.def_flag(fn):
+                continue
+            qual = fn.name
+            parent = src.parent(fn)
+            if isinstance(parent, ast.ClassDef):
+                qual = f"{parent.name}.{fn.name}"
+            for node in ast.walk(fn):
+                hit = _violation(node)
+                if hit is None:
+                    continue
+                kind, waiver = hit
+                # waiver on the offending line or the line above it
+                if src.marker(node.lineno, waiver) is not None or \
+                        src.marker(node.lineno - 1, waiver) is not None:
+                    continue
+                findings.append(Finding(
+                    rule="hot-path", path=src.rel, line=node.lineno,
+                    obj=qual, msg=kind))
+    return findings
