@@ -138,6 +138,13 @@ class _LiveCacheTelemetry:
         self.transitions.clear()
         self.evictions = 0
 
+    def residency_many(self, experts) -> Dict[int, "CState"]:
+        """Bulk *pure* residency lookup: no stats, tracker, or recency
+        mutation (unlike record_access) — the attribution primitive for
+        per-request hit accounting when several requests share one step's
+        union selection."""
+        return {int(e): self.residency(int(e)) for e in experts}
+
     def bytes_occupancy(self) -> Dict[str, float]:
         """Resident bytes per pool (occupancy × per-expert residency cost);
         empty when the byte costs are unknown (simulator)."""

@@ -666,6 +666,13 @@ class ZipMoEEngine:
         residency at step start, not post-admission state."""
         return self.caches[layer].record_access(list(expert_ids))
 
+    def residency_states(self, layer: int, expert_ids) -> Dict[int, CState]:
+        """Pure residency snapshot (no stats/tracker mutation) — the
+        per-request hit attribution under a multi-tenant union selection,
+        where the shared record_access tallies each unique expert once but
+        several requests may have routed to it."""
+        return self.caches[layer].residency_many(expert_ids)
+
     def pin_experts(self, layer: int, expert_ids: Sequence[int]):
         """Pin a step's selected experts (served from prediction jobs, so
         not pinned by any submit_step) against mid-step eviction churn."""
@@ -692,6 +699,7 @@ class ZipMoEEngine:
     def configure_planner(self, mem_budget: float, *, replan_every: int = 32,
                           plan_step: float = 0.125,
                           drift_margin: float = 0.05,
+                          drift_min_accesses: int = 0,
                           profile_per_layer: bool = True,
                           initial_plan: bool = True):
         """Turn on byte-budgeted live pool planning: one global byte budget
@@ -707,7 +715,9 @@ class ZipMoEEngine:
         active = ("F",) if self.cache_mode == "flat" else \
             ("F", "C", "S", "E")
         self.planner = LivePlanner(mem_budget, step=plan_step,
-                                   drift_margin=drift_margin, active=active)
+                                   drift_margin=drift_margin,
+                                   drift_min_accesses=drift_min_accesses,
+                                   active=active)
         self.replan_every = max(0, int(replan_every))
         self._plan_steps = 0
         self._plan_probe_base = None
@@ -822,10 +832,12 @@ class ZipMoEEngine:
         old.retire()
         self._slabs[layer] = new
 
-    def _planner_probe(self) -> Optional[float]:
-        """Hit rate over the steps since the last probe — the drift signal,
-        windowed on the planner's own clock so it works at any
-        ``cache_window`` setting (None before any accesses).  The probe
+    def _planner_probe(self) -> Tuple[Optional[float], int]:
+        """(hit rate, accesses) over the steps since the last probe — the
+        drift signal, windowed on the planner's own clock so it works at
+        any ``cache_window`` setting (hit rate None before any accesses;
+        the access count lets ``should_replan`` ignore near-empty windows,
+        e.g. a multi-tenant drain phase serving one straggler).  The probe
         also refreshes each layer's recent-activity rate (EMA of accesses
         per probe interval), which is what the budget split weighs — a
         layer traffic has abandoned decays toward a zero share within a
@@ -842,11 +854,11 @@ class ZipMoEEngine:
         base = self._plan_probe_base
         self._plan_probe_base = cur
         if base is None:
-            return None
+            return None, 0
         hits = sum(cur["hits"].values()) - sum(base["hits"].values())
         misses = cur["misses"] - base["misses"]
         acc = hits + misses
-        return hits / acc if acc > 0 else None
+        return (hits / acc if acc > 0 else None), acc
 
     def plan_summary(self) -> Dict[str, object]:
         """Live §3.4 planning telemetry: per-layer plans (sizes +
@@ -900,8 +912,8 @@ class ZipMoEEngine:
         if self.planner is not None and self.replan_every:
             self._plan_steps += 1
             if self._plan_steps % self.replan_every == 0:
-                hr = self._planner_probe()
-                reason = self.planner.should_replan(hr)
+                hr, acc = self._planner_probe()
+                reason = self.planner.should_replan(hr, accesses=acc)
                 if reason:
                     self.replan(reason=reason, hit_rate=hr)
         if not self._window_every:

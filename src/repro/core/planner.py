@@ -391,12 +391,18 @@ class LivePlanner:
     ``replan_every`` steps by the engine's step clock (``note_step``)."""
 
     def __init__(self, mem_budget: float, *, step: float = 0.125,
-                 drift_margin: float = 0.05,
+                 drift_margin: float = 0.05, drift_min_accesses: int = 0,
                  active: Sequence[str] = POOL_ORDER):
         assert mem_budget >= 0, mem_budget
         self.mem_budget = float(mem_budget)
         self.step = float(step)
         self.drift_margin = float(drift_margin)
+        # probe windows with fewer accesses than this are ignored by the
+        # drift policy (neither trigger nor move the baseline): under
+        # multi-tenant request churn a window can cover a drain phase where
+        # one straggler drives the whole cache — its hit rate is noise, not
+        # rank drift.  0 keeps the historical always-evaluate behavior.
+        self.drift_min_accesses = int(drift_min_accesses)
         # pools the grid may allocate to: ("F",) collapses the search to a
         # single full-tensor pool — the flat-cache mode's byte budgeting
         self.active = tuple(active)
@@ -469,15 +475,20 @@ class LivePlanner:
         return plans
 
     # -- re-plan policy -----------------------------------------------------
-    def should_replan(self, hit_rate: Optional[float]) -> Optional[str]:
+    def should_replan(self, hit_rate: Optional[float],
+                      accesses: Optional[int] = None) -> Optional[str]:
         """Reason to re-plan now, or None.  ``hit_rate`` is the windowed
         (recent-delta) cache hit rate; the first window after a plan
         establishes the baseline, later windows trigger on degradation.
-        With neither a plan nor seeded capacities the first probe plans
+        ``accesses`` (when provided) is the window's access count —
+        windows under ``drift_min_accesses`` are skipped entirely.  With
+        neither a plan nor seeded capacities the first probe plans
         unconditionally ("initial")."""
         if not self.plans and not self._seeded:
             return "initial"
         if hit_rate is None:
+            return None
+        if accesses is not None and accesses < self.drift_min_accesses:
             return None
         if self._replan_on_stats:
             # the bootstrap plan was solved from zero observations (uniform

@@ -10,7 +10,15 @@ params.
                       scheduler, with overlapped prefetch (--no-prefetch to
                       compare against the synchronous path).
 --mode zipmoe-batch : continuous batching (BatchServer) over the compressed
-                      store end-to-end, with per-request TTFT/TPOT.
+                      store end-to-end — requests admit/retire between decode
+                      steps into a shared KV page pool, one Algorithm-1 block
+                      list per step over the union of active requests.
+                      --max-concurrency N caps the active set, --arrival-trace
+                      replays offsets (e.g. ``0,0.05,0.1``), --static-batch
+                      falls back to the legacy epoch discipline (the
+                      baseline the benchmarks compare against).  Prints
+                      TTFT/TPOT/queue-delay percentiles plus the
+                      per-request fairness table.
 
 Cache knobs (§3.4):
 --mem-budget BYTES   : byte-budgeted live pool planning — ONE global byte
@@ -97,6 +105,18 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-concurrency", type=int, default=None,
+                    help="continuous batching: max requests decoding at "
+                         "once (admit/retire between steps; default "
+                         "--batch)")
+    ap.add_argument("--arrival-trace", default=None,
+                    help="comma-separated arrival offsets in seconds, one "
+                         "per request (cycled), replayed from serve start; "
+                         "e.g. ``0,0.05,0.1``")
+    ap.add_argument("--static-batch", action="store_true",
+                    help="zipmoe-batch: use the legacy epoch discipline "
+                         "(bucket, prefill together, decode in lockstep) "
+                         "instead of continuous batching")
     ap.add_argument("--store-dir", default=None)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--bandwidth-gbps", type=float, default=None,
@@ -187,14 +207,27 @@ def main():
                    plan_step=args.plan_step)
 
     if args.mode == "zipmoe-batch":
+        arrivals = ([float(x) for x in args.arrival_trace.split(",")]
+                    if args.arrival_trace else [0.0])
         srv = BatchServer(None, cfg, max_batch=args.batch,
                           max_len=args.prompt_len + args.max_new,
-                          zip_server=zs)
-        for _ in range(args.requests):
+                          zip_server=zs,
+                          max_concurrency=args.max_concurrency,
+                          continuous=not args.static_batch)
+        for i in range(args.requests):
             srv.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
-                       args.max_new)
+                       args.max_new, arrival_s=arrivals[i % len(arrivals)])
         srv.run()
         print("metrics:", srv.metrics())
+        for rid, d in sorted(srv.request_summary().items()):
+            parts = [f"ttft={d['ttft_s']*1e3:.1f}ms"]
+            if d["tpot_s"] is not None:
+                parts.append(f"tpot={d['tpot_s']*1e3:.1f}ms")
+            if d["queue_delay_s"] is not None:
+                parts.append(f"qdelay={d['queue_delay_s']*1e3:.1f}ms")
+            if "cache_hit_rate" in d:
+                parts.append(f"hit_rate={d['cache_hit_rate']:.2f}")
+            print(f"request[{rid}]: toks={d['n_tokens']}", " ".join(parts))
         print("cache:", srv.cache_summary())
         print_sched_telemetry(zs, args)
         zs.close()

@@ -246,6 +246,43 @@ def gqa_decode(p, x, cfg, cache, pos, *, mrope_positions=None):
     return y, {"k": ck, "v": cv}
 
 
+def gqa_decode_rows(p, x, cfg, cache, positions, *, mrope_positions=None):
+    """Per-row-position GQA decode (continuous batching): each batch row is
+    an independent request at its own sequence position.
+
+    x: [B, 1, d]; cache k/v: [B, T, Hkv, D]; positions: int32 [B] (row b's
+    new-token index).  Row b attends over cache positions <= positions[b];
+    entries past a row's position mask to exactly-zero attention weight, so
+    a row's output is bit-identical whatever T is padded to and whatever
+    other rows share the batch (the continuous≡solo contract,
+    tests/test_continuous_batching.py).
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim
+    T = cache["k"].shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(p["q_norm"], q)
+        k = rms_norm_headwise(p["k_norm"], k)
+    if cfg.pos == "rope":
+        posv = positions[:, None]                              # [B, 1]
+        if cfg.mrope and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, posv, cfg.rope_theta)
+            k = apply_rope(k, posv, cfg.rope_theta)
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, positions].set(k[:, 0])
+    cv = cache["v"].at[rows, positions].set(v[:, 0])
+    mask = (jnp.arange(T)[None, :] <= positions[:, None])[:, None]  # [B,1,T]
+    out = _gqa_scores_to_out(q, ck, cv, mask)
+    y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
 # ----------------------------------------------------------------------------
 # MLA (DeepSeek-V2)
 # ----------------------------------------------------------------------------
@@ -295,22 +332,10 @@ def mla_forward(p, x, cfg, positions, *, causal=True, return_cache=False):
     return y
 
 
-def mla_decode(p, x, cfg, cache, pos, *, absorb=True):
-    """MLA decode over the latent cache.
-
-    absorb=True uses the matrix-absorption trick (score/value projections folded
-    into the query / output), avoiding re-materialising per-token K/V from the
-    latent — the standard MLA serving optimisation.
-    """
+def _mla_decode_attend(p, x, cfg, q_nope, q_rope, ckv, k_rope, mask, absorb):
+    """Shared MLA single-token attention over an updated latent cache.
+    mask: broadcastable to [B, H, 1, T] (True = attend)."""
     B = x.shape[0]
-    T = cache["ckv"].shape[1]
-    posv = jnp.full((B, 1), pos, jnp.int32)
-    q_nope, q_rope = _mla_q(p, x, cfg)                         # [B,1,H,*]
-    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
-    ckv_new, k_rope_new = _mla_kv_latent(p, x, cfg, posv)
-    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
-    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
-    mask = (jnp.arange(T)[None, None, None, :] <= pos)         # [1,1,1,T]
     scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim).astype(jnp.float32)
     wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, cfg.n_heads,
                                cfg.qk_nope_dim + cfg.v_head_dim)
@@ -337,7 +362,49 @@ def mla_decode(p, x, cfg, cache, pos, *, absorb=True):
         sc = jnp.where(mask, sc, NEG_INF)
         attn = jax.nn.softmax(sc, axis=-1)
         out = jnp.einsum("bhst,bthd->bshd", attn, v).astype(x.dtype)
-    y = out.reshape(B, 1, cfg.n_heads * cfg.v_head_dim) @ p["wo"]
+    return out.reshape(B, 1, cfg.n_heads * cfg.v_head_dim) @ p["wo"]
+
+
+def mla_decode(p, x, cfg, cache, pos, *, absorb=True):
+    """MLA decode over the latent cache.
+
+    absorb=True uses the matrix-absorption trick (score/value projections folded
+    into the query / output), avoiding re-materialising per-token K/V from the
+    latent — the standard MLA serving optimisation.
+    """
+    B = x.shape[0]
+    T = cache["ckv"].shape[1]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg)                         # [B,1,H,*]
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    ckv_new, k_rope_new = _mla_kv_latent(p, x, cfg, posv)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+    mask = (jnp.arange(T)[None, None, None, :] <= pos)         # [1,1,1,T]
+    y = _mla_decode_attend(p, x, cfg, q_nope, q_rope, ckv, k_rope, mask,
+                           absorb)
+    return y, {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_decode_rows(p, x, cfg, cache, positions, *, absorb=True):
+    """Per-row-position MLA decode (continuous batching) — the row-vector
+    analogue of :func:`mla_decode`: positions is int32 [B], row b writes
+    its latent at positions[b] and attends over entries <= positions[b]
+    (everything past it masks to exactly-zero weight; see
+    :func:`gqa_decode_rows`)."""
+    B = x.shape[0]
+    T = cache["ckv"].shape[1]
+    posv = positions[:, None]                                  # [B, 1]
+    q_nope, q_rope = _mla_q(p, x, cfg)                         # [B,1,H,*]
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    ckv_new, k_rope_new = _mla_kv_latent(p, x, cfg, posv)
+    rows = jnp.arange(B)
+    ckv = cache["ckv"].at[rows, positions].set(ckv_new[:, 0])
+    k_rope = cache["k_rope"].at[rows, positions].set(k_rope_new[:, 0])
+    mask = (jnp.arange(T)[None, :] <=
+            positions[:, None])[:, None, None]                 # [B,1,1,T]
+    y = _mla_decode_attend(p, x, cfg, q_nope, q_rope, ckv, k_rope, mask,
+                           absorb)
     return y, {"ckv": ckv, "k_rope": k_rope}
 
 

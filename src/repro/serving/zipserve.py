@@ -189,6 +189,10 @@ class ZipServer:
         # (tail admitted to the cache) lazily on the decode thread
         self._pending: Dict[int, List[Tuple[FetchHandle, frozenset]]] = {}
         self._last_ids: Dict[int, List[int]] = {}
+        # per-request cache accounting (continuous batching): rid -> counters,
+        # attributed from pure residency queries at step start so the shared
+        # union-level hit/miss telemetry is never perturbed
+        self.req_stats: Dict[int, Dict[str, int]] = {}
         self.stats: List[Dict] = []
         self.overlap_stats = {
             "pred_hits": 0, "pred_misses": 0, "sync_fetches": 0,
@@ -660,14 +664,36 @@ class ZipServer:
                 jnp.asarray(gates[r][:, None]) * out.astype(jnp.float32))
         return comb[:B].astype(x.dtype).reshape(B, 1, d)
 
-    def _zip_moe_ffn(self, lp, x, layer_idx: int):
-        """x: [B, 1, d].  Router -> engine fetch -> grouped expert FFN."""
+    def _note_request_access(self, layer_idx: int, top_i, owners):
+        """Per-request hit attribution under the multi-tenant union: row
+        ``b``'s owner is charged one access per routed expert, a hit when
+        that expert was resident at step start.  Pure ``residency``
+        queries — the shared union-level record_access stats (one tally
+        per unique expert per step) are untouched."""
+        ti = np.asarray(top_i).reshape(len(owners), self.cfg.top_k)
+        states = self.engine.residency_states(
+            layer_idx, {int(e) for e in ti.reshape(-1)})
+        for b, rid in enumerate(owners):
+            st = self.req_stats.setdefault(
+                rid, {"accesses": 0, "hits": 0, "steps": 0})
+            for e in {int(v) for v in ti[b]}:
+                st["accesses"] += 1
+                st["hits"] += int(states[e].name != "M")
+
+    def _zip_moe_ffn(self, lp, x, layer_idx: int, owners=None):
+        """x: [B, 1, d].  Router -> engine fetch -> grouped expert FFN.
+
+        ``owners`` (continuous batching) maps batch rows to request ids:
+        the selection UNION across rows feeds one Algorithm-1 submission,
+        while per-request accounting runs on pure residency queries."""
         cfg = self.cfg
         ffn = lp["ffn"]
         top_p, top_i, _ = route(ffn["router"], x, cfg)       # [B,1,k]
         ids = sorted({int(e) for e in np.asarray(top_i).reshape(-1)})
         B = x.shape[0]
         self._last_ids[layer_idx] = ids
+        if owners is not None:
+            self._note_request_access(layer_idx, top_i, owners)
         # expert-weight transfer attributed to this layer-step (background
         # reconstruction charges the step it lands in — approximate but
         # exact in the two cases that matter: 0 on a full cache hit, and
@@ -750,6 +776,88 @@ class ZipServer:
         w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]["w"]
         self.engine.note_step()       # windowed cache telemetry step clock
         return x @ w, new_caches
+
+    def decode_rows(self, tokens: jnp.ndarray, caches: list, positions,
+                    owners=None) -> Tuple[jnp.ndarray, list]:  # hot-path
+        """Multi-request decode step (continuous batching): each batch row
+        is an independent request at its own sequence position.
+
+        tokens: [B, 1]; caches: per-layer views from ``KVPagePool.gather``;
+        positions: int32 [B] (row b's new-token index); owners: optional
+        per-row request ids for per-request cache accounting.  Rows share
+        ONE forward pass — every MoE layer submits a single Algorithm-1
+        block list over the union of all rows' demand + predicted experts,
+        so the cache pools, device slabs, and live planner serve the whole
+        active set as shared multi-tenant resources.  Returns
+        (logits [B, 1, V], updated caches).
+        """
+        cfg = self.cfg
+        p = self.globals
+        positions = jnp.asarray(positions, jnp.int32)
+        x = p["embed"]["tok"][tokens]
+        if cfg.pos == "learned":
+            x = x + p["embed"]["pos"][positions][:, None]
+        new_caches = []
+        # loop-ok: per-LAYER structure (hot-path bans per-EXPERT loops;
+        # expert work inside goes through the grouped-GEMM path)
+        for idx, (lp, cache) in enumerate(zip(self.layers, caches)):
+            h = apply_norm(lp["norm1"], x, cfg)
+            if "attn" in lp:
+                if cfg.attn == "mla":
+                    y, kv = attn_lib.mla_decode_rows(lp["attn"], h, cfg,
+                                                     cache["kv"], positions)
+                else:
+                    y, kv = attn_lib.gqa_decode_rows(lp["attn"], h, cfg,
+                                                     cache["kv"], positions)
+                nc = {"kv": kv}
+            else:
+                y, sc = mamba_lib.mamba_decode(lp["mamba"], h, cfg, cache["ssm"])
+                nc = {"ssm": sc}
+            x = x + y
+            if "ffn" in lp:
+                h2 = apply_norm(lp["norm2"], x, cfg)
+                if "router" in lp["ffn"]:
+                    x = x + self._zip_moe_ffn(lp, h2, idx, owners=owners)
+                else:
+                    x = x + apply_mlp(lp["ffn"], h2, cfg)
+            new_caches.append(nc)
+        x = apply_norm(p["final_norm"], x, cfg)
+        w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]["w"]
+        for rid in owners or ():
+            self.req_stats.setdefault(
+                rid, {"accesses": 0, "hits": 0, "steps": 0})["steps"] += 1
+        self.engine.note_step()       # windowed cache telemetry step clock
+        return x @ w, new_caches
+
+    def drain_pending(self) -> int:
+        """Finish every in-flight prediction job and credit its stats —
+        called when requests retire ahead of their predictions' tails (or
+        at end of serving) so the cache pools' byte accounting and the
+        overlap telemetry are stable with no job left half-collected.
+        Blocks until the jobs complete; returns the drained io_bytes."""
+        ov = self.overlap_stats
+        io = 0
+        for layer in list(self._pending):
+            for h, _ in self._pending[layer]:
+                _, st = h.spec_result()
+                if not getattr(h, "_drained_stats", False):
+                    h._drained_stats = True
+                    ov["fetch_wall_s"] += st.wall
+                    io += st.io_bytes
+            self._pending[layer] = []
+        return io
+
+    def request_summary(self) -> Dict[int, Dict[str, float]]:
+        """Per-request cache accounting (continuous batching): expert
+        accesses, hits at step start, hit rate, and decode steps served —
+        the fairness complement to the shared-pool :meth:`cache_summary`."""
+        out = {}
+        for rid, st in sorted(self.req_stats.items()):
+            acc = st["accesses"]
+            out[rid] = {"accesses": acc, "hits": st["hits"],
+                        "hit_rate": st["hits"] / acc if acc else 0.0,
+                        "steps": st["steps"]}
+        return out
 
     # ------------------------------------------------------------------
     def generate(self, prompt_last_token: jnp.ndarray, caches, start_pos: int,
