@@ -205,6 +205,118 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
                  "profiled_p_cross_layer"):
         rows.add(f"serving_real/{name}/tpot_vs_constant_single", 0.0,
                  f"{base / max(tpots[name], 1e-12):.3f}x")
+    run_peer(rows)
+
+
+_PEER_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json, tempfile, time
+import jax, numpy as np
+from repro.configs import get_smoke_config
+from repro.core.engine import ZipMoEEngine
+from repro.core.store import build_store
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+
+cfg = get_smoke_config("qwen2-moe-a2.7b")
+params = init_params(jax.random.PRNGKey(0), cfg)
+d = tempfile.mkdtemp(prefix="zipmoe-peerbench-")
+store = build_store(params, cfg, d, k_shards=4)
+g = store.groups[(0, 0)]
+cap = 8                               # resident experts under the budget
+budget = cap * g.full_bytes           # equal per-device byte budget
+sel_sets = [sorted({(s * 3 + i) % cap for i in range(4)}) for s in range(12)]
+out = {"budget": budget}
+
+# peer_hbm: the budget holds P residents in the neighbors' HBM; every
+# step's demand set is a local miss served over the interconnect
+mesh = make_mesh((4,), ("ep",))
+eng = ZipMoEEngine(store, n_experts=cfg.n_experts, n_layers=cfg.n_layers,
+                   L=2, pool_sizes={"F": 0, "P": cap, "C": 0, "S": 0,
+                                    "E": 0},
+                   peer_mesh=mesh)
+for sel in sel_sets[:3]:
+    eng.fetch_experts(0, sel)         # warm: admit into the peer slabs
+t0 = time.perf_counter()
+for sel in sel_sets:
+    eng.fetch_experts(0, sel)
+dt = time.perf_counter() - t0
+ps = eng.peer_summary()
+out["peer_hbm"] = {
+    "us_per_step": dt / len(sel_sets) * 1e6,
+    "served": ps["served"], "fallbacks": ps["fallbacks"],
+    "collective_bytes": ps["total_bytes"],
+    "collective_ops": sum(ps["collective_ops"].values()),
+    "peer_put_bytes": ps["peer_put_bytes"],
+    "link_bw_gbps": ps["link"]["bw"] / 1e9,
+}
+eng.shutdown()
+
+# host_decode: the same byte budget spent on host-compressed residency
+# (E-chunks, the densest tier) — every demand miss pays the decode path
+e_cap = max(1, int(budget // max(1, g.e_bytes)))
+eng = ZipMoEEngine(store, n_experts=cfg.n_experts, n_layers=cfg.n_layers,
+                   L=2, pool_sizes={"F": 0, "C": 0, "S": 0,
+                                    "E": min(e_cap, cfg.n_experts)})
+for sel in sel_sets[:3]:
+    eng.fetch_experts(0, sel)
+t0 = time.perf_counter()
+for sel in sel_sets:
+    eng.fetch_experts(0, sel)
+dt = time.perf_counter() - t0
+out["host_decode"] = {
+    "us_per_step": dt / len(sel_sets) * 1e6,
+    "io_bytes": store.io_bytes,
+    "collective_bytes": 0, "collective_ops": 0,
+}
+eng.shutdown()
+print("PEER_JSON " + json.dumps(out))
+"""
+
+
+def run_peer(rows: Rows, *, timeout_s: int = 900):
+    """Peer-HBM vs host-decode demand-miss service cost at equal
+    per-device byte budget (forced 4-device CPU mesh, subprocess), with
+    collective-bytes columns from the HLO-parsed ledger.  Emits a
+    skip-annotated row when the mesh cannot be forced (e.g. no
+    subprocess support in the sandbox)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run([sys.executable, "-c", _PEER_SCRIPT], env=env,
+                              capture_output=True, text=True,
+                              timeout=timeout_s)
+        line = next(ln for ln in proc.stdout.splitlines()
+                    if ln.startswith("PEER_JSON "))
+    except (subprocess.SubprocessError, OSError, StopIteration):
+        rows.add("serving_real/peer_tier/skipped", 0.0,
+                 "could not force a multi-device mesh on this host")
+        return
+    out = json.loads(line[len("PEER_JSON "):])
+    p, h = out["peer_hbm"], out["host_decode"]
+    rows.add("serving_real/peer_tier/peer_hbm/demand_miss_step",
+             p["us_per_step"],
+             f"budget={out['budget']:.0f}B served={p['served']} "
+             f"fallbacks={p['fallbacks']} "
+             f"collective_bytes={p['collective_bytes']} "
+             f"collective_ops={p['collective_ops']} "
+             f"peer_put_bytes={p['peer_put_bytes']} "
+             f"link_bw={p['link_bw_gbps']:.2f}GB/s")
+    rows.add("serving_real/peer_tier/host_decode/demand_miss_step",
+             h["us_per_step"],
+             f"budget={out['budget']:.0f}B collective_bytes=0 "
+             f"io_bytes={h['io_bytes']}")
+    rows.add("serving_real/peer_tier/peer_vs_host", 0.0,
+             f"{h['us_per_step'] / max(p['us_per_step'], 1e-9):.2f}x "
+             "host-decode/peer-fetch step-time ratio (CPU-emulated link; "
+             "byte columns are the transferable result)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Compression-aware hierarchical cache (§3.4).
 
-Pools in hierarchy order F ≺ C ≺ S ≺ E:
+The hierarchy is an explicit, ordered tier stack (``core/tiers.py``); the
+default stack reproduces the paper's pools in order F ≺ C ≺ S ≺ E:
   F : fully reconstructed tensors          (bytes/expert: 2·n_elems)
   C : compressed E-chunks + SM-chunks      (sm + e_compressed)
   S : SM-chunks only                        (sm)
@@ -34,9 +35,13 @@ from typing import Dict, Optional, Sequence, Set, Tuple
 
 from repro.core import checkz
 from repro.core.states import CState
+from repro.core.tiers import DEFAULT_STACK, TierStack
 from repro.core.workload import FreqTracker
 
-POOL_ORDER = ("F", "C", "S", "E")
+# historical alias: the default (paper) tier order.  The live caches now
+# carry their own ``self.order`` derived from an explicit TierStack; this
+# constant remains for the simulator and for callers of the 4-tier default.
+POOL_ORDER = DEFAULT_STACK.order
 
 
 def pool_summary(mode: str, hits, misses: int, occupancy, capacity,
@@ -151,7 +156,7 @@ class _LiveCacheTelemetry:
         if self.cost_bytes is None:
             return {}
         return {p: len(self.pools[p]) * float(self.cost_bytes.get(p, 0.0))
-                for p in POOL_ORDER}
+                for p in self.order}
 
     def bytes_capacity(self) -> Dict[str, float]:
         """Byte capacity per pool: the planner's cap_bytes when planned,
@@ -161,7 +166,7 @@ class _LiveCacheTelemetry:
         if self.cost_bytes is None:
             return {}
         return {p: self.cap.get(p, 0) * float(self.cost_bytes.get(p, 0.0))
-                for p in POOL_ORDER}
+                for p in self.order}
 
 
 class HierarchicalCache(_LiveCacheTelemetry):
@@ -170,11 +175,15 @@ class HierarchicalCache(_LiveCacheTelemetry):
     mode = "hier"
 
     def __init__(self, capacities: Dict[str, int], tracker: FreqTracker,
-                 delta: int = 1):
-        self.cap = {p: int(capacities.get(p, 0)) for p in POOL_ORDER}
+                 delta: int = 1, stack: Optional[TierStack] = None):
+        # the residency hierarchy is an explicit ordered TierStack; the
+        # default reproduces the paper's F ≺ C ≺ S ≺ E exactly
+        self.stack = stack if stack is not None else DEFAULT_STACK
+        self.order = self.stack.order
+        self.cap = {p: int(capacities.get(p, 0)) for p in self.order}
         self.tracker = tracker
         self.delta = delta
-        self.pools: Dict[str, Dict[int, PoolEntry]] = {p: {} for p in POOL_ORDER}
+        self.pools: Dict[str, Dict[int, PoolEntry]] = {p: {} for p in self.order}
         self._init_telemetry()
         # optional live-engine hook: (payload, target_pool) -> payload|None.
         # Downgrades a demoted resident's payload to the bytes the target
@@ -186,15 +195,19 @@ class HierarchicalCache(_LiveCacheTelemetry):
 
     # -- state queries --------------------------------------------------------
     def residency(self, expert: int) -> CState:
-        in_f = expert in self.pools["F"]
-        in_c = expert in self.pools["C"]
-        has_e = in_c or expert in self.pools["E"]
-        has_sm = in_c or expert in self.pools["S"]
-        return residency_state(in_f, has_e, has_sm)
+        # full-payload tiers (F, and P when stacked) win in stack order;
+        # partial residency then combines the component pools as before
+        for t in self.stack.tiers:
+            if t.payload == "full" and expert in self.pools[t.name]:
+                return t.state
+        in_c = expert in self.pools.get("C", {})
+        has_e = in_c or expert in self.pools.get("E", {})
+        has_sm = in_c or expert in self.pools.get("S", {})
+        return residency_state(False, has_e, has_sm)
 
     def thresholds(self) -> Dict[str, int]:
         t, cum = {}, 0
-        for p in POOL_ORDER:
+        for p in self.order:
             cum += self.cap[p]
             t[p] = cum + self.delta
         return t
@@ -223,12 +236,12 @@ class HierarchicalCache(_LiveCacheTelemetry):
         {residents ∪ incoming} loses and cascades down — the δ-tolerance
         margin can therefore never churn a hot expert out of the cache
         entirely, and a pinned (in-flight) resident never loses its slot."""
-        if depth > len(POOL_ORDER) + 2:
+        if depth > len(self.order) + 2:
             return None
         taus = self.thresholds()
         r = self.tracker.rank(expert)
         started = False
-        for p in POOL_ORDER:
+        for p in self.order:
             if p == start_pool:
                 started = True
             if not started or self.cap[p] <= 0 or r >= taus[p]:
@@ -246,11 +259,11 @@ class HierarchicalCache(_LiveCacheTelemetry):
             if self.tracker.counts[victim] < self.tracker.counts[expert]:
                 ent = self.pools[p].pop(victim)
                 self.pools[p][expert] = PoolEntry(expert, pl)
-                # demote the displaced resident (with its bytes) down a pool
-                nxt = POOL_ORDER.index(p) + 1
+                # demote the displaced resident (with its bytes) down a tier
+                nxt = self.order.index(p) + 1
                 placed = None
-                if nxt < len(POOL_ORDER):
-                    placed = self._place(victim, POOL_ORDER[nxt], ent.payload,
+                if nxt < len(self.order):
+                    placed = self._place(victim, self.order[nxt], ent.payload,
                                          depth + 1)
                 self.transitions[(p, placed or "M")] += 1
                 if placed is None:
@@ -266,12 +279,12 @@ class HierarchicalCache(_LiveCacheTelemetry):
         target = self.target_pool(expert)
         # drop from any other pool (state change / re-placement)
         prev_pool, prev_ent = None, None
-        for p in POOL_ORDER:
+        for p in self.order:
             if expert in self.pools[p]:
                 prev_pool, prev_ent = p, self.pools[p].pop(expert)
         if expert in self.pinned and prev_pool is not None and (
                 target is None
-                or POOL_ORDER.index(target) > POOL_ORDER.index(prev_pool)):
+                or self.order.index(target) > self.order.index(prev_pool)):
             # a pinned (mid-step) resident whose rank would now dispatch it
             # DOWN (or out) keeps its pool until unpinned: its current
             # payload may be backing in-flight weights — in device_cache
@@ -318,11 +331,11 @@ class HierarchicalCache(_LiveCacheTelemetry):
         residents' next admission (``_place`` enforces the new caps from
         now on)."""
         self._guard.check()
-        self.cap = {p: int(capacities.get(p, 0)) for p in POOL_ORDER}
+        self.cap = {p: int(capacities.get(p, 0)) for p in self.order}
         if cap_bytes is not None:
             self.cap_bytes = {p: float(cap_bytes.get(p, 0.0))
-                              for p in POOL_ORDER}
-        for i, p in enumerate(POOL_ORDER):
+                              for p in self.order}
+        for i, p in enumerate(self.order):
             pool = self.pools[p]
             while len(pool) > self.cap[p]:
                 cand = [e for e in pool if e not in self.pinned]
@@ -331,8 +344,8 @@ class HierarchicalCache(_LiveCacheTelemetry):
                 victim = self.tracker.least_frequent(cand)
                 ent = pool.pop(victim)
                 placed = None
-                if i + 1 < len(POOL_ORDER):
-                    placed = self._place(victim, POOL_ORDER[i + 1],
+                if i + 1 < len(self.order):
+                    placed = self._place(victim, self.order[i + 1],
                                          ent.payload)
                 self.transitions[(p, placed or "M")] += 1
                 if placed is None:
@@ -353,7 +366,7 @@ class HierarchicalCache(_LiveCacheTelemetry):
         return out
 
     def occupancy(self) -> Dict[str, int]:
-        return {p: len(self.pools[p]) for p in POOL_ORDER}
+        return {p: len(self.pools[p]) for p in self.order}
 
     def summary(self) -> Dict[str, object]:
         """Per-pool hit rates + residency-transition counts (§3.4 telemetry)."""
@@ -455,16 +468,22 @@ class LiveFlatCache(_LiveCacheTelemetry):
     def __init__(self, capacity: int, tracker: FreqTracker,
                  policy: str = "lru"):
         assert policy in ("fifo", "lru", "marking", "lfu")
+        # the flat baseline reports the default stack's telemetry schema
+        # (only F is ever populated) so the flat≡hier harness can diff it
+        self.stack = DEFAULT_STACK
+        self.order = self.stack.order
         self.capacity = int(capacity)
-        self.cap = {"F": self.capacity, "C": 0, "S": 0, "E": 0}
+        self.cap = {p: 0 for p in self.order}
+        self.cap["F"] = self.capacity
         self.mode = f"flat-{policy}"
         self.policy = policy
         self.tracker = tracker
         self.entries: "collections.OrderedDict[int, PoolEntry]" = \
             collections.OrderedDict()
         # engine iterates .pools in hierarchy order; only F is ever populated
-        self.pools: Dict[str, Dict[int, PoolEntry]] = {
-            "F": self.entries, "C": {}, "S": {}, "E": {}}
+        self.pools: Dict[str, Dict[int, PoolEntry]] = \
+            {p: {} for p in self.order}
+        self.pools["F"] = self.entries
         self.marks: Set[int] = set()
         self._init_telemetry()
         import random
@@ -533,16 +552,19 @@ class LiveFlatCache(_LiveCacheTelemetry):
         admission.  Grow is churn-free."""
         self._guard.check()
         self.capacity = int(capacity)
-        self.cap = {"F": self.capacity, "C": 0, "S": 0, "E": 0}
+        self.cap = {p: 0 for p in self.order}
+        self.cap["F"] = self.capacity
         if cap_bytes is not None:
             self.cap_bytes = {p: float(cap_bytes.get(p, 0.0))
-                              for p in POOL_ORDER}
+                              for p in self.order}
         while len(self.entries) > self.capacity:
             if not self._evict():
                 break                  # everything pinned: defer the trim
 
     def occupancy(self) -> Dict[str, int]:
-        return {"F": len(self.entries), "C": 0, "S": 0, "E": 0}
+        occ = {p: 0 for p in self.order}
+        occ["F"] = len(self.entries)
+        return occ
 
     def summary(self) -> Dict[str, object]:
         return pool_summary(self.mode, self.hits, self.misses,

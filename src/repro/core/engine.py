@@ -81,9 +81,10 @@ import numpy as np
 from repro.core import bitfield, checkz
 from repro.core.cache import HierarchicalCache, LiveFlatCache, pool_summary
 from repro.core.scheduler import build_blocks
-from repro.core.slab import DeviceSlabCache, SlotRef
+from repro.core.slab import DeviceSlabCache, PeerRef, PeerSlabMesh, SlotRef
 from repro.core.states import CState, Task
 from repro.core.store import ExpertStore
+from repro.core.tiers import DEFAULT_STACK, PEER_STACK
 from repro.core.workload import FreqTracker
 
 
@@ -101,6 +102,29 @@ class FetchStats:
     io_bytes: int = 0
     dec_ops: int = 0
     hits: Dict[str, int] = field(default_factory=dict)
+
+
+class _PeerContext:
+    """Shared state of the peer-HBM (P) tier: the 'ep' device mesh, the
+    per-layer sharded slabs, the collective-traffic ledger, and the profiled
+    link-cost model.  Built only when the engine is given a multi-device
+    mesh — a 1-device configuration carries no peer context at all and runs
+    the exact pre-peer stack."""
+
+    def __init__(self, mesh):
+        from repro.core.profiles import LinkProfiler
+        from repro.distributed.collectives import CollectiveLedger
+        self.mesh = mesh
+        self.n_dev = int(dict(mesh.shape)["ep"])
+        self.ledger = CollectiveLedger()
+        self.link = LinkProfiler()
+        # single-writer: decode thread (lazy slab builds + plan application)
+        self.slabs: Dict[int, Optional[PeerSlabMesh]] = {}
+        # single-writer: decode thread (per-device planned slot grants)
+        self.dev_caps: Dict[int, List[int]] = {}
+        # single-writer: decode thread (submit-time serve/fallback tallies)
+        self.served = 0        # P-resident experts materialised via the link
+        self.fallbacks = 0     # P-resident but priced/failed to local decode
 
 
 class _FetchJob:
@@ -277,16 +301,27 @@ class ZipMoEEngine:
                  recover_fn: Optional[Callable] = None, delta: int = 1,
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
                  flat_policy: str = "lru", freq_decay: float = 1.0,
-                 device_cache: bool = False):
+                 device_cache: bool = False, peer_mesh=None):
         assert cache_mode in ("hier", "flat")
         assert 0.0 < freq_decay <= 1.0, freq_decay
         assert not (device_cache and recover_fn is not None), \
             "device_cache owns recovery (device splice + slab residency)"
         self.store = store
         self.L = L
+        self.n_experts = int(n_experts)
         self.cache_mode = cache_mode
         self.freq_decay = freq_decay
         self.device_cache = device_cache
+        # peer-HBM tier (P): compressed store + expert slabs sharded over a
+        # device mesh ('ep' axis).  A 1-device mesh is pointless as a peer
+        # ring, so it degenerates to no peer context — the stack, caches,
+        # and telemetry are then EXACTLY the default configuration.
+        self.peer: Optional[_PeerContext] = None
+        if peer_mesh is not None and int(dict(peer_mesh.shape).get("ep", 1)) > 1:
+            assert cache_mode == "hier", \
+                "the peer tier is a pool of the hierarchical stack"
+            self.peer = _PeerContext(peer_mesh)
+        self.stack = PEER_STACK if self.peer is not None else DEFAULT_STACK
         # h2d/splice telemetry (device mode uploads the two u8 planes once
         # per reconstruction; the serving layer also charges host-array
         # GEMM staging here so "zero weight bytes moved" is provable).
@@ -306,6 +341,12 @@ class ZipMoEEngine:
                 lambda e, sm, shape: bitfield.reconstruct_np(
                     e, np.frombuffer(sm, np.uint8), shape))
         sizes = pool_sizes or {"F": 4, "C": 4, "S": 8, "E": 8}
+        if self.peer is not None and "P" not in sizes:
+            # default the peer pool to the whole expert set: the mesh's
+            # aggregate HBM can hold every shard, and the per-device planner
+            # (plan_peer_shards) narrows the logical grants under a budget
+            sizes = dict(sizes)
+            sizes["P"] = self.n_experts
         self.caches: Dict[int, object] = {}
         self.trackers: Dict[int, FreqTracker] = {}
         # windowed cache telemetry (§3.4): note_step() closes a per-N-steps
@@ -322,7 +363,8 @@ class ZipMoEEngine:
                     else sum(sizes.values())
                 self.caches[l] = LiveFlatCache(cap, tr, policy=flat_policy)
             else:
-                self.caches[l] = HierarchicalCache(sizes, tr, delta=delta)
+                self.caches[l] = HierarchicalCache(sizes, tr, delta=delta,
+                                                   stack=self.stack)
                 self.caches[l].demote_payload = self._demote_payload
         # profiled constants (rough; refreshed by profile());
         # per-layer u/c/ρ overlay the global probe (profile_layers())
@@ -451,15 +493,17 @@ class ZipMoEEngine:
 
     def _bytes_per_state(self, layer: int) -> Optional[Dict[str, float]]:
         """Per-expert residency cost (bytes) per pool, from the layer's
-        real tensor shapes and codec state sizes: F = reconstructed bf16,
-        S = raw SM planes, E = compressed E-chunks, C = S + E."""
+        real tensor shapes and codec state sizes via each tier's declared
+        payload kind: F/P = reconstructed bf16, S = raw SM planes,
+        E = compressed E-chunks, C = S + E."""
         expert = min((e for (l, e) in self.store.groups if l == layer),
                      default=None)
         if expert is None:
             return None
         g = self.store.groups[(layer, expert)]
-        sm, e, full = float(g.sm_bytes), float(g.e_bytes), float(g.full_bytes)
-        return {"F": full, "C": sm + e, "S": sm, "E": e}
+        return self.stack.bytes_per_state({
+            "full": float(g.full_bytes), "sm": float(g.sm_bytes),
+            "e": float(g.e_bytes)})
 
     def plan_consts(self, layer: int):
         """The layer's :class:`~repro.core.planner.PlanConsts`, from the
@@ -472,8 +516,12 @@ class ZipMoEEngine:
         g = self.store.groups[(layer, expert)]
         K = max(1, len(g.tensors[0].e_sizes))
         u, c, rho = self._layer_costs(layer)
+        # profiled per-expert peer-fetch cost: the third Algorithm-3
+        # bottleneck (0 without a mesh — the term vanishes exactly)
+        peer = self.peer.link.p_time(int(g.full_bytes)) \
+            if self.peer is not None else 0.0
         return PlanConsts(u=u, v=rho * u / K, c=c, L=self.L, K=K,
-                          n_tensors=len(g.tensors))
+                          n_tensors=len(g.tensors), peer=peer)
 
     # ------------------------------------------------------------------
     # device-resident slabs (device_cache mode)
@@ -581,11 +629,181 @@ class ZipMoEEngine:
             self.h2d_bytes += arr.nbytes
         return jnp.asarray(arr)
 
+    # ------------------------------------------------------------------
+    # peer-HBM tier (P): sharded slabs + collective demand fetches
+    # ------------------------------------------------------------------
+    def _peer_owner(self, expert: int) -> int:
+        """EP owner device of `expert` (contiguous blocks, matching the
+        store/param sharding rule; balanced fallback off-divisibility)."""
+        from repro.distributed.sharding import ep_ok, ep_owner
+        n, d = self.n_experts, self.peer.n_dev
+        if ep_ok(n, d):
+            return ep_owner(expert, n, d)
+        return min(d - 1, int(expert) * d // max(1, n))
+
+    def _peer_slab(self, layer: int) -> Optional[PeerSlabMesh]:
+        """The layer's peer slab mesh (lazily built).  Physical row size is
+        the device's whole expert shard — the mesh's aggregate HBM is the P
+        tier's backing store — while the *logical* per-device slot grants
+        (``set_dev_caps``) carry the planned budget."""
+        if self.peer is None:
+            return None
+        slabs = self.peer.slabs
+        if layer not in slabs:
+            cap = self.caches[layer].cap.get("P", 0)
+            expert = min((e for (l, e) in self.store.groups if l == layer),
+                         default=None)
+            if cap <= 0 or expert is None:
+                slabs[layer] = None
+            else:
+                shapes = {t.name: tuple(t.shape) for t in
+                          self.store.groups[(layer, expert)].tensors}
+                blk = -(-self.n_experts // self.peer.n_dev)
+                slab = PeerSlabMesh(layer, shapes, blk, self.peer.mesh,
+                                    ledger=self.peer.ledger,
+                                    link=self.peer.link)
+                slab.set_dev_caps(self.peer.dev_caps.get(layer)
+                                  or self._even_dev_caps(cap))
+                slabs[layer] = slab
+        return slabs[layer]
+
+    def _even_dev_caps(self, cap: int) -> List[int]:
+        """Unplanned default: split the P pool's expert-count capacity
+        evenly over the mesh (low device ids take the remainder)."""
+        d = self.peer.n_dev
+        base, rem = divmod(max(0, int(cap)), d)
+        return [min(base + (1 if i < rem else 0),
+                    -(-self.n_experts // d)) for i in range(d)]
+
+    def _peer_fetch(self, layer: int, expert: int) -> Optional["ExpertPayload"]:
+        """Collective-fetch a peer-slab resident to the compute device and
+        wrap it as an F-like payload (full device tensors)."""
+        slab = self._peer_slab(layer)
+        if slab is None or expert not in slab:
+            return None
+        got = slab.fetch(expert)
+        if got is None:
+            return None
+        g = self.store.groups[(layer, expert)]
+        return ExpertPayload(full={tidx: got[tm.name]
+                                   for tidx, tm in enumerate(g.tensors)})
+
+    def _serve_peer_residents(self, job: "_FetchJob"):
+        """Materialise P-resident experts at submit time (decode thread).
+
+        A demand/speculative expert whose bytes live in a peer device's
+        slab row is priced link-fetch vs local reconstruction from the
+        profiled link model; when the link wins, the collective fetch runs
+        synchronously here and the job seeds the fetched tensors exactly
+        like an F hit — the host pipeline (I/O thread, decompress workers,
+        host→device staging) never sees the expert.  P-pool entries still
+        host-array-backed (admitted but not yet uploaded, or over their
+        row's planned grant) serve their arrays in place at zero link cost.
+        """
+        for (l, e) in job.expert_keys:
+            ent = self.caches[l].pools.get("P", {}).get(e)
+            if ent is None:
+                continue
+            pl = ent.payload
+            if isinstance(pl, ExpertPayload) and pl.full and \
+                    not any(isinstance(v, PeerRef)
+                            for v in pl.full.values()) and \
+                    self._full_payload_usable(pl):
+                job.payloads[(l, e)] = pl
+                self.peer.served += 1
+                continue
+            g = self.store.groups.get((l, e))
+            if g is None:
+                continue
+            u_l, c_l, rho_l = self._layer_costs(l)
+            K = max(1, len(g.tensors[0].e_sizes))
+            # full-miss local estimate (P sits above C, so a P resident
+            # holds no host bytes): SM + E reads, then K decompressions
+            # over min(L, K) workers, per tensor
+            local = len(g.tensors) * (u_l * (1.0 + rho_l)
+                                      + c_l * K / max(1, min(self.L, K)))
+            if self.peer.link.p_time(int(g.full_bytes)) >= local:
+                self.peer.fallbacks += 1
+                continue
+            got = self._peer_fetch(l, e)
+            if got is None:
+                self.peer.fallbacks += 1
+                continue
+            job.payloads[(l, e)] = got
+            self.peer.served += 1
+
+    def _reconcile_peer(self, layer: int):
+        """Sync the layer's peer slab with its P pool (decode thread, after
+        a collect phase's admissions) — the peer analogue of
+        :meth:`_reconcile_slab`: slots of experts that left P are freed
+        (generation bump — outstanding PeerRefs turn stale); already
+        slab-resident arrivals just swap their payload back to refs (expert
+        weights are immutable, so no re-upload); new residents upload into
+        their EP owner's row (charged to the ledger's ``peer_put_bytes``).
+        A row out of planned slots keeps the resident host-array-backed —
+        still servable in place by :meth:`_serve_peer_residents`."""
+        slab = self._peer_slab(layer)
+        if slab is None:
+            return
+        ppool = self.caches[layer].pools["P"]
+        for e in [e for e in slab.slot_of if e not in ppool]:
+            slab.free(e)
+        names = None
+        for e, ent in ppool.items():
+            pl = ent.payload
+            if not isinstance(pl, ExpertPayload) or not pl.full:
+                continue
+            if all(isinstance(v, PeerRef) and v.valid
+                   for v in pl.full.values()):
+                continue               # already slab-resident via refs
+            if names is None:
+                names = [t.name for t in
+                         self.store.groups[(layer, e)].tensors]
+            if e in slab.slot_of:
+                refs = slab.refs(e)    # immutable weights: no re-upload
+                pl.full = {tidx: refs[names[tidx]] for tidx in pl.full}
+                continue
+            if any(isinstance(v, PeerRef) for v in pl.full.values()):
+                # stale refs, bytes gone: the entry self-heals on its next
+                # access (fetch misses the slab -> local decode -> re-admit)
+                continue
+            dev = self._peer_owner(e)
+            if not slab.has_free(dev):
+                continue               # over the row's planned grant
+            tensors, usable = {}, True
+            for tidx, v in pl.full.items():
+                if isinstance(v, SlotRef):    # F->P demotion in device mode
+                    if not v.valid:
+                        usable = False
+                        break
+                    v = v.read()
+                tensors[names[tidx]] = v
+            if not usable:
+                continue
+            refs = slab.put(e, dev, tensors)
+            pl.full = {tidx: refs[names[tidx]] for tidx in pl.full}
+
+    def peer_summary(self) -> Dict[str, object]:
+        """Peer-tier telemetry: the collective-traffic ledger, the profiled
+        link model, submit-time serve/fallback decisions, and per-layer
+        slab occupancy.  ``{"enabled": False}`` without a mesh."""
+        if self.peer is None:
+            return {"enabled": False}
+        out: Dict[str, object] = {
+            "enabled": True, "n_dev": self.peer.n_dev,
+            "served": self.peer.served, "fallbacks": self.peer.fallbacks}
+        out.update(self.peer.ledger.summary())
+        out["link"] = self.peer.link.summary()
+        out["slabs"] = {l: s.summary() for l, s in
+                        sorted(self.peer.slabs.items()) if s is not None}
+        return out
+
     @staticmethod
     def _full_payload_usable(pl: "ExpertPayload") -> bool:
-        """No stale SlotRefs: a freed/reused slot must never be re-admitted
-        as if it still held the old expert's weights."""
-        return all((not isinstance(v, SlotRef)) or v.valid
+        """No stale refs: a freed/reused slot — device slab or peer row —
+        must never be re-admitted as if it still held the old expert's
+        weights."""
+        return all((not isinstance(v, (SlotRef, PeerRef))) or v.valid
                    for v in pl.full.values())
 
     @staticmethod
@@ -602,6 +820,9 @@ class ZipMoEEngine:
             if not arr.valid:
                 return None
             return bitfield.decompose_np(arr.read_np())[1].tobytes()
+        if isinstance(arr, PeerRef):
+            # peer-row bytes are not host bytes: no SM plane to re-derive
+            return None
         try:                                   # device (jax) array
             return bitfield.decompose_np(np.asarray(arr))[1].tobytes()
         except Exception:                      # pragma: no cover
@@ -619,6 +840,16 @@ class ZipMoEEngine:
             return None
         if pool == "F":
             if not payload.full or not self._full_payload_usable(payload):
+                return None
+            if any(isinstance(v, PeerRef) for v in payload.full.values()):
+                # peer-row bytes can't back F without a link fetch; the
+                # entry cascades to P and is promoted on its next demand
+                # hit, whose fetch materialises compute-device arrays
+                return None
+            return ExpertPayload(full=dict(payload.full))
+        if pool == "P":
+            if self.peer is None or not payload.full or \
+                    not self._full_payload_usable(payload):
                 return None
             return ExpertPayload(full=dict(payload.full))
         has_sm = bool(payload.sm)
@@ -644,9 +875,14 @@ class ZipMoEEngine:
         return None
 
     def _payload(self, layer: int, expert: int) -> Optional[ExpertPayload]:
+        # peer tiers are skipped: their payloads carry PeerRefs (bytes in a
+        # neighbor device's HBM), which the host reconstruction pipeline
+        # can't consume — _serve_peer_residents intercepts those instead
         cache = self.caches[layer]
-        for pool in ("F", "C", "S", "E"):
-            ent = cache.pools[pool].get(expert)
+        for t in self.stack.tiers:
+            if t.peer:
+                continue
+            ent = cache.pools[t.name].get(expert)
             if ent is not None:
                 if ent.payload is None:
                     ent.payload = ExpertPayload()
@@ -701,7 +937,9 @@ class ZipMoEEngine:
                           drift_margin: float = 0.05,
                           drift_min_accesses: int = 0,
                           profile_per_layer: bool = True,
-                          initial_plan: bool = True):
+                          initial_plan: bool = True,
+                          budget_split: str = "proportional",
+                          peer_budget: Optional[float] = None):
         """Turn on byte-budgeted live pool planning: one global byte budget
         for ALL layers' pools, split by observed layer activity and solved
         per layer by the §3.4 planner on that layer's live rank statistics,
@@ -710,14 +948,25 @@ class ZipMoEEngine:
         calls to :meth:`note_step` the windowed hit rate is probed and a
         drift (see ``LivePlanner.should_replan``) triggers a re-plan.
         ``initial_plan=False`` keeps the constructor capacities (e.g. an
-        explicit ``pool_sizes`` override) until the first drift re-plan."""
+        explicit ``pool_sizes`` override) until the first drift re-plan.
+
+        ``budget_split="waterfill"`` grants the cross-layer budget by
+        marginal expected-makespan gain per byte instead of proportionally
+        to activity (see ``LivePlanner._waterfill_budgets``).  With a peer
+        mesh, ``peer_budget`` is each device's own HBM byte budget for its
+        slab row (default: ``mem_budget``) — the P tier's memory is the
+        mesh's, not the host's, so it is budgeted separately and solved per
+        device over that shard's rank statistics (``plan_peer_shards``)."""
         from repro.core.planner import LivePlanner
         active = ("F",) if self.cache_mode == "flat" else \
             ("F", "C", "S", "E")
         self.planner = LivePlanner(mem_budget, step=plan_step,
                                    drift_margin=drift_margin,
                                    drift_min_accesses=drift_min_accesses,
-                                   active=active)
+                                   active=active, order=self.stack.order,
+                                   budget_split=budget_split)
+        self._peer_budget = float(mem_budget if peer_budget is None
+                                  else peer_budget)
         self.replan_every = max(0, int(replan_every))
         self._plan_steps = 0
         self._plan_probe_base = None
@@ -767,6 +1016,8 @@ class ZipMoEEngine:
                        for l in layers}
         self._plan_access_base = acc
         plans = self.planner.plan(stats, bps, consts, weights=weights)
+        if self.peer is not None:
+            self._plan_peer(plans, bps, consts, weights)
         self.apply_plans(plans)
         self.planner.note_plan(self._plan_steps, reason, hit_rate)
         return plans
@@ -790,6 +1041,8 @@ class ZipMoEEngine:
                 if bps and bps["F"] > 0:
                     slab_cap = int(plan.cap_bytes.get("F", 0.0) // bps["F"])
                 self._apply_slab_plan(l, min(slab_cap, self.trackers[l].n))
+            if self.peer is not None:
+                self._apply_peer_plan(l)
 
     def _apply_slab_plan(self, layer: int, new_cap: int):
         """Grow/shrink/free one layer's device slab to the byte-planned
@@ -831,6 +1084,62 @@ class ZipMoEEngine:
             pl.full = {tidx: refs[names[tidx]] for tidx in pl.full}
         old.retire()
         self._slabs[layer] = new
+
+    def _peer_shard_stats(self, layer: int) -> List[np.ndarray]:
+        """Per-device rank statistics: each EP shard's per-expert inclusion
+        probabilities (the layer tracker's mass restricted to the shard's
+        ids, rank-sorted) — what ``plan_peer_shards`` solves over."""
+        tr = self.trackers[layer]
+        n, d = self.n_experts, self.peer.n_dev
+        k = int(round(tr.k_ema)) if tr.n_records else 1
+        k = max(1, min(k, n - 1 if n > 1 else 1))
+        total = tr.counts.sum()
+        per = np.full(n, k / n) if total <= 0 else tr.counts * (k / total)
+        ids_by_dev: List[List[int]] = [[] for _ in range(d)]
+        for e in range(n):
+            ids_by_dev[self._peer_owner(e)].append(e)
+        return [np.sort(per[ids])[::-1] if ids else np.zeros(0)
+                for ids in ids_by_dev]
+
+    def _plan_peer(self, plans, bps, consts, weights: Dict[int, float]):
+        """Per-device §3.4 peer-row budgeting: each device's slab row gets
+        the layer's activity share of the per-device HBM budget, and the
+        solver runs over THAT shard's rank statistics (plan_peer_shards) —
+        a device owning the hot shard earns more slots.  The layer's P size
+        is the sum of its shard grants; cap_bytes follows at the
+        full-tensor cost.  Runs between planner.plan and apply_plans so
+        cache resize + slab grants land atomically with the host plan."""
+        from repro.core.planner import plan_peer_shards
+        total_w = sum(max(0.0, w) for w in weights.values())
+        dev_budget = getattr(self, "_peer_budget", self.planner.mem_budget)
+        for l, plan in plans.items():
+            full = (bps.get(l) or {}).get("F", 0.0)
+            if full <= 0:
+                continue
+            share = (max(0.0, weights.get(l, 0.0)) / total_w) if total_w \
+                else 1.0 / max(1, len(plans))
+            grants = plan_peer_shards(self._peer_shard_stats(l),
+                                      dev_budget * share, full, consts[l])
+            self.peer.dev_caps[l] = grants
+            plan.sizes["P"] = int(sum(grants))
+            plan.cap_bytes["P"] = float(sum(grants)) * full
+
+    def _apply_peer_plan(self, layer: int):
+        """Push the layer's planned per-device slot grants into its peer
+        slab.  Physical rows never move — grants only gate admissions
+        (``has_free``), and the cache resize above already demoted any
+        over-plan P residents, whose slots the next reconcile frees."""
+        caps = self.peer.dev_caps.get(layer)
+        if caps is None:
+            return
+        slab = self.peer.slabs.get(layer)
+        if slab is None:
+            if sum(caps) > 0:
+                # unbuilt (or memoized at capacity 0): drop the memo so the
+                # next _peer_slab() call lazily builds under the new plan
+                self.peer.slabs.pop(layer, None)
+            return
+        slab.set_dev_caps(caps)
 
     def _planner_probe(self) -> Tuple[Optional[float], int]:
         """(hit rate, accesses) over the steps since the last probe — the
@@ -1091,6 +1400,11 @@ class ZipMoEEngine:
                 cache.pin(sel)   # pin-release: _collect (unpinned at drain)
         job.payloads = {(l, e): self._payload(l, e) or ExpertPayload()
                         for l, e in job.expert_keys}
+        if self.peer is not None:
+            # P-tier interception: peer-slab residents are priced and (when
+            # the link wins) fetched synchronously right here, seeding their
+            # tensors below exactly like F hits
+            self._serve_peer_residents(job)
 
         # ---- per-key execution-time priorities (tiered classes) ----------
         key_p: Dict[Tuple[int, int], float] = {}
@@ -1396,6 +1710,12 @@ class ZipMoEEngine:
                 # hierarchical path handles this inside the demote hook)
                 continue
             cache.admit(e, pl)
+        # peer reconcile runs FIRST: an F->P demotion's payload may carry
+        # device-slab SlotRefs, which must be read into the peer row before
+        # the slab reconcile frees the leaver's slot (staling the refs)
+        if self.peer is not None:
+            for l in {l for l, _ in subset}:
+                self._reconcile_peer(l)
         if self.device_cache:
             for l in {l for l, _ in subset}:
                 self._reconcile_slab(l)

@@ -32,7 +32,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-POOL_ORDER = ("F", "C", "S", "E")
+from repro.core.tiers import DEFAULT_STACK
+
+# historical alias: the default (paper) tier order.  Every scoring routine
+# below takes an explicit ``order`` — the tier-stack names in hierarchy
+# order — and reproduces the 4-tier behavior bit-identically by default.
+POOL_ORDER = DEFAULT_STACK.order
+
+# which tiers' hits skip which reconstruction resources (Algorithm 3's
+# accounting, keyed by tier name; P serves full tensors over the link)
+_SKIPS_SM = frozenset(("F", "P", "C", "S"))
+_SKIPS_E = frozenset(("F", "P", "C", "E"))
+_SKIPS_DEC = frozenset(("F", "P"))
 
 
 # ----------------------------------------------------------------------------
@@ -188,17 +199,36 @@ class PlanConsts:
     L: int              # worker threads
     K: int              # exponent shards per tensor
     n_tensors: int      # tensors per expert
+    # per-expert peer-HBM fetch delay over the interconnect (0 = no P tier);
+    # trailing default keeps every existing positional construction valid
+    peer: float = 0.0
 
 
-def estimate_makespan(k: int, h: Dict[str, int], consts: PlanConsts) -> float:
+def estimate_makespan(k: int, h: Dict[str, int], consts: PlanConsts,
+                      order: Sequence[str] = POOL_ORDER) -> float:
     n, K, L = consts.n_tensors, consts.K, consts.L
-    hF, hC, hS, hE = (h.get(p, 0) for p in POOL_ORDER)
-    n_sm = n * (k - hF - hC - hS)
-    n_e = n * K * (k - hF - hC - hE)
+    h_sm = h_e = h_dec = 0
+    for p in order:
+        hp = h.get(p, 0)
+        if p in _SKIPS_SM:
+            h_sm += hp
+        if p in _SKIPS_E:
+            h_e += hp
+        if p in _SKIPS_DEC:
+            h_dec += hp
+    n_sm = n * (k - h_sm)
+    n_e = n * K * (k - h_e)
     t_io = n_sm * consts.u + n_e * consts.v
-    n_d = n * K * (k - hF)
+    n_d = n * K * (k - h_dec)
     t_dec = (n_e * consts.v + n_d * consts.c) / max(1, L)
-    return max(t_io, t_dec)
+    out = max(t_io, t_dec)
+    if consts.peer:
+        # third bottleneck: the interconnect is a serial resource — every
+        # peer-resident hit's fetch queues on the link
+        t_peer = h.get("P", 0) * consts.peer
+        if t_peer > out:
+            out = t_peer
+    return out
 
 
 # ----------------------------------------------------------------------------
@@ -223,52 +253,72 @@ def _ratio_grid(active: Sequence[str], step: float):
 def _score_candidate(k: int, sizes: Dict[str, int],
                      phi_p: Dict[str, np.ndarray], phi_M: np.ndarray,
                      denom: float, consts: PlanConsts,
-                     limit: Optional[float] = None) -> Optional[float]:
+                     limit: Optional[float] = None,
+                     order: Sequence[str] = POOL_ORDER) -> Optional[float]:
     """E[makespan] of one size-vector candidate under the conditional joint
     hit distribution (reference scalar evaluation).  Every term is
     non-negative, so once the partial sum reaches ``limit`` (the
-    incumbent's cost) the candidate can never win — returns None (pruned)."""
+    incumbent's cost) the candidate can never win — returns None (pruned).
+
+    The hit grid iterates the stack's tiers in lexicographic order — the
+    exact loop nest (and fp summation order) of the historical 4-pool
+    code when ``order`` is the default stack."""
     cost = 0.0
-    for hF in range(min(sizes["F"], k) + 1):
-        for hC in range(min(sizes["C"], k) + 1):
-            for hS in range(min(sizes["S"], k) + 1):
-                for hE in range(min(sizes["E"], k) + 1):
-                    rem = k - hF - hC - hS - hE
-                    if rem < 0 or rem >= phi_M.size:
-                        continue
-                    pr = (phi_M[rem] / denom *
-                          phi_p["F"][hF] * phi_p["C"][hC] *
-                          phi_p["S"][hS] * phi_p["E"][hE])
-                    if pr <= 0:
-                        continue
-                    d = estimate_makespan(
-                        k, {"F": hF, "C": hC, "S": hS, "E": hE}, consts)
-                    cost += pr * d
-                if limit is not None and cost >= limit:
-                    return None
+    for hs in itertools.product(*(range(min(sizes[p], k) + 1)
+                                  for p in order)):
+        rem = k - sum(hs)
+        if rem < 0 or rem >= phi_M.size:
+            continue
+        pr = phi_M[rem] / denom
+        for p, hv in zip(order, hs):
+            pr = pr * phi_p[p][hv]
+        if pr <= 0:
+            continue
+        cost += pr * estimate_makespan(k, dict(zip(order, hs)), consts,
+                                       order)
+        if limit is not None and cost >= limit:
+            return None
     return cost
 
 
 def _score_candidate_np(k: int, sizes: Dict[str, int],
                         phi_p: Dict[str, np.ndarray], phi_M: np.ndarray,
-                        denom: float, consts: PlanConsts) -> float:
-    """Vectorised `_score_candidate`: the whole (h_F, h_C, h_S, h_E) grid —
+                        denom: float, consts: PlanConsts,
+                        order: Sequence[str] = POOL_ORDER) -> float:
+    """Vectorised `_score_candidate`: the whole per-tier hit grid —
     probabilities AND Algorithm-3 makespans — as one broadcast expression.
     Exact same sum as the scalar loop (modulo fp summation order); ~10–30×
-    faster, which is what makes per-layer online re-planning affordable."""
+    faster, which is what makes per-layer online re-planning affordable.
+
+    Generalised over the tier stack: each tier gets one broadcast axis in
+    stack order, so the default stack reproduces the historical
+    (h_F, h_C, h_S, h_E) grid — same arrays, same op order, same bits."""
     n, K, L = consts.n_tensors, consts.K, consts.L
-    HF, HC, HS, HE = np.ix_(*(np.arange(min(sizes[p], k) + 1)
-                              for p in POOL_ORDER))
-    rem = k - HF - HC - HS - HE
+    axes = np.ix_(*(np.arange(min(sizes[p], k) + 1) for p in order))
+    H = dict(zip(order, axes))
+    rem = k
+    for a in axes:
+        rem = rem - a
     valid = (rem >= 0) & (rem < phi_M.size)
-    pr = (phi_M[np.clip(rem, 0, phi_M.size - 1)] / denom *
-          phi_p["F"][HF] * phi_p["C"][HC] * phi_p["S"][HS] * phi_p["E"][HE])
-    n_sm = n * (k - HF - HC - HS)
-    n_e = n * K * (k - HF - HC - HE)
+    pr = phi_M[np.clip(rem, 0, phi_M.size - 1)] / denom
+    for p in order:
+        pr = pr * phi_p[p][H[p]]
+    h_sm = h_e = h_dec = 0
+    for p in order:
+        if p in _SKIPS_SM:
+            h_sm = h_sm + H[p]
+        if p in _SKIPS_E:
+            h_e = h_e + H[p]
+        if p in _SKIPS_DEC:
+            h_dec = h_dec + H[p]
+    n_sm = n * (k - h_sm)
+    n_e = n * K * (k - h_e)
     t_io = n_sm * consts.u + n_e * consts.v
-    n_d = n * K * (k - HF)
+    n_d = n * K * (k - h_dec)
     t_dec = (n_e * consts.v + n_d * consts.c) / max(1, L)
     d = np.maximum(t_io, t_dec)
+    if consts.peer and "P" in H:
+        d = np.maximum(d, H["P"] * consts.peer)
     return float((np.where(valid, pr, 0.0) * d).sum())
 
 
@@ -277,10 +327,12 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
                active: Sequence[str] = POOL_ORDER, step: float = 0.125,
                q: Optional[np.ndarray] = None, memoize: bool = True,
                prune: bool = True, q0: Optional[np.ndarray] = None,
-               f0: Optional[np.ndarray] = None) -> Plan:
+               f0: Optional[np.ndarray] = None,
+               order: Sequence[str] = POOL_ORDER) -> Plan:
     """Returns the expected-makespan-minimising pool partition.
 
-    bytes_per_state: per-expert residency cost for pools F/C/S/E.
+    bytes_per_state: per-expert residency cost per tier of ``order`` (the
+    tier-stack names in hierarchy order; default = the paper's F/C/S/E).
 
     ``q0``/``f0`` warm-start the IPF fit from a previous plan's fitted q
     (and the f it was fitted for); ignored when ``q`` is supplied directly.
@@ -294,6 +346,7 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
     evaluation's (``tests/test_live_planner.py`` pins it); together they
     make per-layer *online* re-planning affordable (``benchmarks.run
     --only planner`` measures the gap)."""
+    order = tuple(order)
     n_experts = f.size
     q = ipf_selection_probs(f, k, q0=q0, f0=f0) if q is None \
         else np.asarray(q)
@@ -311,19 +364,27 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
 
     best: Optional[Plan] = None
     seen_sizes: set = set()
+    # the prune certificate below relies on Alg. 3 being monotone
+    # NON-INCREASING in every hit count — true of the I/O and decompression
+    # bottlenecks but not of the peer-link term (increasing in h_P), so the
+    # lower bound is evaluated link-free (still valid: dropping a max() arm
+    # can only lower the bound)
+    lb_consts = consts if not consts.peer else \
+        PlanConsts(consts.u, consts.v, consts.c, consts.L, consts.K,
+                   consts.n_tensors)
     for ratios in _ratio_grid(list(active), step):
-        sizes = {p: 0 for p in POOL_ORDER}
+        sizes = {p: 0 for p in order}
         for p in active:
             sizes[p] = int(ratios[p] * mem_budget / bytes_per_state[p])
         # map pools to contiguous rank intervals in hierarchy order
         intervals, u0 = {}, 0
-        for p in POOL_ORDER:
+        for p in order:
             s = min(sizes[p], n_experts - u0)
             sizes[p] = s
             intervals[p] = (u0, u0 + s)
             u0 += s
         if memoize:
-            key = tuple(sizes[p] for p in POOL_ORDER)
+            key = tuple(sizes[p] for p in order)
             if key in seen_sizes:
                 continue        # same size vector: same cost, first one kept
             seen_sizes.add(key)
@@ -337,23 +398,56 @@ def plan_pools(f: np.ndarray, k: int, mem_budget: float,
             # candidate whose bound already exceeds the incumbent is
             # skipped without building its Φ tables or scoring the grid.
             lb = max(0.0, estimate_makespan(
-                k, {p: min(sizes[p], k) for p in POOL_ORDER}, consts))
+                k, {p: min(sizes[p], k) for p in order}, lb_consts, order))
             if lb * (1.0 - 1e-9) >= best.cost:
                 continue
         phi_p = {p: phi_interval(a, b) for p, (a, b) in intervals.items()}
         phi_M = phi_interval(u0, n_experts)
         if memoize:
-            cost = _score_candidate_np(k, sizes, phi_p, phi_M, denom, consts)
+            cost = _score_candidate_np(k, sizes, phi_p, phi_M, denom, consts,
+                                       order)
         else:
             cost = _score_candidate(
                 k, sizes, phi_p, phi_M, denom, consts,
-                limit=best.cost if (prune and best is not None) else None)
+                limit=best.cost if (prune and best is not None) else None,
+                order=order)
             if cost is None:
                 continue                      # pruned: cannot beat incumbent
         if best is None or cost < best.cost:
             best = Plan(dict(ratios), dict(sizes), cost, q=q)
     assert best is not None
     return best
+
+
+def plan_peer_shards(f_shards: Sequence[np.ndarray], budget_per_dev: float,
+                     bytes_full: float, consts: PlanConsts) -> List[int]:
+    """Per-device peer-HBM slot counts: the §3.4 solver run per device over
+    its shard's rank statistics.
+
+    Each device owns a contiguous expert block (the EP rule of
+    ``distributed/sharding.py``); its peer slab is a single full-tensor
+    pool, so the Algorithm-4 grid collapses to ``active=("F",)`` — exactly
+    the flat mode's byte budgeting — under the device's own byte budget.
+
+    ``f_shards[d]``: the shard's rank-sorted selection mass (any positive
+    scale; renormalised to the shard's effective per-step selection size).
+    Returns the solved slot count per device (0 when the shard is cold or
+    the budget cannot hold one resident)."""
+    caps: List[int] = []
+    for f in f_shards:
+        f = np.asarray(f, np.float64).ravel()
+        mass = float(f.sum())
+        if (f.size == 0 or mass <= 0 or bytes_full <= 0
+                or budget_per_dev < bytes_full):
+            caps.append(0)
+            continue
+        # effective per-step selections landing on this shard: the shard's
+        # share of the global top-k mass, at least one, below the shard size
+        k = int(np.clip(round(mass), 1, max(1, f.size - 1)))
+        p = plan_pools(f, k, budget_per_dev, {"F": bytes_full}, consts,
+                       active=("F",))
+        caps.append(int(p.sizes.get("F", 0)))
+    return caps
 
 
 # ----------------------------------------------------------------------------
@@ -392,11 +486,21 @@ class LivePlanner:
 
     def __init__(self, mem_budget: float, *, step: float = 0.125,
                  drift_margin: float = 0.05, drift_min_accesses: int = 0,
-                 active: Sequence[str] = POOL_ORDER):
+                 active: Sequence[str] = POOL_ORDER,
+                 order: Sequence[str] = POOL_ORDER,
+                 budget_split: str = "proportional"):
         assert mem_budget >= 0, mem_budget
+        assert budget_split in ("proportional", "waterfill"), budget_split
         self.mem_budget = float(mem_budget)
         self.step = float(step)
         self.drift_margin = float(drift_margin)
+        # tier names in hierarchy order (the cache's stack); plans carry a
+        # size/cap entry per tier of this order
+        self.order = tuple(order)
+        # cross-layer split rule: "proportional" (historical default —
+        # budget shares follow activity weights) or "waterfill" (greedy on
+        # dE[makespan]/dbyte; see _waterfill_budgets)
+        self.budget_split = budget_split
         # probe windows with fewer accesses than this are ignored by the
         # drift policy (neither trigger nor move the baseline): under
         # multi-tenant request churn a window can cover a drain phase where
@@ -434,6 +538,60 @@ class LivePlanner:
         return {l: self.mem_budget * max(0.0, weights[l]) / total
                 for l in layers}
 
+    def _waterfill_budgets(self, stats: Dict[int, Tuple[np.ndarray, int]],
+                           bytes_per_state: Dict[int, Dict[str, float]],
+                           consts: Dict[int, PlanConsts],
+                           weights: Dict[int, float]) -> Dict[int, float]:
+        """Water-filling on dE[makespan]/dbyte: grant the global budget in
+        full-expert quanta, each to the layer whose next resident buys the
+        largest expected makespan reduction per byte.
+
+        Granting layer l its r-th quantum promotes its rank-r expert from
+        miss to hit; the marginal gain is
+
+            g_l(r) = w_l · f_l[r] · miss_cost_l / bytes_F_l
+
+        — selection probability of that rank × the serial cost its miss
+        path would add (Algorithm 3 at a single all-miss expert) per byte
+        spent.  Gains are non-increasing in r (f is rank-sorted), so the
+        greedy sweep IS the water-filling solution.  When marginal gains
+        are uniform across layers the result equals the proportional split
+        (equality pinned by tests/test_tiers.py); leftover budget below
+        every layer's quantum — or beyond every layer's expert count —
+        falls back to the proportional rule."""
+        layers = sorted(stats)
+        w = {l: max(0.0, weights.get(l, 0.0)) for l in layers}
+        if sum(w.values()) <= 0:
+            w = {l: 1.0 for l in layers}
+        quanta = {l: max(1e-12, float(bytes_per_state[l].get("F", 0.0)))
+                  for l in layers}
+        miss_cost = {l: max(0.0, estimate_makespan(1, {}, consts[l],
+                                                   self.order))
+                     for l in layers}
+        f_by_l = {l: np.asarray(stats[l][0], np.float64) for l in layers}
+        budgets = {l: 0.0 for l in layers}
+        grants = {l: 0 for l in layers}
+        rem = self.mem_budget
+        while True:
+            best_l, best_g = None, 0.0
+            for l in layers:
+                if quanta[l] > rem or grants[l] >= f_by_l[l].size:
+                    continue
+                g = w[l] * float(f_by_l[l][grants[l]]) * miss_cost[l] \
+                    / quanta[l]
+                if g > best_g:
+                    best_l, best_g = l, g
+            if best_l is None:
+                break
+            budgets[best_l] += quanta[best_l]
+            grants[best_l] += 1
+            rem -= quanta[best_l]
+        if rem > 0 and layers:
+            tw = sum(w.values())
+            for l in layers:
+                budgets[l] += rem * w[l] / tw if tw > 0 else rem / len(layers)
+        return budgets
+
     # -- planning -----------------------------------------------------------
     def plan(self, stats: Dict[int, Tuple[np.ndarray, int]],
              bytes_per_state: Dict[int, Dict[str, float]],
@@ -446,7 +604,13 @@ class LivePlanner:
         probabilities and effective per-step selection size."""
         if weights is None:
             weights = {l: 1.0 for l in stats}
-        budgets = self.layer_budgets({l: weights.get(l, 0.0) for l in stats})
+        if self.budget_split == "waterfill":
+            budgets = self._waterfill_budgets(
+                stats, bytes_per_state, consts,
+                {l: weights.get(l, 0.0) for l in stats})
+        else:
+            budgets = self.layer_budgets(
+                {l: weights.get(l, 0.0) for l in stats})
         plans: Dict[int, LayerPlan] = {}
         for l, (f, k) in sorted(stats.items()):
             budget = budgets.get(l, 0.0)
@@ -455,16 +619,16 @@ class LivePlanner:
                 # cold layer: its share cannot hold even one resident in the
                 # cheapest pool — release everything
                 plans[l] = LayerPlan(
-                    layer=l, sizes={p: 0 for p in POOL_ORDER},
-                    cap_bytes={p: 0.0 for p in POOL_ORDER},
-                    ratios={p: 0.0 for p in POOL_ORDER}, cost=float("inf"),
+                    layer=l, sizes={p: 0 for p in self.order},
+                    cap_bytes={p: 0.0 for p in self.order},
+                    ratios={p: 0.0 for p in self.order}, cost=float("inf"),
                     budget=budget)
                 continue
             f64 = np.asarray(f, np.float64)
             f_prev, q_prev = self._prev_fit.get(l, (None, None))
             p = plan_pools(f64, int(k), budget, bps,
                            consts[l], step=self.step, active=self.active,
-                           q0=q_prev, f0=f_prev)
+                           q0=q_prev, f0=f_prev, order=self.order)
             if p.q is not None:
                 self._prev_fit[l] = (f64, p.q)
             plans[l] = LayerPlan(

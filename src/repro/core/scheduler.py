@@ -74,6 +74,22 @@ def simulate(blocks: Sequence[Sequence[Task]], L: int, *,
         if not t.needs_sm_io:
             sm_avail[t.uid] = 0.0
 
+    # --- peer interconnect (P tier): a serial link, like the I/O thread -----
+    # peer-resident tasks carry no host I/O or decompression, but their
+    # collective fetches queue on the interconnect in block/task order —
+    # that transfer time gates the expert's readiness (priced per task from
+    # the profiled link bandwidth; 0 everywhere without a P tier)
+    peer_avail: Dict[int, float] = {}
+    link_t = 0.0
+    for blk in blocks:
+        for t in blk:
+            if t.peer_cost:
+                s = link_t
+                link_t += t.peer_cost
+                peer_avail[t.uid] = link_t
+                if record_events:
+                    events.append(("link", t.uid, s, link_t))
+
     # --- L decompression workers (work-conserving, priority order) ----------
     prio = {t.uid: i for i, t in enumerate(tasks)}
     pend = [(prio[t.uid], t.uid, k, e_avail[(t.uid, k)], t.dec_cost)
@@ -117,6 +133,8 @@ def simulate(blocks: Sequence[Sequence[Task]], L: int, *,
             r = max(r, dec_end[t.uid])
         if t.needs_sm_io:
             r = max(r, sm_avail[t.uid])
+        if t.uid in peer_avail:
+            r = max(r, peer_avail[t.uid])
         task_ready[t.uid] = r
     expert_ready: Dict[Tuple[int, int], float] = {}
     expert_p: Dict[Tuple[int, int], float] = {}

@@ -10,6 +10,9 @@ on the expert's runtime compression state:
   state S (SM cached)   : read_e[k] -> decomp[k] ──> recover
   state C (compressed)  : decomp[k] ──────────────> recover
   state F (full)        : (no task)
+  state P (peer HBM)    : collective fetch from the owner device's slab
+                          (no host I/O, no decompression; serialized on the
+                          interconnect link — see ``peer_cost``)
 
 Within a block the I/O thread loads E-chunks before SM-chunks (§3.3), so
 decompression overlaps the SM reads.
@@ -27,6 +30,7 @@ class CState(enum.Enum):
     S = "sm_cached"
     C = "compressed_cached"
     F = "full_cached"
+    P = "peer_cached"
 
 
 # state -> (needs E-chunk I/O, needs SM I/O, needs decompression)
@@ -36,6 +40,9 @@ STATE_NEEDS = {
     CState.S: (True, False, True),
     CState.C: (False, False, True),
     CState.F: (False, False, False),
+    # peer-HBM resident: like F w.r.t. the host pipeline (no reads, no
+    # decompression) — the link transfer is priced separately (peer_cost)
+    CState.P: (False, False, False),
 }
 
 
@@ -52,6 +59,7 @@ class Task:
     k_shards: int                    # K
     uid: int = -1
     layer: int = 0                   # owning sparse layer (cross-layer jobs)
+    peer_cost: float = 0.0           # interconnect fetch time (state P only)
 
     @property
     def expert_key(self) -> Tuple[int, int]:
@@ -100,7 +108,7 @@ class Task:
         dec = (self.k_shards * self.dec_cost) / min(self.k_shards, L) \
             if self.needs_decomp else 0.0
         sm = self.sm_cost if self.needs_sm_io else 0.0
-        return z + max(dec, sm) + self.p
+        return z + max(dec, sm) + self.peer_cost + self.p
 
 
 def make_tasks(expert_ids, states, p_times, *, n_tensors=1, u=1.0, rho=0.4,
@@ -118,14 +126,19 @@ def make_tasks(expert_ids, states, p_times, *, n_tensors=1, u=1.0, rho=0.4,
 
 
 def lower_bound(tasks: List[Task], L: int) -> float:
-    """Lemma B.3: OPT >= max{I, C/L, P, Z}."""
+    """Lemma B.3: OPT >= max{I, C/L, P, Z} (+ the peer link workload,
+    a serial resource like the I/O thread, when P-state tasks exist)."""
     I = sum(t.io_workload for t in tasks)
     C = sum(t.compute_workload for t in tasks)
     # P: each expert's exec counted once (keyed per layer — cross-layer
     # block lists may repeat an expert id in a different layer)
     seen = {}
+    link = {}
     for t in tasks:
         seen[t.expert_key] = t.p
+        if t.peer_cost:
+            link[t.expert_key] = t.peer_cost
     P = sum(seen.values())
+    LNK = sum(link.values())
     Z = max((t.critical_path(L) for t in tasks), default=0.0)
-    return max(I, C / max(1, L), P, Z)
+    return max(I, C / max(1, L), P, Z, LNK)

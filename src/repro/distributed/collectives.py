@@ -73,3 +73,56 @@ def count_collectives(hlo_text: str) -> Dict[str, int]:
         if m and "-done" not in line.split("(")[0]:
             out[m.group(1)] += 1
     return dict(out)
+
+
+class CollectiveLedger:
+    """Runtime collective-traffic meter for the peer-HBM tier.
+
+    Each compiled peer-fetch executable has its per-call collective bytes
+    parsed once from its optimized HLO (``collective_bytes``); every launch
+    then charges that static cost here.  The engine surfaces the totals in
+    ``transfer_summary()`` next to h2d/d2h — the link-traffic counterpart
+    of the host staging tax — and the benchmarks print them as the
+    collective-bytes columns.
+
+    Charges arrive from the decode thread (peer fetches run synchronously
+    at submit time, preserving the caches' single-mutator discipline), but
+    the totals are read by telemetry calls from any thread — hence the
+    lock.
+    """
+
+    def __init__(self):
+        import threading
+        self._lock = threading.Lock()
+        # guarded-by: _lock
+        self._bytes: Dict[str, int] = defaultdict(int)
+        # guarded-by: _lock
+        self._ops: Dict[str, int] = defaultdict(int)
+        # guarded-by: _lock  (host->peer-device upload bytes; kept separate
+        # from the engine's h2d counter, which meters device-0 staging only)
+        self._put_bytes = 0
+
+    def charge(self, kinds: Dict[str, int]):
+        """Record one launch's collective traffic (a ``collective_bytes``
+        dict; the 'total' key is ignored — it is recomputed on read)."""
+        with self._lock:
+            for kind, b in kinds.items():
+                if kind == "total":
+                    continue
+                self._bytes[kind] += int(b)
+                self._ops[kind] += 1
+
+    def charge_put(self, nbytes: int):
+        """Record a host->owner-device slab upload (admission traffic)."""
+        with self._lock:
+            self._put_bytes += int(nbytes)
+
+    def summary(self) -> Dict[str, object]:
+        with self._lock:
+            by_kind = dict(self._bytes)
+            return {
+                "collective_bytes": by_kind,
+                "collective_ops": dict(self._ops),
+                "total_bytes": sum(by_kind.values()),
+                "peer_put_bytes": self._put_bytes,
+            }

@@ -88,6 +88,28 @@ def _leaf_spec(name: str, shape, *, in_moe: bool, ep_ok: bool,
     return P()
 
 
+def ep_ok(n_experts: int, n_devices: int) -> bool:
+    """Whether the expert dimension divides the mesh — the same divisibility
+    rule the ``_leaf_spec`` EP branch applies to the [*, E, d, f] stacks."""
+    return n_devices > 0 and n_experts % n_devices == 0
+
+
+def ep_owner(expert: int, n_experts: int, n_devices: int) -> int:
+    """Owner device of `expert` under EP sharding: NamedSharding splits the
+    expert axis into contiguous blocks, so device d owns experts
+    [d·E/n, (d+1)·E/n).  The peer-HBM tier keys its sharded slabs by this
+    rule so a slab row is co-resident with the device's expert shard."""
+    assert ep_ok(n_experts, n_devices), (n_experts, n_devices)
+    return int(expert) // (n_experts // n_devices)
+
+
+def ep_partition(n_experts: int, n_devices: int):
+    """Per-device expert-id ranges under the contiguous-block EP rule."""
+    assert ep_ok(n_experts, n_devices), (n_experts, n_devices)
+    blk = n_experts // n_devices
+    return [range(d * blk, (d + 1) * blk) for d in range(n_devices)]
+
+
 def needs_fsdp(cfg, model_size: int, *, train: bool,
                hbm_budget: float = 12e9) -> bool:
     """Auto policy: 2D-shard (FSDP over `data`) when the 1D-TP state won't

@@ -46,9 +46,19 @@ Scheduler knobs (§3.3):
 --profile-p-times    : feed Algorithm 1 *measured* per-expert grouped-GEMM
                        times (GemmProfiler) instead of class constants
 --cross-layer-depth N: one block schedule spans this step plus the next N
-                       MoE layers' predictions
+                       MoE layers' predictions (``auto`` tunes N online
+                       from the observed hidden-fetch fraction)
 --freq-decay         : FreqTracker forgetting for drifted workloads
 --cache-window N     : windowed (per-N-steps) cache hit-rate series
+
+Peer-HBM tier (tier stack P):
+--mesh N             : shard store + slabs over N devices ('ep'); demand
+                       misses resident in a neighbor device's slab fetch
+                       over the interconnect (collective_permute) instead
+                       of the host decode path
+--budget-split       : proportional | waterfill (marginal-gain budget
+                       allocation across layers)
+--peer-budget BYTES  : per-device peer-slab budget (default --mem-budget)
 
 Both modes print ``cache:`` telemetry (per-pool hit rates, residency-state
 transition counts) next to the ``overlap:`` line.
@@ -84,7 +94,8 @@ def print_sched_telemetry(zs, args):
               f"({ps['measure_wall_s']*1e3:.1f}ms profiling)")
     if args.mem_budget is not None:
         pls = zs.plan_summary()
-        sizes = {l: "".join(f"{p}{s[p]}" for p in "FCSE")
+        order = zs.engine.stack.order      # F/C/S/E, plus P on a mesh
+        sizes = {l: "".join(f"{p}{s[p]}" for p in order if p in s)
                  for l, s in sorted((int(l), d["sizes"])
                                     for l, d in pls["layers"].items())}
         print(f"plan: budget={pls['mem_budget']:.0f}B "
@@ -92,6 +103,16 @@ def print_sched_telemetry(zs, args):
               f"replans={pls['n_replans']} "
               f"({', '.join(ev['reason'] for ev in pls['replans'])}) "
               f"sizes={sizes}")
+    if args.mesh > 1:
+        ps = zs.peer_summary()
+        print(f"peer: served={ps['served']} fallbacks={ps['fallbacks']} "
+              f"collective_bytes={ps['total_bytes']} "
+              f"put_bytes={ps['peer_put_bytes']} "
+              f"link_bw={ps['link']['bw']/1e9:.1f}GB/s")
+    if zs._auto_depth:
+        ov = zs.overlap_summary()
+        print(f"auto-depth: depth={ov['cross_layer_depth']} "
+              f"changes={len(ov['depth_events'])}")
 
 
 def main():
@@ -149,9 +170,26 @@ def main():
     ap.add_argument("--profile-p-times", action="store_true",
                     help="sort Algorithm-1 blocks by measured per-expert "
                          "grouped-GEMM times instead of class constants")
-    ap.add_argument("--cross-layer-depth", type=int, default=0,
+    ap.add_argument("--cross-layer-depth", default="0",
                     help="extend each step submission with the next N MoE "
-                         "layers' predictions under one block schedule")
+                         "layers' predictions under one block schedule; "
+                         "'auto' tunes N online from the observed "
+                         "hidden-fetch fraction")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="shard the compressed store and expert slabs over "
+                         "N devices ('ep' axis) and add the peer-HBM (P) "
+                         "tier: demand misses resident in a neighbor's "
+                         "slab fetch via collective_permute instead of the "
+                         "host decode path (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--budget-split", default="proportional",
+                    choices=["proportional", "waterfill"],
+                    help="cross-layer byte-budget split: activity-"
+                         "proportional, or water-filling on marginal "
+                         "makespan gain per byte")
+    ap.add_argument("--peer-budget", type=float, default=None,
+                    help="per-device peer-slab byte budget (default: "
+                         "--mem-budget)")
     ap.add_argument("--freq-decay", type=float, default=1.0,
                     help="FreqTracker exponential decay (<1 forgets stale "
                          "popularity under drifting traces; 1.0 = never)")
@@ -159,6 +197,11 @@ def main():
                     help="record cache hit/miss deltas every N decode steps "
                          "(cache_summary windowed series; 0 = off)")
     args = ap.parse_args()
+    if args.cross_layer_depth != "auto":
+        try:
+            args.cross_layer_depth = int(args.cross_layer_depth)
+        except ValueError:
+            ap.error("--cross-layer-depth expects an integer or 'auto'")
     pool_sizes = None
     if args.pool_sizes is None:
         if args.mem_budget is None:
@@ -204,7 +247,10 @@ def main():
                    device_cache=args.device_cache,
                    mem_budget=args.mem_budget,
                    replan_every=args.replan_every,
-                   plan_step=args.plan_step)
+                   plan_step=args.plan_step,
+                   budget_split=args.budget_split,
+                   mesh_devices=args.mesh,
+                   peer_budget=args.peer_budget)
 
     if args.mode == "zipmoe-batch":
         arrivals = ([float(x) for x in args.arrival_trace.split(",")]

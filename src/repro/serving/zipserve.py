@@ -112,6 +112,13 @@ def _pick_block(dim: int, cap: int) -> int:
 
 
 class ZipServer:
+    # cross_layer_depth="auto" tuning knobs: adjust once per window of
+    # decode steps; deepen while < RAISE_BELOW of fetch time is hidden,
+    # shallow out above LOWER_ABOVE (see _tune_depth)
+    _DEPTH_WINDOW = 8
+    _DEPTH_RAISE_BELOW = 0.90
+    _DEPTH_LOWER_ABOVE = 0.98
+
     def __init__(self, params, cfg, store_path: str, *, L: int = 4,
                  pool_sizes: Optional[Dict[str, int]] = None,
                  bandwidth_gbps: Optional[float] = None,
@@ -120,16 +127,27 @@ class ZipServer:
                  ffn_impl: str = "grouped", fused_recovery: bool = False,
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
                  flat_policy: str = "lru", delta: int = 1,
-                 profile_p_times: bool = False, cross_layer_depth: int = 0,
+                 profile_p_times: bool = False, cross_layer_depth=0,
                  freq_decay: float = 1.0, cache_window: int = 0,
                  device_cache: bool = False,
                  mem_budget: Optional[float] = None,
-                 replan_every: int = 32, plan_step: float = 0.125):
+                 replan_every: int = 32, plan_step: float = 0.125,
+                 budget_split: str = "proportional",
+                 mesh_devices: int = 1, peer_budget: Optional[float] = None):
         assert ffn_impl in ("grouped", "loop")
+        # "auto": start synchronous and let the observed hidden-fetch
+        # fraction tune the depth online (see _tune_depth)
+        self._auto_depth = cross_layer_depth == "auto"
+        if self._auto_depth:
+            cross_layer_depth = 0
         assert cross_layer_depth >= 0
         assert not (device_cache and fused_recovery), \
             "fused_recovery keeps weights as host bit-planes; device_cache " \
             "keeps them spliced on device — pick one"
+        assert mesh_devices >= 1
+        assert not (mesh_devices > 1 and fused_recovery), \
+            "fused_recovery payloads are host bit-planes; the peer tier " \
+            "slabs hold spliced device tensors — pick one"
         self.cfg = cfg
         self.prefetch = prefetch
         self.prefetch_width = prefetch_width
@@ -138,6 +156,20 @@ class ZipServer:
         self.device_cache = device_cache
         self.profile_p_times = profile_p_times
         self.cross_layer_depth = cross_layer_depth
+        self._depth_events: List[Dict[str, float]] = []
+        self._depth_steps = 0
+        self._depth_base: Optional[Dict[str, float]] = None
+        peer_mesh = None
+        if mesh_devices > 1:
+            # single-process multi-device (e.g. XLA_FLAGS=
+            # --xla_force_host_platform_device_count=N on CPU CI): the
+            # compressed store + expert slabs shard over the 'ep' axis
+            if jax.device_count() < mesh_devices:
+                raise ValueError(
+                    f"mesh_devices={mesh_devices} but only "
+                    f"{jax.device_count()} visible device(s)")
+            from repro.launch.mesh import make_mesh
+            peer_mesh = make_mesh((mesh_devices,), ("ep",))
         self.layers = unstack_layers(params["decoder"], cfg)
         self.globals = {k: v for k, v in params.items() if k != "decoder"}
         store = ExpertStore(store_path, bandwidth_gbps=bandwidth_gbps)
@@ -153,7 +185,7 @@ class ZipServer:
             L=L, pool_sizes=pool_sizes, recover_fn=recover,
             cache_mode=cache_mode, flat_capacity=flat_capacity,
             flat_policy=flat_policy, delta=delta, freq_decay=freq_decay,
-            device_cache=device_cache)
+            device_cache=device_cache, peer_mesh=peer_mesh)
         if use_pallas_recovery and not device_cache and ffn_impl == "grouped":
             # the grouped GEMM consumes the spliced tensor on device — keep
             # it there instead of the historical device→host→device round
@@ -169,7 +201,9 @@ class ZipServer:
             self.engine.configure_planner(mem_budget,
                                           replan_every=replan_every,
                                           plan_step=plan_step,
-                                          initial_plan=pool_sizes is None)
+                                          initial_plan=pool_sizes is None,
+                                          budget_split=budget_split,
+                                          peer_budget=peer_budget)
         if cache_window:
             self.engine.enable_cache_windows(cache_window)
         # measured per-expert grouped-GEMM times feeding Algorithm 1's p_n
@@ -505,7 +539,56 @@ class ZipServer:
         hidden = ov["fetch_wall_s"] - ov["fetch_wait_s"]
         return {**ov, **self.engine.transfer_summary(),
                 "total_fetch_s": total, "hidden_fetch_s": hidden,
-                "hidden_frac": hidden / total if total > 0 else 0.0}
+                "hidden_frac": hidden / total if total > 0 else 0.0,
+                "cross_layer_depth": self.cross_layer_depth,
+                "auto_depth": self._auto_depth,
+                "depth_events": list(self._depth_events)}
+
+    def peer_summary(self) -> Dict[str, object]:
+        """Peer-HBM (P tier) telemetry: link-served vs fallback counts,
+        collective-traffic ledger, profiled link model, and per-layer slab
+        occupancy.  ``{"enabled": False}`` without a mesh."""
+        return self.engine.peer_summary()
+
+    def _tune_depth(self):
+        """Auto-tune ``cross_layer_depth`` from the observed hidden-fetch
+        fraction (``cross_layer_depth="auto"``).
+
+        Every window of decode steps, look at the fetch time accrued since
+        the last adjustment: if a meaningful share of it blocked the decode
+        thread, prediction is not being issued early enough — deepen the
+        cross-layer horizon so fetches start more layers ahead.  If
+        essentially everything was hidden, try a shallower horizon (less
+        speculative traffic for the same overlap).  Bounds: [0, #MoE
+        layers]; each change is logged in ``depth_events`` and surfaced by
+        :meth:`overlap_summary`."""
+        self._depth_steps += 1
+        if self._depth_steps % self._DEPTH_WINDOW:
+            return
+        ov = self.overlap_stats
+        cur = {"fetch_wall_s": ov["fetch_wall_s"],
+               "fetch_wait_s": ov["fetch_wait_s"],
+               "blocking_s": ov["blocking_s"]}
+        base = self._depth_base or {k: 0.0 for k in cur}
+        self._depth_base = cur
+        wall = cur["fetch_wall_s"] - base["fetch_wall_s"]
+        wait = cur["fetch_wait_s"] - base["fetch_wait_s"]
+        blocked = cur["blocking_s"] - base["blocking_s"]
+        total = wall + blocked
+        if total <= 0.0:                  # all-hit window: nothing to tune
+            return
+        hidden_frac = max(0.0, wall - wait) / total
+        depth = self.cross_layer_depth
+        if hidden_frac < self._DEPTH_RAISE_BELOW:
+            depth = min(depth + 1, len(self._moe_layers))
+        elif hidden_frac > self._DEPTH_LOWER_ABOVE:
+            depth = max(depth - 1, 0)
+        if depth != self.cross_layer_depth:
+            self._depth_events.append({
+                "step": float(self._depth_steps),
+                "from": float(self.cross_layer_depth),
+                "to": float(depth), "hidden_frac": hidden_frac})
+            self.cross_layer_depth = depth
 
     def cache_summary(self, per_layer: bool = False,
                       windows: bool = False) -> Dict[str, object]:
@@ -774,6 +857,8 @@ class ZipServer:
             new_caches.append(nc)
         x = apply_norm(p["final_norm"], x, cfg)
         w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]["w"]
+        if self._auto_depth:
+            self._tune_depth()
         self.engine.note_step()       # windowed cache telemetry step clock
         return x @ w, new_caches
 
@@ -826,6 +911,8 @@ class ZipServer:
         for rid in owners or ():
             self.req_stats.setdefault(
                 rid, {"accesses": 0, "hits": 0, "steps": 0})["steps"] += 1
+        if self._auto_depth:
+            self._tune_depth()
         self.engine.note_step()       # windowed cache telemetry step clock
         return x @ w, new_caches
 

@@ -1,0 +1,291 @@
+"""Tier-stack abstraction tests: the explicit F/C/S/E(/P) hierarchy.
+
+Pins the refactor's contract — with the default stack every consumer is
+bit-identical to the pre-stack code — and the single-device equivalences
+the peer tier must not disturb (mesh_devices=1 ≡ baseline; a 5-tier order
+with an empty P pool scores exactly like the 4-tier order).  The actual
+multi-device P-tier behavior lives in tests/test_peer_tier.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.cache import HierarchicalCache
+from repro.core.planner import (LivePlanner, PlanConsts, plan_pools,
+                                plan_peer_shards)
+from repro.core.scheduler import simulate
+from repro.core.states import CState, Task
+from repro.core.store import build_store
+from repro.core.tiers import (DEFAULT_STACK, PEER_STACK, P_TIER, Tier,
+                              TierStack)
+from repro.core.workload import FreqTracker, zipf_trace
+from repro.models import init_params
+from repro.serving.zipserve import ZipServer
+
+
+# ----------------------------------------------------------------------------
+# TierStack unit level
+# ----------------------------------------------------------------------------
+def test_stack_orders():
+    assert DEFAULT_STACK.order == ("F", "C", "S", "E")
+    assert PEER_STACK.order == ("F", "P", "C", "S", "E")
+    assert not DEFAULT_STACK.has_peer and PEER_STACK.has_peer
+    assert PEER_STACK.index("P") == 1            # hotter than C, colder than F
+    assert PEER_STACK.state_of("P") is CState.P
+    # a P hit needs no host I/O and no decompression (link transfer only)
+    assert P_TIER.needs == (False, False, False)
+
+
+def test_tier_cost_bytes():
+    parts = {"full": 100.0, "sm": 30.0, "e": 10.0}
+    costs = DEFAULT_STACK.bytes_per_state(parts)
+    assert costs == {"F": 100.0, "C": 40.0, "S": 30.0, "E": 10.0}
+    pc = PEER_STACK.bytes_per_state(parts)
+    assert pc["P"] == 100.0                      # peer residents are full bf16
+    assert {k: v for k, v in pc.items() if k != "P"} == costs
+
+
+def test_stack_rejects_duplicates_and_bad_payloads():
+    with pytest.raises(AssertionError):
+        TierStack((Tier("F", CState.F, "full"), Tier("F", CState.C, "sm+e")))
+    with pytest.raises(AssertionError):
+        Tier("X", CState.F, "bogus")
+
+
+# ----------------------------------------------------------------------------
+# cache: explicit default stack ≡ implicit
+# ----------------------------------------------------------------------------
+def test_cache_explicit_default_stack_identical():
+    caps = {"F": 2, "C": 2, "S": 3, "E": 4}
+    n = 24
+    a = HierarchicalCache(caps, FreqTracker(n), delta=1)
+    b = HierarchicalCache(caps, FreqTracker(n), delta=1, stack=DEFAULT_STACK)
+    for sel in zipf_trace(n, 4, 120, alpha=1.1, seed=7):
+        for c in (a, b):
+            c.record_access(sel)
+            for e in sel:
+                c.admit(e)
+    assert {p: sorted(a.pools[p]) for p in a.order} == \
+           {p: sorted(b.pools[p]) for p in b.order}
+    assert dict(a.hits) == dict(b.hits) and a.misses == b.misses
+    assert dict(a.transitions) == dict(b.transitions)
+
+
+def test_cache_peer_stack_empty_p_matches_default():
+    """A PEER_STACK cache whose P pool has capacity 0 behaves exactly like
+    the default stack on the same trace."""
+    caps = {"F": 2, "C": 2, "S": 3, "E": 4}
+    n = 24
+    a = HierarchicalCache(caps, FreqTracker(n), delta=1)
+    b = HierarchicalCache({**caps, "P": 0}, FreqTracker(n), delta=1,
+                          stack=PEER_STACK)
+    for sel in zipf_trace(n, 4, 120, alpha=1.1, seed=7):
+        for c in (a, b):
+            c.record_access(sel)
+            for e in sel:
+                c.admit(e)
+    for p in a.order:
+        assert sorted(a.pools[p]) == sorted(b.pools[p]), p
+    assert not b.pools["P"]
+    assert dict(a.hits) == dict(b.hits) and a.misses == b.misses
+
+
+# ----------------------------------------------------------------------------
+# planner: peer order with empty P scores bit-identically; water-filling
+# ----------------------------------------------------------------------------
+def _consts(L=3, K=4):
+    return PlanConsts(u=1e-4, v=2e-5, c=5e-5, L=L, K=K, n_tensors=3)
+
+
+def test_plan_pools_peer_order_exact_parity():
+    rng = np.random.default_rng(0)
+    f = np.sort(rng.random(16))[::-1]
+    f = f / f.sum() * 4
+    bps = {"F": 100.0, "C": 40.0, "S": 30.0, "E": 10.0}
+    base = plan_pools(f, 4, 800.0, bps, _consts())
+    peer = plan_pools(f, 4, 800.0, {**bps, "P": 100.0}, _consts(),
+                      active=DEFAULT_STACK.order, order=PEER_STACK.order)
+    assert peer.sizes.get("P", 0) == 0
+    assert {p: peer.sizes[p] for p in DEFAULT_STACK.order} == base.sizes
+    assert peer.cost == pytest.approx(base.cost, rel=0, abs=0)
+
+
+def test_waterfill_uniform_gains_equals_proportional():
+    """When every layer has the same rank profile, costs, and weight, the
+    water-filling split must coincide with the proportional split."""
+    rng = np.random.default_rng(1)
+    f = np.sort(rng.random(12))[::-1]
+    f = f / f.sum() * 3
+    stats = {l: (f.copy(), 3) for l in range(4)}
+    bps = {l: {"F": 50.0, "C": 20.0, "S": 15.0, "E": 5.0} for l in range(4)}
+    consts = {l: _consts() for l in range(4)}
+    weights = {l: 1.0 for l in range(4)}
+    pl = LivePlanner(4 * 200.0, budget_split="waterfill")
+    wf = pl._waterfill_budgets(stats, bps, consts, weights)
+    prop = pl.layer_budgets(weights)
+    for l in range(4):
+        assert wf[l] == pytest.approx(prop[l], rel=1e-9), (l, wf, prop)
+
+
+def test_waterfill_prefers_hot_layer():
+    rng = np.random.default_rng(2)
+    f = np.sort(rng.random(12))[::-1]
+    f = f / f.sum() * 3
+    stats = {0: (f.copy(), 3), 1: (f.copy(), 3)}
+    bps = {l: {"F": 50.0, "C": 20.0, "S": 15.0, "E": 5.0} for l in range(2)}
+    consts = {l: _consts() for l in range(2)}
+    pl = LivePlanner(300.0, budget_split="waterfill")
+    wf = pl._waterfill_budgets(stats, bps, consts, {0: 3.0, 1: 1.0})
+    assert wf[0] > wf[1]
+
+
+def test_waterfill_plan_end_to_end():
+    """plan() with budget_split='waterfill' returns per-layer plans within
+    the global budget and covers the hot layer at least as well."""
+    rng = np.random.default_rng(3)
+    f_hot = np.sort(rng.random(16))[::-1]; f_hot = f_hot / f_hot.sum() * 4
+    f_cold = np.full(16, 4 / 16.0)
+    stats = {0: (f_hot, 4), 1: (f_cold, 4)}
+    bps = {l: {"F": 100.0, "C": 40.0, "S": 30.0, "E": 10.0} for l in range(2)}
+    consts = {l: _consts() for l in range(2)}
+    pl = LivePlanner(1000.0, budget_split="waterfill")
+    plans = pl.plan(stats, bps, consts, weights={0: 4.0, 1: 1.0})
+    assert set(plans) == {0, 1}
+    total = sum(p.budget for p in plans.values())
+    assert total <= 1000.0 * (1 + 1e-9)
+    assert plans[0].budget >= plans[1].budget
+
+
+def test_plan_peer_shards_budgets_and_cold_shards():
+    rng = np.random.default_rng(4)
+    hot = np.sort(rng.random(8))[::-1]; hot = hot / hot.sum() * 3
+    cold = np.zeros(8)
+    caps = plan_peer_shards([hot, cold, hot], 400.0, 100.0, _consts())
+    assert len(caps) == 3
+    assert caps[1] == 0                         # cold shard gets nothing
+    assert 0 < caps[0] <= 4                     # within the byte budget
+    assert caps[0] == caps[2]                   # identical shards, same solve
+    # budget below one resident -> zero everywhere
+    assert plan_peer_shards([hot], 50.0, 100.0, _consts()) == [0]
+
+
+# ----------------------------------------------------------------------------
+# scheduler: the peer link is a serial resource
+# ----------------------------------------------------------------------------
+def test_simulate_peer_link_serializes():
+    def mk(uid, expert, state, peer=0.0):
+        return Task(expert=expert, tensor=0, state=state, p=1e-3,
+                    sm_cost=1e-4, e_cost=2e-5, dec_cost=5e-5, k_shards=2,
+                    uid=uid, peer_cost=peer)
+    # two peer-resident experts: their fetches queue on one link
+    t1, t2 = mk(0, 0, CState.P, peer=1e-3), mk(1, 1, CState.P, peer=1e-3)
+    tl = simulate([[t1, t2]], L=2)
+    assert tl.task_ready[0] == pytest.approx(1e-3)
+    assert tl.task_ready[1] == pytest.approx(2e-3)     # queued behind t1
+    # an F hit is untouched by the link
+    t3 = mk(2, 2, CState.F)
+    tl2 = simulate([[t1, t3]], L=2)
+    assert tl2.task_ready[2] == 0.0
+    # makespan covers link + the two expert executions serialized on GPU
+    assert tl.makespan >= 2e-3 + 1e-3
+
+
+# ----------------------------------------------------------------------------
+# server level: mesh_devices=1 ≡ baseline; cross_layer_depth="auto"
+# ----------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def moe_setup(tmp_path_factory):
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+def _run_steps(zs, cfg, n=6, seed=0):
+    B, S = 2, 8
+    caches = zs.init_cache(B, S + n)
+    rng = np.random.default_rng(seed)
+    logits = []
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    for i in range(n):
+        lg, caches = zs.decode_step(tok, caches, S + i)
+        logits.append(np.asarray(lg, np.float32))
+        tok = jnp.argmax(lg, -1).astype(jnp.int32).reshape(-1, 1)
+    return logits
+
+
+def test_mesh1_bitidentical_to_baseline(moe_setup):
+    """mesh_devices=1 must be exactly today's stack: bit-identical logits
+    and identical cache/plan telemetry (the pre-refactor regression)."""
+    cfg, params, d = moe_setup
+    kw = dict(L=2, mem_budget=2e6, replan_every=4)
+    base = ZipServer(params, cfg, d, **kw)
+    mesh1 = ZipServer(params, cfg, d, mesh_devices=1, **kw)
+    try:
+        la = _run_steps(base, cfg)
+        lb = _run_steps(mesh1, cfg)
+        for x, y in zip(la, lb):
+            assert np.array_equal(x, y)
+        assert mesh1.engine.peer is None
+        assert mesh1.engine.stack is DEFAULT_STACK
+        ca, cb = base.cache_summary(), mesh1.cache_summary()
+        assert ca == cb
+        pa, pb = base.plan_summary(), mesh1.plan_summary()
+        assert pa["layers"] == pb["layers"]
+        assert mesh1.peer_summary() == {"enabled": False}
+    finally:
+        base.close()
+        mesh1.close()
+
+
+def test_auto_depth_tunes_and_preserves_logits(moe_setup):
+    cfg, params, d = moe_setup
+    kw = dict(L=2, pool_sizes={"F": 1, "C": 1, "S": 2, "E": 2})
+    sync = ZipServer(params, cfg, d, cross_layer_depth=0, **kw)
+    auto = ZipServer(params, cfg, d, cross_layer_depth="auto", **kw)
+    try:
+        n = 3 * ZipServer._DEPTH_WINDOW
+        la = _run_steps(sync, cfg, n=n)
+        lb = _run_steps(auto, cfg, n=n)
+        for x, y in zip(la, lb):                 # depth is overlap-only:
+            assert np.array_equal(x, y)          # weights stay bit-exact
+        assert auto._auto_depth
+        ov = auto.overlap_summary()
+        assert 0 <= ov["cross_layer_depth"] <= len(auto._moe_layers)
+        for ev in ov["depth_events"]:
+            assert ev["from"] != ev["to"]
+            assert 0.0 <= ev["hidden_frac"] <= 1.0
+        assert sync.overlap_summary()["depth_events"] == []
+    finally:
+        sync.close()
+        auto.close()
+
+
+def test_auto_depth_raises_on_blocking():
+    """Unit-level: a window where most fetch time blocked must deepen the
+    horizon; a fully-hidden window must shallow it back."""
+    zs = ZipServer.__new__(ZipServer)            # no store needed
+    zs._auto_depth = True
+    zs.cross_layer_depth = 0
+    zs._depth_events = []
+    zs._depth_steps = 0
+    zs._depth_base = None
+    zs._moe_layers = [0, 1, 2]
+    zs.overlap_stats = {"fetch_wall_s": 0.0, "fetch_wait_s": 0.0,
+                        "blocking_s": 0.0}
+    for _ in range(ZipServer._DEPTH_WINDOW):
+        zs.overlap_stats["blocking_s"] += 0.01   # everything blocks
+        zs._tune_depth()
+    assert zs.cross_layer_depth == 1
+    assert len(zs._depth_events) == 1
+    for _ in range(ZipServer._DEPTH_WINDOW):     # fully hidden window
+        zs.overlap_stats["fetch_wall_s"] += 0.01
+        zs._tune_depth()
+    assert zs.cross_layer_depth == 0
+    # an all-hit window (no fetch time at all) changes nothing
+    for _ in range(ZipServer._DEPTH_WINDOW):
+        zs._tune_depth()
+    assert zs.cross_layer_depth == 0 and len(zs._depth_events) == 2

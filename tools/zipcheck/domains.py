@@ -7,7 +7,8 @@ Three entry domains (DESIGN.md "Threading model"):
 * ``decode`` — the engine caller's thread: every public method/function.
 
 Reachability is propagated over a conservative call graph of core/ +
-serving/: ``self.m()`` resolves through the class (with base-class lookup),
+serving/ + distributed/:
+``self.m()`` resolves through the class (with base-class lookup),
 ``Name()`` calls resolve to module-level functions and class constructors,
 and ``<recv>.m()`` resolves via (a) constructor-inferred attribute/local
 types, (b) a small documented receiver-name heuristic table (HINT_TYPES),
@@ -44,6 +45,11 @@ HINT_TYPES: Dict[str, Tuple[str, ...]] = {
     "codec": ("ZlibCodec", "ZstdCodec"),
     "profiler": ("GemmProfiler",),
     "zip": ("ZipServer",),
+    # peer-HBM tier (P): mesh slabs + collective ledger + link model
+    "ledger": ("CollectiveLedger",),
+    "link": ("LinkProfiler",),
+    "peer": ("_PeerContext",),
+    "mesh_slab": ("PeerSlabMesh",),
 }
 # self.<attr>(...) callables that are function-valued attributes, not
 # methods (bound in __init__); mapped to their usual target.
@@ -238,7 +244,8 @@ def _propagate(g: _Graph) -> Dict[FuncKey, Set[str]]:
 def check(sources: Sequence[Source]) -> List[Finding]:
     scoped = [s for s in sources
               if "/core/" in s.rel.replace("\\", "/")
-              or "/serving/" in s.rel.replace("\\", "/")]
+              or "/serving/" in s.rel.replace("\\", "/")
+              or "/distributed/" in s.rel.replace("\\", "/")]
     g = _Graph(scoped or sources)
     domains = _propagate(g)
 
