@@ -205,7 +205,56 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
                  "profiled_p_cross_layer"):
         rows.add(f"serving_real/{name}/tpot_vs_constant_single", 0.0,
                  f"{base / max(tpots[name], 1e-12):.3f}x")
+    run_faults(rows, params, cfg, d)
     run_peer(rows)
+
+
+def run_faults(rows: Rows, params, cfg, d, *, n_requests: int = 4,
+               max_new: int = 6):
+    """Failure-model cost rows (DESIGN.md §Failure model): the per-chunk
+    CRC verification tax (``checksum_on`` vs ``clean``, target <2% TPOT)
+    and end-to-end recovery overhead with a seeded FaultPlan active
+    (``injected_faults``: transient read corruption + one killed worker,
+    all recovered — same outputs, telemetry shows the repair work)."""
+    from repro.core.faults import FaultPlan
+    from repro.serving.server import BatchServer
+    from repro.serving.zipserve import ZipServer
+
+    rng = np.random.default_rng(0)
+    pools = {"F": 2, "C": 2, "S": 2, "E": 2}
+    tpot = {}
+    for name, kw in (
+            ("clean", dict(verify=False)),
+            ("checksum_on", dict(verify=True)),
+            ("injected_faults", dict(faults=FaultPlan.parse(
+                "bitflip:p=0.005;worker_kill:count=1,after=200;seed=11")))):
+        zs = ZipServer(params, cfg, d, L=4, prefetch=True,
+                       ffn_impl="grouped", pool_sizes=dict(pools), **kw)
+        srv = BatchServer(None, cfg, max_batch=2, max_len=64, zip_server=zs)
+        for _ in range(n_requests):
+            srv.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                       max_new_tokens=max_new)
+        srv.run()
+        m = srv.metrics()
+        fs = zs.fault_summary()
+        st = fs["store"]
+        tpot[name] = m["mean_tpot_s"]
+        rows.add(f"serving_real/faults/{name}/mean_tpot",
+                 m["mean_tpot_s"] * 1e6,
+                 f"throughput={m['throughput_tok_s']:.1f}tok/s "
+                 f"verify={st['verify']} retries={st['read_retries']} "
+                 f"checksum_failures={st['checksum_failures']} "
+                 f"quarantined={st['quarantined']} "
+                 f"worker_restarts={fs['worker_restarts']} "
+                 f"injected={fs.get('injected', {}).get('total', 0)} "
+                 f"n_failed={m['n_failed']}")
+        zs.close()
+    rows.add("serving_real/faults/checksum_overhead", 0.0,
+             f"{tpot['checksum_on'] / max(tpot['clean'], 1e-12) - 1:+.2%} "
+             "TPOT vs clean (target <2%)")
+    rows.add("serving_real/faults/injection_overhead", 0.0,
+             f"{tpot['injected_faults'] / max(tpot['clean'], 1e-12) - 1:+.2%}"
+             " TPOT vs clean (recovered transient faults)")
 
 
 _PEER_SCRIPT = """

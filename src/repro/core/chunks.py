@@ -12,13 +12,26 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import bitfield
 from repro.core.codec import Codec
+
+# Manifest format versions:
+#   1 — original layout (no checksums); still readable, verification off.
+#   2 — adds per-chunk CRCs (sm_crc + e_crcs per tensor) and the "crc_algo"
+#       field.  stdlib zlib.crc32 stands in for crc32c (no new deps; same
+#       error-detection class), mirroring zlib-for-LZ4HC in core/codec.py.
+MANIFEST_VERSION = 2
+CRC_ALGO = "crc32"
+
+
+def chunk_crc(data: bytes) -> int:
+    return zlib.crc32(data) & 0xFFFFFFFF
 
 
 @dataclass
@@ -31,6 +44,9 @@ class TensorMeta:
     e_offsets: List[int]
     e_sizes: List[int]               # compressed sizes
     e_raw_sizes: List[int]           # decompressed sizes (shard lengths)
+    # v2: per-chunk checksums over the on-disk bytes (None in v1 manifests)
+    sm_crc: Optional[int] = None
+    e_crcs: Optional[List[int]] = None
 
     def to_json(self):
         return dataclasses.asdict(self)
@@ -88,17 +104,20 @@ def pack_group(tensors: Dict[str, np.ndarray], codec: Codec, k_shards: int
         exp, sm = bitfield.decompose_np(np.asarray(arr))
         sm_off = len(blob)
         blob += sm.tobytes()
-        e_offs, e_sizes, e_raw = [], [], []
+        e_offs, e_sizes, e_raw, e_crcs = [], [], [], []
         for shard in bitfield.shard_plane(exp, k_shards):
             comp = codec.compress(shard.tobytes())
             e_offs.append(len(blob))
             blob += comp
             e_sizes.append(len(comp))
             e_raw.append(shard.size)
+            e_crcs.append(chunk_crc(comp))
         metas.append(TensorMeta(
             name=name, shape=tuple(arr.shape), n_elems=int(exp.size),
             sm_offset=sm_off, sm_size=int(sm.size),
-            e_offsets=e_offs, e_sizes=e_sizes, e_raw_sizes=e_raw))
+            e_offsets=e_offs, e_sizes=e_sizes, e_raw_sizes=e_raw,
+            sm_crc=chunk_crc(bytes(blob[sm_off:sm_off + sm.size])),
+            e_crcs=e_crcs))
     return bytes(blob), metas
 
 
@@ -116,6 +135,7 @@ def unpack_tensor(blob_reader, meta: TensorMeta, codec: Codec) -> np.ndarray:
 def manifest_to_json(groups: List[GroupMeta], codec_name: str, k_shards: int,
                      extra: dict = None) -> str:
     return json.dumps({
+        "version": MANIFEST_VERSION, "crc_algo": CRC_ALGO,
         "codec": codec_name, "k_shards": k_shards,
         "extra": extra or {},
         "groups": [g.to_json() for g in groups],
@@ -124,5 +144,13 @@ def manifest_to_json(groups: List[GroupMeta], codec_name: str, k_shards: int,
 
 def manifest_from_json(s: str):
     d = json.loads(s)
+    version = d.get("version", 1)        # pre-checksum manifests carry none
+    if version > MANIFEST_VERSION:
+        raise ValueError(
+            f"manifest format version {version} is newer than supported "
+            f"({MANIFEST_VERSION}); rebuild the store or upgrade")
+    if version >= 2 and d.get("crc_algo", CRC_ALGO) != CRC_ALGO:
+        raise ValueError(f"unsupported manifest crc_algo "
+                         f"{d.get('crc_algo')!r} (expected {CRC_ALGO!r})")
     return (d["codec"], d["k_shards"], d.get("extra", {}),
             [GroupMeta.from_json(g) for g in d["groups"]])

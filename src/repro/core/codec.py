@@ -17,6 +17,13 @@ except ImportError:  # pragma: no cover
     _HAVE_ZSTD = False
 
 
+class CodecError(ValueError):
+    """Decompression failed — corrupt or truncated payload.  Backends
+    normalize their library-specific errors (``zlib.error``,
+    ``zstd.ZstdError``) to this so the engine's retry/fallback path can
+    tell recoverable data corruption apart from programming errors."""
+
+
 class Codec:
     name: str = "raw"
 
@@ -51,7 +58,10 @@ class ZlibCodec(Codec):
         return zlib.compress(data, self.level)
 
     def decompress(self, data: bytes, size: int) -> bytes:
-        return zlib.decompress(data)
+        try:
+            return zlib.decompress(data)
+        except zlib.error as e:
+            raise CodecError(f"zlib: {e}") from e
 
 
 class ZstdCodec(Codec):
@@ -74,7 +84,10 @@ class ZstdCodec(Codec):
         return self._ctx().c.compress(data)
 
     def decompress(self, data: bytes, size: int) -> bytes:
-        return self._ctx().d.decompress(data, max_output_size=size)
+        try:
+            return self._ctx().d.decompress(data, max_output_size=size)
+        except zstd.ZstdError as e:
+            raise CodecError(f"zstd: {e}") from e
 
     def decompress_into(self, data: bytes, out, size: int) -> int:
         """Stream-read the frame straight into `out` (no intermediate
@@ -87,15 +100,19 @@ class ZstdCodec(Codec):
         import io
         mv = memoryview(out)
         n = 0
-        with self._ctx().d.stream_reader(io.BytesIO(data)) as r:
-            while n < size:
-                got = r.readinto(mv[n:size])
-                if not got:
-                    break
-                n += got
-            if n == size and r.read(1):
-                raise ValueError(
-                    f"zstd frame decompresses past the expected {size} bytes")
+        try:
+            with self._ctx().d.stream_reader(io.BytesIO(data)) as r:
+                while n < size:
+                    got = r.readinto(mv[n:size])
+                    if not got:
+                        break
+                    n += got
+                if n == size and r.read(1):
+                    raise CodecError(
+                        f"zstd frame decompresses past the expected "
+                        f"{size} bytes")
+        except zstd.ZstdError as e:
+            raise CodecError(f"zstd: {e}") from e
         return n
 
 

@@ -80,6 +80,8 @@ import numpy as np
 
 from repro.core import bitfield, checkz
 from repro.core.cache import HierarchicalCache, LiveFlatCache, pool_summary
+from repro.core.faults import (FetchError, FetchTimeout, PeerLinkError,
+                               WorkerKilled)
 from repro.core.scheduler import build_blocks
 from repro.core.slab import DeviceSlabCache, PeerRef, PeerSlabMesh, SlotRef
 from repro.core.states import CState, Task
@@ -184,6 +186,16 @@ class _FetchJob:
         self.wall_reported = 0.0
         self.collected: set = set()    # (layer, e) already admitted to cache
         self.unpinned: set = set()     # demand pins this job already released
+        # failure routing (guarded-by: engine._cv): an expert whose chunks
+        # could not be fetched/recovered after retries+fallback is marked
+        # here; its unfinished uids count as done so the job's events still
+        # fire (no silent hangs) and _collect raises/drops per class
+        self.failed: Dict[Tuple[int, int], str] = {}   # (l, e) -> reason
+        self.failed_uids: set = set()
+        # (uid, shard) pairs already decompressed — dedups the watchdog's
+        # requeue of a dead worker's in-flight heap items
+        self.dec_done: set = set()
+        self.spec_drop_counted: set = set()   # failed spec keys tallied once
         self.stats = FetchStats()
         self.done_ev = threading.Event()
         self.demand_ev = threading.Event()
@@ -239,21 +251,39 @@ class FetchHandle:
             return {e: w for (_, e), w in out.items()}
         return out
 
-    def result(self) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
-        """Weights of the demand experts (all experts for single-class jobs)."""
+    def _wait(self, ev: threading.Event, deadline_s: Optional[float]):
+        """Deadline-bounded event wait.  ``deadline_s=None`` uses the
+        engine's ``fetch_deadline_s``; expiry raises :class:`FetchTimeout`
+        instead of blocking forever on a dead pipeline."""
+        eng = self._engine
+        dl = eng.fetch_deadline_s if deadline_s is None else deadline_s
+        t0 = time.perf_counter()
+        ok = ev.wait(dl)
+        self.wait_s = time.perf_counter() - t0
+        if not ok:
+            with eng._cv:
+                eng.deadline_hits += 1
+            raise FetchTimeout(
+                f"fetch job {self._job.seq} (layer {self._job.layer}) "
+                f"incomplete after {dl}s")
+
+    def result(self, deadline_s: Optional[float] = None
+               ) -> Tuple[Dict[int, Dict[str, np.ndarray]], FetchStats]:
+        """Weights of the demand experts (all experts for single-class
+        jobs).  Raises :class:`FetchError` when a demand expert failed
+        after retries, :class:`FetchTimeout` past the deadline."""
         job = self._job
         if self._result is None:
             subset = sorted(job.demand_keys) if job.demand_keys else \
                 list(job.expert_keys)
             ev = job.demand_ev if job.demand_keys else job.done_ev
-            t0 = time.perf_counter()
-            ev.wait()
-            self.wait_s = time.perf_counter() - t0
+            self._wait(ev, deadline_s)
             out, stats = self._engine._collect(job, subset)
             self._result = (self._flatten(out), stats)
         return self._result
 
-    def result_subset(self, experts: Sequence[int], layer: Optional[int] = None
+    def result_subset(self, experts: Sequence[int], layer: Optional[int] = None,
+                      deadline_s: Optional[float] = None
                       ) -> Tuple[Dict[int, Dict[str, np.ndarray]],
                                  FetchStats]:
         """Weights of just `experts` of `layer` (default: the primary
@@ -267,28 +297,38 @@ class FetchHandle:
         want = {(l, int(e)) for e in experts}
         assert want <= set(job.expert_keys), (want, job.expert_keys)
         eng = self._engine
+        dl = eng.fetch_deadline_s if deadline_s is None else deadline_s
         t0 = time.perf_counter()
         with eng._cv:
             def ready():
+                # failed uids never land: treat them as ready so the wait
+                # ends and _collect raises the structured error instead
                 return all(job.metas[t.uid] in job.done_tensors
+                           or t.uid in job.failed_uids
                            for t in job.tasks if t.expert_key in want)
             while not (job.done_ev.is_set() or ready()):
+                if dl is not None and time.perf_counter() - t0 > dl:
+                    eng.deadline_hits += 1
+                    raise FetchTimeout(
+                        f"fetch job {job.seq} subset {sorted(want)} "
+                        f"incomplete after {dl}s")
                 eng._cv.wait(0.1)
         self.wait_s = time.perf_counter() - t0
         out, stats = eng._collect(job, sorted(want))
         return self._flatten(out), stats
 
-    def spec_result(self) -> Tuple[Dict, FetchStats]:
+    def spec_result(self, deadline_s: Optional[float] = None
+                    ) -> Tuple[Dict, FetchStats]:
         """Weights of ALL the job's experts (demand + speculative tail);
         waits for the whole job.  Already-collected experts are returned
         without re-admission; reported stats cover only the increment past
-        earlier collect phases."""
+        earlier collect phases.  Never raises for failed experts —
+        speculative failures are dropped and counted (``spec_drops``)."""
         job = self._job
         if self._spec_result is None:
-            t0 = time.perf_counter()
-            job.done_ev.wait()
-            self.wait_s = time.perf_counter() - t0
-            out, stats = self._engine._collect(job, list(job.expert_keys))
+            self._wait(job.done_ev, deadline_s)
+            out, stats = self._engine._collect(job, list(job.expert_keys),
+                                               strict=False)
             self._spec_result = (self._flatten(out), stats)
         return self._spec_result
 
@@ -301,7 +341,10 @@ class ZipMoEEngine:
                  recover_fn: Optional[Callable] = None, delta: int = 1,
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
                  flat_policy: str = "lru", freq_decay: float = 1.0,
-                 device_cache: bool = False, peer_mesh=None):
+                 device_cache: bool = False, peer_mesh=None,
+                 fetch_deadline_s: Optional[float] = 120.0,
+                 worker_stall_s: Optional[float] = None,
+                 watchdog_interval_s: float = 0.05):
         assert cache_mode in ("hier", "flat")
         assert 0.0 < freq_decay <= 1.0, freq_decay
         assert not (device_cache and recover_fn is not None), \
@@ -409,13 +452,58 @@ class ZipMoEEngine:
         self._jobs: Dict[int, _FetchJob] = {}      # guarded-by: _cv
         self._seq = itertools.count()
         self._stop = False                         # guarded-by: _cv
-        self._threads = [threading.Thread(target=self._io_loop, daemon=True,
-                                          name="zipmoe-io")]
-        self._threads += [threading.Thread(target=self._dec_loop, daemon=True,
-                                           name=f"zipmoe-dec{i}")
-                          for i in range(self.L)]
-        for th in self._threads:
-            th.start()
+        # ---- failure model (core/faults; DESIGN.md §Failure model) -------
+        # every handle wait is bounded (None opts back into unbounded);
+        # the watchdog respawns dead workers and requeues their in-flight
+        # work; worker_stall_s additionally abandons *stuck* workers
+        # (None: off — a stalled read is indistinguishable from a slow one)
+        self.fetch_deadline_s = fetch_deadline_s
+        self.worker_stall_s = worker_stall_s
+        self.watchdog_interval_s = watchdog_interval_s
+        self.faults = getattr(store, "faults", None)   # injection shim
+        self.worker_restarts = 0                   # guarded-by: _cv
+        self.deadline_hits = 0                     # guarded-by: _cv
+        self.spec_drops = 0                        # guarded-by: _cv
+        self.fallback_loads = 0                    # guarded-by: _cv
+        self.peer_link_failures = 0                # guarded-by: _cv
+        self.failed_experts = 0                    # guarded-by: _cv
+        # per-worker-slot generation counters: the watchdog bumps a slot's
+        # gen when replacing its thread, and an abandoned thread exits at
+        # its next loop top instead of double-draining the queues
+        self._worker_gen: Dict[str, int] = {
+            "io": 0, **{f"dec{i}": 0 for i in range(self.L)}}
+        self._heartbeat: Dict[str, float] = {}     # guarded-by: _cv
+        # in-flight work the watchdog requeues on worker death: the I/O
+        # thread's job stack (nested urgent jobs append) and each dec
+        # worker's currently-held heap item
+        self._io_inflight: List[_FetchJob] = []    # guarded-by: _cv
+        self._dec_inflight: Dict[str, Tuple] = {}  # guarded-by: _cv
+        self._io_thread = self._spawn_worker("io")
+        self._dec_threads = [self._spawn_worker(f"dec{i}")
+                             for i in range(self.L)]
+        self._watchdog = threading.Thread(target=self._watchdog_loop,
+                                          daemon=True, name="zipmoe-watchdog")
+        self._watchdog.start()
+
+    def _spawn_worker(self, slot: str) -> threading.Thread:
+        gen = self._worker_gen[slot]
+        if slot == "io":
+            body, args = self._io_loop, (gen,)
+        else:
+            body, args = self._dec_loop, (int(slot[3:]), gen)
+
+        # worker-exc-routed: loop bodies route Exception into FetchError
+        def run():
+            try:
+                body(*args)
+            except WorkerKilled:
+                # injected crash (FaultPlan): die without the excepthook
+                # traceback — the watchdog detects death via is_alive()
+                pass
+
+        th = threading.Thread(target=run, daemon=True, name=f"zipmoe-{slot}")
+        th.start()
+        return th
 
     def shutdown(self):
         """Stop the pool.  In-flight jobs are finished first; the store's
@@ -423,7 +511,7 @@ class ZipMoEEngine:
         with self._cv:
             self._stop = True
             self._cv.notify_all()
-        for th in self._threads:
+        for th in [self._io_thread, *self._dec_threads, self._watchdog]:
             th.join(timeout=5.0)
         close = getattr(self.store, "close", None)
         if close is not None:
@@ -662,6 +750,7 @@ class ZipMoEEngine:
                 slab = PeerSlabMesh(layer, shapes, blk, self.peer.mesh,
                                     ledger=self.peer.ledger,
                                     link=self.peer.link)
+                slab.faults = self.faults
                 slab.set_dev_caps(self.peer.dev_caps.get(layer)
                                   or self._even_dev_caps(cap))
                 slabs[layer] = slab
@@ -677,11 +766,18 @@ class ZipMoEEngine:
 
     def _peer_fetch(self, layer: int, expert: int) -> Optional["ExpertPayload"]:
         """Collective-fetch a peer-slab resident to the compute device and
-        wrap it as an F-like payload (full device tensors)."""
+        wrap it as an F-like payload (full device tensors).  A failed link
+        (injected or real) returns None — the caller falls back to the
+        local store path priced by the LinkProfiler."""
         slab = self._peer_slab(layer)
         if slab is None or expert not in slab:
             return None
-        got = slab.fetch(expert)
+        try:
+            got = slab.fetch(expert)
+        except PeerLinkError:
+            with self._cv:
+                self.peer_link_failures += 1
+            return None
         if got is None:
             return None
         g = self.store.groups[(layer, expert)]
@@ -798,6 +894,26 @@ class ZipMoEEngine:
                         sorted(self.peer.slabs.items()) if s is not None}
         return out
 
+    def fault_summary(self) -> Dict[str, object]:
+        """Failure-model telemetry (DESIGN.md §Failure model): store
+        integrity counters (retries/checksum failures/quarantines), the
+        engine's watchdog/deadline/degradation counters, peer-link
+        failures, and — when a FaultPlan is active — its fired counts."""
+        with self._cv:
+            out: Dict[str, object] = {
+                "worker_restarts": self.worker_restarts,
+                "deadline_hits": self.deadline_hits,
+                "spec_drops": self.spec_drops,
+                "fallback_loads": self.fallback_loads,
+                "peer_link_failures": self.peer_link_failures,
+                "failed_experts": self.failed_experts,
+            }
+        store_fs = getattr(self.store, "fault_summary", None)
+        out["store"] = store_fs() if store_fs is not None else {}
+        if self.faults is not None:
+            out["injected"] = self.faults.summary()
+        return out
+
     @staticmethod
     def _full_payload_usable(pl: "ExpertPayload") -> bool:
         """No stale refs: a freed/reused slot — device slab or peer row —
@@ -825,7 +941,12 @@ class ZipMoEEngine:
             return None
         try:                                   # device (jax) array
             return bitfield.decompose_np(np.asarray(arr))[1].tobytes()
-        except Exception:                      # pragma: no cover
+        except (TypeError, ValueError):        # pragma: no cover
+            # np.asarray conversion failures only (an object that is not
+            # array-like, or a deleted/donated device buffer): anything
+            # else — e.g. a stale SlotRef slipping through the isinstance
+            # arms above — is a real bug and must propagate, not silently
+            # become a dropped demotion
             return None
 
     def _demote_payload(self, payload, pool: str) -> Optional["ExpertPayload"]:
@@ -1520,20 +1641,44 @@ class ZipMoEEngine:
         return FetchHandle(self, job)
 
     # ---- persistent I/O thread -------------------------------------------
-    def _io_loop(self):
+    def _io_loop(self, gen: int = 0):
         while True:
             with self._cv:
-                while not (self._io_urgent or self._io_spec) and not self._stop:
+                while not (self._io_urgent or self._io_spec) \
+                        and not self._stop \
+                        and self._worker_gen["io"] == gen:
                     self._cv.wait()
+                if self._worker_gen["io"] != gen:
+                    return             # replaced by the watchdog: stand down
                 if not (self._io_urgent or self._io_spec) and self._stop:
                     return
                 job = (self._io_urgent.popleft() if self._io_urgent
                        else self._io_spec.popleft())
                 self._io_busy = True
-            self._io_run_job(job)
+                self._heartbeat["io"] = time.monotonic()
+            self._io_run_tracked(job)
             with self._cv:
                 self._io_busy = False
+                self._heartbeat["io"] = time.monotonic()
                 self._cv.notify_all()
+
+    def _io_run_tracked(self, job: _FetchJob):
+        """Run one job on the I/O thread with failure routing: the job is
+        registered in ``_io_inflight`` for the watchdog's requeue, an
+        ``Exception`` fails the job's remaining experts (structured
+        FetchError — never a silently dead thread), and ``WorkerKilled``
+        (BaseException) escapes so the thread really dies."""
+        with self._cv:
+            self._io_inflight.append(job)
+        try:
+            self._io_run_job(job)
+        except Exception as exc:  # worker-exc-routed
+            self._fail_job_remainder(job, exc)
+        # not reached on WorkerKilled: the job stays registered and the
+        # watchdog requeues it when it replaces the dead thread
+        with self._cv:
+            if job in self._io_inflight:
+                self._io_inflight.remove(job)
 
     def _io_run_job(self, job: _FetchJob):
         for bi, blk in enumerate(job.blocks):
@@ -1546,30 +1691,76 @@ class ZipMoEEngine:
                               if self._io_urgent else None)
                 if urgent is None:
                     break
-                self._io_run_job(urgent)
+                self._io_run_tracked(urgent)
             for t in blk:
                 if t.needs_e_io:
-                    l, e, tidx = job.metas[t.uid]
-                    for k in range(t.k_shards):
-                        data = self.store.read_e((l, e), tidx, k)
-                        with self._cv:
-                            job.stats.io_bytes += len(data)
-                            job.e_data[(t.uid, k)] = data
-                            heapq.heappush(
-                                self._dec_ready,
-                                (job.urg[t.uid], job.seq, job.prio[t.uid],
-                                 t.uid, k))
-                            self._cv.notify_all()
+                    self._io_read_e(job, t)
             for t in blk:
                 if t.needs_sm_io:
-                    l, e, tidx = job.metas[t.uid]
-                    data = self.store.read_sm((l, e), tidx)
-                    with self._cv:
-                        job.stats.io_bytes += len(data)
-                        job.sm_data[t.uid] = data
-                        ready = self._claim_if_ready(job, t)
-                    if ready:              # decompression already finished
-                        self._finish_tensor(job, t)
+                    self._io_read_sm(job, t)
+
+    def _io_read_e(self, job: _FetchJob, t: Task):
+        l, e, tidx = job.metas[t.uid]
+        with self._cv:
+            if (l, e) in job.failed or t.uid in job.claimed:
+                return
+            self._heartbeat["io"] = time.monotonic()
+        try:
+            if self.faults is not None:
+                self.faults.worker("io")
+            for k in range(t.k_shards):
+                with self._cv:
+                    if (t.uid, k) in job.e_data:   # watchdog-requeue dedup
+                        continue
+                data = self.store.read_e((l, e), tidx, k)
+                with self._cv:
+                    job.stats.io_bytes += len(data)
+                    job.e_data[(t.uid, k)] = data
+                    heapq.heappush(
+                        self._dec_ready,
+                        (job.urg[t.uid], job.seq, job.prio[t.uid],
+                         t.uid, k))
+                    self._cv.notify_all()
+        except Exception as exc:  # worker-exc-routed
+            self._io_fallback(job, t, exc)
+
+    def _io_read_sm(self, job: _FetchJob, t: Task):
+        l, e, tidx = job.metas[t.uid]
+        with self._cv:
+            if (l, e) in job.failed or t.uid in job.claimed:
+                return
+            have = t.uid in job.sm_data        # watchdog-requeue dedup
+            self._heartbeat["io"] = time.monotonic()
+        try:
+            if not have:
+                if self.faults is not None:
+                    self.faults.worker("io")
+                data = self.store.read_sm((l, e), tidx)
+                with self._cv:
+                    job.stats.io_bytes += len(data)
+                    job.sm_data[t.uid] = data
+            with self._cv:
+                ready = self._claim_if_ready(job, t)
+            if ready:                  # decompression already finished
+                self._finish_tensor(job, t)
+        except Exception as exc:  # worker-exc-routed
+            self._io_fallback(job, t, exc)
+
+    def _io_fallback(self, job: _FetchJob, t: Task, exc: Exception):
+        """The exact-range chunk path failed one tensor (integrity retries
+        exhausted, chunk quarantined): fall back to a full verified
+        re-read via the store's bypass path; if that fails too, fail the
+        expert — never serve unverified bytes, never hang."""
+        l, e, tidx = job.metas[t.uid]
+        try:
+            arr = self.store.load_tensor((l, e), tidx)
+        except Exception as exc2:
+            self._fail_expert(job, (l, e),
+                              f"{exc!r}; fallback re-read: {exc2!r}")
+            return
+        with self._cv:
+            self.fallback_loads += 1
+        self._finish_tensor_direct(job, t, arr)
 
     # ---- persistent decompression workers --------------------------------
     def _drained_locked(self) -> bool:  # holds-lock: _cv
@@ -1578,15 +1769,25 @@ class ZipMoEEngine:
         return (self._stop and not self._dec_ready and not self._io_urgent
                 and not self._io_spec and not self._io_busy)
 
-    def _dec_loop(self):
+    def _dec_loop(self, widx: int = 0, gen: int = 0):
+        slot = f"dec{widx}"
         while True:
             with self._cv:
-                while not self._dec_ready and not self._drained_locked():
+                while not self._dec_ready and not self._drained_locked() \
+                        and self._worker_gen[slot] == gen:
                     self._cv.wait()
+                if self._worker_gen[slot] != gen:
+                    return             # replaced by the watchdog: stand down
                 if not self._dec_ready:
                     return
-                _, seq, _, uid, k = heapq.heappop(self._dec_ready)
-                job = self._jobs[seq]
+                item = heapq.heappop(self._dec_ready)
+                _, seq, _, uid, k = item
+                job = self._jobs.get(seq)
+                if job is None or (uid, k) in job.dec_done \
+                        or uid in job.claimed or uid in job.failed_uids:
+                    continue           # finished/failed elsewhere (requeue)
+                self._dec_inflight[slot] = item
+                self._heartbeat[slot] = time.monotonic()
                 data = job.e_data[(uid, k)]
                 l, e, tidx = job.metas[uid]
                 buf = job.exp_buf.get(uid)
@@ -1594,17 +1795,163 @@ class ZipMoEEngine:
                     tm = self.store.groups[(l, e)].tensors[tidx]
                     buf = job.exp_buf[uid] = np.empty(tm.n_elems, np.uint8)
             t = job.task_by_uid[uid]
-            # shards land at disjoint shard_bounds offsets of one
-            # preallocated plane — concurrent workers never overlap, and
-            # _finish_tensor consumes the plane without a concatenate
-            self.store.decompress_e_into((l, e), tidx, k, data, buf)
+            try:
+                if self.faults is not None:
+                    self.faults.worker(slot)
+                # shards land at disjoint shard_bounds offsets of one
+                # preallocated plane — concurrent workers never overlap, and
+                # _finish_tensor consumes the plane without a concatenate
+                try:
+                    self.store.decompress_e_into((l, e), tidx, k, data, buf)
+                    ok = True
+                except Exception as dec_exc:
+                    ok = self._dec_recover(job, t, k, buf, dec_exc)
+                if ok:
+                    with self._cv:
+                        job.dec_done.add((uid, k))
+                        job.dec_needed[uid] -= 1
+                        job.stats.dec_ops += 1
+                        ready = self._claim_if_ready(job, t)
+                        self._cv.notify_all()
+                    if ready:
+                        self._finish_tensor(job, t)
+            except Exception as exc:  # worker-exc-routed
+                self._fail_expert(job, (l, e), repr(exc))
             with self._cv:
-                job.dec_needed[uid] -= 1
-                job.stats.dec_ops += 1
-                ready = self._claim_if_ready(job, t)
-                self._cv.notify_all()
-            if ready:
-                self._finish_tensor(job, t)
+                self._dec_inflight.pop(slot, None)
+
+    def _dec_recover(self, job: _FetchJob, t: Task, k: int, buf, exc):
+        """A shard failed to decompress (corrupt payload): re-read its
+        E-chunk (verified) and retry once; then fall back to a full
+        tensor re-read; then fail the expert.  Returns True when the
+        shard landed in ``buf`` and normal bookkeeping should proceed."""
+        l, e, tidx = job.metas[t.uid]
+        try:
+            data = self.store.read_e((l, e), tidx, k)
+            with self._cv:
+                job.stats.io_bytes += len(data)
+                job.e_data[(t.uid, k)] = data
+            self.store.decompress_e_into((l, e), tidx, k, data, buf)
+            return True
+        except Exception:
+            pass
+        self._io_fallback(job, t, exc)
+        return False
+
+    # ---- failure routing + watchdog --------------------------------------
+    def _fail_expert(self, job: _FetchJob, key: Tuple[int, int], reason: str):
+        """Mark every unfinished tensor of ``key`` failed: unfinished uids
+        count as done so the job's events fire (waiters wake instead of
+        hanging) and ``_collect`` raises/drops the expert per class."""
+        l, e = key
+        with self._cv:
+            marked = False
+            for t in job.tasks:
+                if t.expert_key != key:
+                    continue
+                u = t.uid
+                if job.metas[u] in job.done_tensors or u in job.failed_uids:
+                    continue
+                if u in job.claimed:
+                    continue           # mid-recovery: let that one finish
+                job.failed_uids.add(u)
+                job.claimed.add(u)     # nothing should pick it up anymore
+                marked = True
+                job.n_done += 1
+                if key in job.demand_keys:
+                    job.demand_done += 1
+            if marked and key not in job.failed:
+                job.failed[key] = reason
+                self.failed_experts += 1
+            if job.demand_done == job.demand_total \
+                    and not job.demand_ev.is_set():
+                job.t_demand_ready = time.perf_counter()
+                job.demand_ev.set()
+            if job.n_done == job.n_total and not job.done_ev.is_set():
+                job.t_ready = time.perf_counter()
+                self._jobs.pop(job.seq, None)
+                job.done_ev.set()
+            self._cv.notify_all()
+
+    def _fail_job_remainder(self, job: _FetchJob, exc: Exception):
+        """Route an unexpected worker-loop exception into the job's
+        FetchError state: every expert with unfinished tensors fails."""
+        for key in dict.fromkeys(t.expert_key for t in job.tasks):
+            self._fail_expert(job, key, repr(exc))
+
+    def _watchdog_loop(self):
+        """Detect dead (or, with ``worker_stall_s``, stuck) workers,
+        respawn them, and requeue their in-flight work.  Requeues are
+        idempotent: landed reads (``e_data``/``sm_data``), decompressed
+        shards (``dec_done``) and finished tensors are all skipped."""
+        while True:
+            try:
+                with self._cv:
+                    if self._stop:
+                        return
+                    self._cv.wait(self.watchdog_interval_s)
+                    if self._stop:
+                        return
+                    self._check_workers_locked()
+            except Exception:
+                # the watchdog is the recovery mechanism of last resort: a
+                # bug in a check must not silently kill it (workers would
+                # then die unreplaced) — skip the tick and keep watching
+                continue
+
+    def _check_workers_locked(self):  # holds-lock: _cv
+        now = time.monotonic()
+        stall = self.worker_stall_s
+
+        def stuck(slot: str, busy: bool) -> bool:
+            return (stall is not None and busy
+                    and now - self._heartbeat.get(slot, now) > stall)
+
+        if not self._io_thread.is_alive() or stuck("io", self._io_busy):
+            self.worker_restarts += 1
+            self._worker_gen["io"] += 1
+            for job in reversed(self._io_inflight):
+                self._requeue_io_locked(job)
+            self._io_inflight.clear()
+            self._io_busy = False
+            self._io_thread = self._spawn_worker("io")
+            self._cv.notify_all()
+        for i in range(self.L):
+            slot = f"dec{i}"
+            if self._dec_threads[i].is_alive() \
+                    and not stuck(slot, slot in self._dec_inflight):
+                continue
+            self.worker_restarts += 1
+            self._worker_gen[slot] += 1
+            item = self._dec_inflight.pop(slot, None)
+            if item is not None:
+                _, seq, _, uid, k = item
+                job = self._jobs.get(seq)
+                if job is not None and (uid, k) not in job.dec_done \
+                        and uid not in job.failed_uids:
+                    if uid in job.claimed \
+                            and job.metas[uid] not in job.done_tensors:
+                        job.claimed.discard(uid)
+                    heapq.heappush(self._dec_ready, item)
+            self._dec_threads[i] = self._spawn_worker(slot)
+            self._cv.notify_all()
+
+    def _requeue_io_locked(self, job: _FetchJob):  # holds-lock: _cv
+        """Put a dead I/O thread's in-flight job back at the front of its
+        queue.  Claims whose tensors never finished are released so the
+        respawned thread (or a dec worker) can redo them; duplicate
+        finishes are deduped in ``_mark_tensor_done``."""
+        if job.done_ev.is_set():
+            return
+        for t in job.tasks:
+            u = t.uid
+            if u in job.claimed and job.metas[u] not in job.done_tensors \
+                    and u not in job.failed_uids:
+                job.claimed.discard(u)
+        if job in self._io_urgent or job in self._io_spec:
+            return
+        (self._io_spec if job.speculative else
+         self._io_urgent).appendleft(job)
 
     # ---- recovery + completion -------------------------------------------
     def _claim_if_ready(self, job: _FetchJob, t: Task) -> bool:  # holds-lock: _cv
@@ -1622,10 +1969,28 @@ class ZipMoEEngine:
         """Bit-splice recovery, off the pool lock (claimed by one thread)."""
         u = t.uid
         l, e, tidx = job.metas[u]
-        exp = job.exp_buf.pop(u)       # fully assembled (dec_needed hit 0)
+        with self._cv:
+            exp = job.exp_buf.pop(u, None)  # fully assembled (dec_needed 0)
+        if exp is None:
+            return        # duplicate claim after a watchdog requeue: done
         tm = self.store.groups[(l, e)].tensors[tidx]
         arr = self.recover(exp, job.sm_data[u], tm.shape)
+        self._mark_tensor_done(job, t, arr)
+
+    def _finish_tensor_direct(self, job: _FetchJob, t: Task, arr):
+        """Record a tensor recovered OUTSIDE the chunk pipeline (the full
+        verified fallback re-read): claim it so no worker redoes it."""
         with self._cv:
+            job.exp_buf.pop(t.uid, None)
+            job.claimed.add(t.uid)
+        self._mark_tensor_done(job, t, arr)
+
+    def _mark_tensor_done(self, job: _FetchJob, t: Task, arr):
+        u = t.uid
+        l, e, tidx = job.metas[u]
+        with self._cv:
+            if (l, e, tidx) in job.done_tensors or u in job.failed_uids:
+                return     # duplicate finish (watchdog requeue) / failed
             job.done_tensors[(l, e, tidx)] = arr
             job.n_done += 1
             if (l, e) in job.demand_keys:
@@ -1640,7 +2005,8 @@ class ZipMoEEngine:
             self._cv.notify_all()      # wake result_subset() waiters
 
     # ---- result assembly + cache update (caller's thread) ----------------
-    def _collect(self, job: _FetchJob, subset: Sequence[Tuple[int, int]]
+    def _collect(self, job: _FetchJob, subset: Sequence[Tuple[int, int]],
+                 strict: bool = True
                  ) -> Tuple[Dict[Tuple[int, int], Dict[str, np.ndarray]],
                             FetchStats]:
         """Assemble `subset`'s tensors ((layer, expert) keys) and admit each
@@ -1650,12 +2016,24 @@ class ZipMoEEngine:
         pools).  Demand experts are unpinned once the whole subset has been
         admitted — not one by one — so intra-step admission overflow can
         never evict a selected expert that was admitted a moment earlier.
+
+        Failed experts are excluded from assembly/admission but still
+        unpinned (no pin leaks).  With ``strict`` (the result()/
+        result_subset() paths) a failed *demand* key raises
+        :class:`FetchError` after all cache bookkeeping; without it
+        (spec_result / background drains) failures are dropped and
+        counted once per key in ``spec_drops``.
         """
         want = set(subset)
+        requested = set(subset)        # incl. failed keys (unpin below)
+        with self._cv:
+            failed = {k: job.failed[k] for k in want if k in job.failed}
+        want -= set(failed)
         missing = [job.metas[t.uid] for t in job.tasks
                    if t.expert_key in want and
                    job.metas[t.uid] not in job.done_tensors]
         assert not missing, f"unreconstructed tensors: {missing}"
+        subset = sorted(want)
         out: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
         for (l, e) in subset:
             g = self.store.groups[(l, e)]
@@ -1721,15 +2099,17 @@ class ZipMoEEngine:
                 self._reconcile_slab(l)
         # release this job's own demand pins exactly once per expert (pins
         # are refcounted: a step's independent pin on the same expert, taken
-        # via pin_experts, survives this release)
+        # via pin_experts, survives this release) — failed keys included,
+        # or a failed demand expert would leak its pin forever
         by_layer: Dict[int, List[int]] = collections.defaultdict(list)
-        for (l, e) in subset:
+        for (l, e) in sorted(requested):
             if (l, e) in job.demand_keys and (l, e) not in job.unpinned:
                 job.unpinned.add((l, e))
                 by_layer[l].append(e)
         for l, es in by_layer.items():
             self.caches[l].unpin(es)
-        demand_phase = bool(job.demand_keys) and want <= job.demand_keys
+        demand_phase = bool(job.demand_keys) and \
+            requested <= job.demand_keys
         primary_cache = self.caches[job.layer]
         with self._cv:
             now = time.perf_counter()
@@ -1749,4 +2129,14 @@ class ZipMoEEngine:
             stats = FetchStats(wall=wall, io_bytes=io_new, dec_ops=dec_new,
                                hits={k: v
                                      for k, v in primary_cache.hits.items()})
+        if failed:
+            demand_failed = {k: v for k, v in failed.items()
+                             if k in job.demand_keys}
+            if strict and demand_failed:
+                raise FetchError(demand_failed)
+            with self._cv:             # dropped: count each key once
+                for k in failed:
+                    if k not in job.spec_drop_counted:
+                        job.spec_drop_counted.add(k)
+                        self.spec_drops += 1
         return out, stats

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import checkz
+from repro.core.faults import PeerLinkError
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -263,6 +264,8 @@ class PeerSlabMesh:
                                      for _ in range(self.n_dev)]
         self.writes = 0
         self.fetches = 0
+        self.faults = None          # opt-in FaultPlan shim (core/faults)
+        self.link_failures = 0      # fetch() aborts via PeerLinkError
         self._fetch_fns: Dict[int, object] = {}         # src dev -> jitted fn
         self._fetch_cost: Dict[int, Dict[str, int]] = {}  # src -> HLO bytes
         # no locks by design: all mutation on the engine caller's (decode)
@@ -392,11 +395,20 @@ class PeerSlabMesh:
         (device 0).  Returns {name: device array} or None when the expert
         is not (validly) resident.  Charges the ledger with the compiled
         executable's collective bytes and feeds the link profiler the
-        measured wall time."""
+        measured wall time.  Raises :class:`PeerLinkError` when the (shim)
+        link fails — the engine falls back to the local store path."""
         self._guard.check()
         loc = self.slot_of.get(expert)
         if loc is None or not self.bufs:
             return None
+        if self.faults is not None:
+            try:
+                self.faults.peer(expert)
+            except PeerLinkError:
+                self.link_failures += 1
+                if self.ledger is not None:
+                    self.ledger.charge_failure()
+                raise
         dev, slot = loc
         f = self._fetch_fn(dev)
         t0 = time.perf_counter()

@@ -40,9 +40,10 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core import bitfield, checkz
-from repro.core.chunks import (GroupMeta, manifest_from_json, manifest_to_json,
-                               pack_group, unpack_tensor)
+from repro.core.chunks import (GroupMeta, chunk_crc, manifest_from_json,
+                               manifest_to_json, pack_group, unpack_tensor)
 from repro.core.codec import Codec, get_codec
+from repro.core.faults import ChunkIntegrityError, FaultPlan
 
 DEFAULT_K = 4
 
@@ -131,7 +132,10 @@ def build_store(params, cfg, path: str, *, codec: str = None,
 class ExpertStore:
     """Exact-range chunk reads with optional bandwidth emulation."""
 
-    def __init__(self, path: str, *, bandwidth_gbps: Optional[float] = None):
+    def __init__(self, path: str, *, bandwidth_gbps: Optional[float] = None,
+                 verify: Optional[bool] = None,
+                 faults: Optional[FaultPlan] = None,
+                 max_retries: int = 3, retry_backoff_s: float = 0.002):
         self.path = path
         with open(os.path.join(path, "manifest.json")) as f:
             codec_name, k, extra, groups = manifest_from_json(f.read())
@@ -140,6 +144,15 @@ class ExpertStore:
         self.extra = extra
         self.groups: Dict[Tuple[int, int], GroupMeta] = {g.key: g for g in groups}
         self.bandwidth = bandwidth_gbps * 1e9 if bandwidth_gbps else None
+        # integrity: verify per-chunk CRCs on every read (v2 manifests);
+        # verify=None auto-enables when the manifest carries checksums,
+        # verify=False opts out (the benchmark's "clean" baseline row)
+        has_crc = any(t.sm_crc is not None
+                      for g in groups for t in g.tensors)
+        self.verify = has_crc if verify is None else (verify and has_crc)
+        self.faults = faults            # opt-in injection shim (core/faults)
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         # benchmark counters: bumped by _read(), which runs on the engine's
         # I/O thread AND on the decode thread (full loads / SM refetches)
         self.io_bytes = 0           # guarded-by: _fd_lock
@@ -153,6 +166,12 @@ class ExpertStore:
         self._fd_lock = checkz.make_lock("store._fd_lock")
         self._open_files: List = []     # guarded-by: _fd_lock
         self.open_calls = 0             # guarded-by: _fd_lock
+        # fault/integrity counters (fault_summary); guarded-by: _fd_lock
+        self.read_retries = 0           # verified-read retry attempts
+        self.checksum_failures = 0      # CRC mismatches observed
+        self.short_reads = 0            # partial-read continuations (EINTR)
+        self.fd_reopens = 0             # stale/raising FDs dropped+reopened
+        self.quarantined: set = set()   # {(fname, offset)} retry-exhausted
 
     def _fd(self, fname: str):
         cache = getattr(self._fd_local, "fds", None)
@@ -167,6 +186,21 @@ class ExpertStore:
                 self._open_files.append(f)
         return f
 
+    def _drop_fd(self, fname: str, f) -> None:
+        """Evict a raising descriptor from this thread's cache so the next
+        ``_fd`` call reopens instead of re-hitting the poisoned handle."""
+        cache = getattr(self._fd_local, "fds", None)
+        if cache is not None and cache.get(fname) is f:
+            cache.pop(fname, None)
+        try:
+            f.close()
+        except OSError:
+            pass
+        with self._fd_lock:
+            self.fd_reopens += 1
+            if f in self._open_files:
+                self._open_files.remove(f)
+
     def close(self):
         """Release every cached FD (engine shutdown hook).  Idempotent; a
         straggler read after close() transparently reopens."""
@@ -179,11 +213,39 @@ class ExpertStore:
             self._open_files.clear()
 
     # -- raw range read (the I/O thread op) --------------------------------
+    def _pread(self, fname: str, offset: int, size: int) -> bytes:
+        """Positioned read that survives transient OS errors: short reads
+        are continued until ``size`` bytes or EOF (EINTR-style partial
+        returns), and a raising/stale cached FD is dropped and reopened
+        once instead of poisoning this thread's cache."""
+        for attempt in (0, 1):
+            f = self._fd(fname)
+            try:
+                f.seek(offset)
+                parts = []
+                need = size
+                while need > 0:
+                    b = f.read(need)
+                    if not b:       # EOF — caller verifies the final length
+                        break
+                    parts.append(b)
+                    need -= len(b)
+                    if need:
+                        with self._fd_lock:
+                            self.short_reads += 1
+                return b"".join(parts)
+            except (OSError, ValueError):
+                # ValueError: operation on a closed/stale descriptor
+                self._drop_fd(fname, f)
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def _read(self, fname: str, offset: int, size: int) -> bytes:
         t0 = time.perf_counter()
-        f = self._fd(fname)
-        f.seek(offset)
-        data = f.read(size)
+        data = self._pread(fname, offset, size)
+        if self.faults is not None:
+            data = self.faults.read(fname, offset, data)
         el = time.perf_counter() - t0
         if self.bandwidth:
             want = size / self.bandwidth
@@ -197,18 +259,54 @@ class ExpertStore:
             self.io_time += el
         return data
 
+    # -- verified chunk read (integrity + bounded retry + quarantine) ------
+    def _read_chunk(self, fname: str, offset: int, size: int,
+                    crc: Optional[int] = None) -> bytes:
+        """Exact-range read with integrity checking: a read error, short
+        result, or CRC mismatch retries up to ``max_retries`` times with
+        exponential backoff; on exhaustion the chunk is quarantined and
+        ``ChunkIntegrityError`` raised (callers fall back to a full
+        re-read or fail the expert — never serve unverified bytes)."""
+        reason = "unknown"
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                with self._fd_lock:
+                    self.read_retries += 1
+                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+            try:
+                data = self._read(fname, offset, size)
+            except OSError as e:
+                reason = f"read error: {e}"
+                continue
+            if len(data) != size:
+                reason = f"short read ({len(data)}/{size} bytes)"
+                continue
+            if self.verify and crc is not None and chunk_crc(data) != crc:
+                with self._fd_lock:
+                    self.checksum_failures += 1
+                reason = "checksum mismatch"
+                continue
+            return data
+        with self._fd_lock:
+            self.quarantined.add((fname, offset))
+        raise ChunkIntegrityError(fname, offset, size, reason)
+
     def read_sm(self, key, tidx: int) -> bytes:
         g = self.groups[key]
         t = g.tensors[tidx]
-        return self._read(g.file, t.sm_offset, t.sm_size)
+        return self._read_chunk(g.file, t.sm_offset, t.sm_size, t.sm_crc)
 
     def read_e(self, key, tidx: int, shard: int) -> bytes:
         g = self.groups[key]
         t = g.tensors[tidx]
-        return self._read(g.file, t.e_offsets[shard], t.e_sizes[shard])
+        crc = t.e_crcs[shard] if t.e_crcs else None
+        return self._read_chunk(g.file, t.e_offsets[shard],
+                                t.e_sizes[shard], crc)
 
     def decompress_e(self, key, tidx: int, shard: int, data: bytes) -> np.ndarray:
         t = self.groups[key].tensors[tidx]
+        if self.faults is not None:
+            data = self.faults.decode(data)
         return np.frombuffer(
             self.codec.decompress(data, t.e_raw_sizes[shard]), np.uint8)
 
@@ -219,18 +317,29 @@ class ExpertStore:
         the zero-copy shard-assembly path (no per-shard array, no
         full-plane concatenate).  Returns bytes written."""
         t = self.groups[key].tensors[tidx]
+        if self.faults is not None:
+            data = self.faults.decode(data)
         off = sum(t.e_raw_sizes[:shard])
         n = t.e_raw_sizes[shard]
         got = self.codec.decompress_into(
             data, memoryview(out)[off:off + n], n)
-        assert got == n, (key, tidx, shard, got, n)
+        if got != n:
+            raise ValueError(
+                f"decompressed length mismatch for {key} t{tidx} s{shard}: "
+                f"{got} != {n}")
         return n
 
     # -- convenience full loads --------------------------------------------
     def load_tensor(self, key, tidx: int) -> np.ndarray:
         g = self.groups[key]
         t = g.tensors[tidx]
-        return unpack_tensor(lambda o, s: self._read(g.file, o, s), t, self.codec)
+        crcs = {t.sm_offset: t.sm_crc}
+        for off, c in zip(t.e_offsets,
+                          t.e_crcs or [None] * len(t.e_offsets)):
+            crcs[off] = c
+        return unpack_tensor(
+            lambda o, s: self._read_chunk(g.file, o, s, crcs.get(o)),
+            t, self.codec)
 
     def load_group(self, key) -> Dict[str, np.ndarray]:
         g = self.groups[key]
@@ -243,6 +352,18 @@ class ExpertStore:
                         for v in self.load_group(key).values())
 
     # -- stats ---------------------------------------------------------------
+    def fault_summary(self) -> Dict[str, int]:
+        """Integrity/recovery counters for the serving-level telemetry."""
+        with self._fd_lock:
+            return {
+                "verify": int(self.verify),
+                "read_retries": self.read_retries,
+                "checksum_failures": self.checksum_failures,
+                "short_reads": self.short_reads,
+                "fd_reopens": self.fd_reopens,
+                "quarantined": len(self.quarantined),
+            }
+
     def ratio(self) -> float:
         """store bytes / original bf16 bytes (the paper's Fig. 3 number)."""
         tot_store = sum(g.sm_bytes + g.e_bytes for g in self.groups.values())

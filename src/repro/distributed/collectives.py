@@ -101,6 +101,9 @@ class CollectiveLedger:
         # guarded-by: _lock  (host->peer-device upload bytes; kept separate
         # from the engine's h2d counter, which meters device-0 staging only)
         self._put_bytes = 0
+        # guarded-by: _lock  (fetches aborted by a failed link — the bytes
+        # were never moved, so they are counted as events, not traffic)
+        self._link_failures = 0
 
     def charge(self, kinds: Dict[str, int]):
         """Record one launch's collective traffic (a ``collective_bytes``
@@ -117,6 +120,11 @@ class CollectiveLedger:
         with self._lock:
             self._put_bytes += int(nbytes)
 
+    def charge_failure(self):
+        """Record a peer fetch aborted by a link failure (no bytes moved)."""
+        with self._lock:
+            self._link_failures += 1
+
     def summary(self) -> Dict[str, object]:
         with self._lock:
             by_kind = dict(self._bytes)
@@ -125,4 +133,5 @@ class CollectiveLedger:
                 "collective_ops": dict(self._ops),
                 "total_bytes": sum(by_kind.values()),
                 "peer_put_bytes": self._put_bytes,
+                "link_failures": self._link_failures,
             }

@@ -51,6 +51,17 @@ Scheduler knobs (§3.3):
 --freq-decay         : FreqTracker forgetting for drifted workloads
 --cache-window N     : windowed (per-N-steps) cache hit-rate series
 
+Failure model (DESIGN.md §Failure model):
+--fault-plan SPEC    : seeded deterministic fault injection, e.g.
+                       ``bitflip:p=0.1;eio:count=3;worker_kill:count=1;
+                       seed=42`` — corrupted reads are caught by per-chunk
+                       checksums and retried, killed workers are respawned
+                       by the watchdog, failed requests retire with an
+                       error while survivors decode on.  Prints the
+                       ``faults:`` telemetry line (injected firings,
+                       retries, quarantines, worker restarts).
+--no-verify          : skip per-chunk checksum verification on read
+
 Peer-HBM tier (tier stack P):
 --mesh N             : shard store + slabs over N devices ('ep'); demand
                        misses resident in a neighbor device's slab fetch
@@ -74,6 +85,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.faults import FaultPlan
 from repro.core.store import build_store
 from repro.models import init_cache, init_params
 from repro.serving.server import BatchServer
@@ -113,6 +125,19 @@ def print_sched_telemetry(zs, args):
         ov = zs.overlap_summary()
         print(f"auto-depth: depth={ov['cross_layer_depth']} "
               f"changes={len(ov['depth_events'])}")
+    fs = zs.fault_summary()
+    if args.fault_plan or fs["failed_experts"] or fs["worker_restarts"]:
+        st = fs["store"]
+        print(f"faults: injected={fs.get('injected', {}).get('total', 0)} "
+              f"retries={st['read_retries']} "
+              f"checksum_failures={st['checksum_failures']} "
+              f"quarantined={st['quarantined']} "
+              f"worker_restarts={fs['worker_restarts']} "
+              f"deadline_hits={fs['deadline_hits']} "
+              f"spec_drops={fs['spec_drops']} "
+              f"fallback_loads={fs['fallback_loads']} "
+              f"failed_experts={fs['failed_experts']} "
+              f"refetches={fs['fault_refetches']}")
 
 
 def main():
@@ -196,6 +221,16 @@ def main():
     ap.add_argument("--cache-window", type=int, default=0,
                     help="record cache hit/miss deltas every N decode steps "
                          "(cache_summary windowed series; 0 = off)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="seeded fault injection spec, e.g. "
+                         "'bitflip:p=0.1;eio:count=3;worker_kill:count=1;"
+                         "seed=42' (kinds: bitflip, truncate, eio, delay, "
+                         "worker_kill, peer_link)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip per-chunk checksum verification on read")
+    ap.add_argument("--fetch-deadline", type=float, default=120.0,
+                    help="seconds before a blocked expert fetch raises "
+                         "FetchTimeout instead of hanging (0 = unbounded)")
     args = ap.parse_args()
     if args.cross_layer_depth != "auto":
         try:
@@ -250,7 +285,11 @@ def main():
                    plan_step=args.plan_step,
                    budget_split=args.budget_split,
                    mesh_devices=args.mesh,
-                   peer_budget=args.peer_budget)
+                   peer_budget=args.peer_budget,
+                   verify=False if args.no_verify else None,
+                   faults=(FaultPlan.parse(args.fault_plan)
+                           if args.fault_plan else None),
+                   fetch_deadline_s=args.fetch_deadline or None)
 
     if args.mode == "zipmoe-batch":
         arrivals = ([float(x) for x in args.arrival_trace.split(",")]
@@ -266,7 +305,11 @@ def main():
         srv.run()
         print("metrics:", srv.metrics())
         for rid, d in sorted(srv.request_summary().items()):
-            parts = [f"ttft={d['ttft_s']*1e3:.1f}ms"]
+            parts = []
+            if d.get("error"):
+                parts.append(f"FAILED ({d['error']})")
+            if d["ttft_s"] is not None:
+                parts.append(f"ttft={d['ttft_s']*1e3:.1f}ms")
             if d["tpot_s"] is not None:
                 parts.append(f"tpot={d['tpot_s']*1e3:.1f}ms")
             if d["queue_delay_s"] is not None:

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import StepFault
 from repro.serving.generate import make_steps, sample_tokens
 from repro.serving.kv_cache import KVPagePool, grow_cache
 
@@ -75,6 +76,7 @@ class Request:
     output: List[int] = field(default_factory=list)
     logits: List[np.ndarray] = field(default_factory=list)
     queue_delay_s: Optional[float] = None   # admission - eligibility
+    error: Optional[str] = None   # set when retired by a StepFault
 
     @property
     def tpot_s(self) -> Optional[float]:
@@ -202,8 +204,30 @@ class BatchServer:
             tokens = jnp.asarray([[s.next_tok] for s in active], jnp.int32)
             positions = np.asarray([s.pos for s in active], np.int32)
             views = pool.gather(rids)  # gen-checked: KV pages, not slab slots
-            lg, views = self.zip.decode_rows(tokens, views, positions,
-                                             owners=rids)
+            try:
+                lg, views = self.zip.decode_rows(tokens, views, positions,
+                                                 owners=rids)
+            except StepFault as f:
+                # per-request failure isolation: retire ONLY the rows whose
+                # experts could not be fetched, then re-run the step with
+                # the survivors.  Nothing was committed (the fault fires
+                # before any KV write) and sampling is per-request keyed,
+                # so survivor trajectories are unchanged — bit-identical to
+                # a fault-free run (tests/test_faults.py).
+                bad = {active[b].req.rid for b in f.rows if b < len(active)}
+                if not bad:          # defensive: always retire someone, or
+                    bad = set(rids)  # a persistent fault would spin forever
+                now = time.perf_counter()
+                for s in [s for s in active if s.req.rid in bad]:
+                    r = s.req
+                    r.error = str(f)
+                    r.done = now
+                    pool.free(r.rid)
+                    active.remove(s)
+                    self.finished.append(r)
+                    if self.on_retire is not None:
+                        self.on_retire(r)
+                continue
             pool.commit(views, rids, positions)
             retired: List[_Slot] = []
             for b, s in enumerate(active):
@@ -328,8 +352,10 @@ class BatchServer:
         span = (max(r.done for r in self.finished) -
                 min(r.submitted for r in self.finished))
         m = {"n_requests": len(self.finished),
-             "mean_ttft_s": float(np.mean(ttfts)),
-             "ttft_p50_s": _pct(ttfts, 50), "ttft_p95_s": _pct(ttfts, 95),
+             "n_failed": sum(1 for r in self.finished if r.error),
+             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+             "ttft_p50_s": _pct(ttfts, 50) if ttfts else 0.0,
+             "ttft_p95_s": _pct(ttfts, 95) if ttfts else 0.0,
              "throughput_tok_s": total_toks / max(span, 1e-9)}
         if tpots:
             m["mean_tpot_s"] = float(np.mean(tpots))
@@ -362,7 +388,7 @@ class BatchServer:
             d: Dict[str, object] = {
                 "ttft_s": r.ttft, "tpot_s": r.tpot_s,
                 "queue_delay_s": r.queue_delay_s,
-                "n_tokens": len(r.output)}
+                "n_tokens": len(r.output), "error": r.error}
             d.update({f"cache_{k}": v
                       for k, v in per_cache.get(r.rid, {}).items()})
             out[r.rid] = d

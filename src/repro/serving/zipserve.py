@@ -79,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import FetchHandle, ZipMoEEngine
+from repro.core.faults import FetchError, FetchTimeout, StepFault
 from repro.core.profiles import GemmProfiler
 from repro.core.slab import SlotRef
 from repro.core.store import ExpertStore
@@ -133,7 +134,9 @@ class ZipServer:
                  mem_budget: Optional[float] = None,
                  replan_every: int = 32, plan_step: float = 0.125,
                  budget_split: str = "proportional",
-                 mesh_devices: int = 1, peer_budget: Optional[float] = None):
+                 mesh_devices: int = 1, peer_budget: Optional[float] = None,
+                 verify: Optional[bool] = None, faults=None,
+                 fetch_deadline_s: Optional[float] = 120.0):
         assert ffn_impl in ("grouped", "loop")
         # "auto": start synchronous and let the observed hidden-fetch
         # fraction tune the depth online (see _tune_depth)
@@ -172,7 +175,8 @@ class ZipServer:
             peer_mesh = make_mesh((mesh_devices,), ("ep",))
         self.layers = unstack_layers(params["decoder"], cfg)
         self.globals = {k: v for k, v in params.items() if k != "decoder"}
-        store = ExpertStore(store_path, bandwidth_gbps=bandwidth_gbps)
+        store = ExpertStore(store_path, bandwidth_gbps=bandwidth_gbps,
+                            verify=verify, faults=faults)
         recover = None
         if fused_recovery:
             recover = _planes_recover
@@ -185,7 +189,8 @@ class ZipServer:
             L=L, pool_sizes=pool_sizes, recover_fn=recover,
             cache_mode=cache_mode, flat_capacity=flat_capacity,
             flat_policy=flat_policy, delta=delta, freq_decay=freq_decay,
-            device_cache=device_cache, peer_mesh=peer_mesh)
+            device_cache=device_cache, peer_mesh=peer_mesh,
+            fetch_deadline_s=fetch_deadline_s)
         if use_pallas_recovery and not device_cache and ffn_impl == "grouped":
             # the grouped GEMM consumes the spliced tensor on device — keep
             # it there instead of the historical device→host→device round
@@ -233,6 +238,7 @@ class ZipServer:
             "fetch_wall_s": 0.0,     # background wall time of prefetched jobs
             "fetch_wait_s": 0.0,     # of which the decode thread was blocked
             "blocking_s": 0.0,       # sync / fallback fetch wall time
+            "fault_refetches": 0,    # demand re-fetches of failed spec work
         }
 
     def close(self):
@@ -490,42 +496,62 @@ class ZipServer:
                 (h_m, frozenset(missing)))
         t0 = time.perf_counter()     # CPU-side submit cost stays excluded
         weights: Dict[int, Dict] = {}
-        remaining = set(covered)
-        for h, s in pend:
-            take = [e for e in remaining if e in s]
-            if not take:
-                continue
-            remaining.difference_update(take)
-            # blocks on `take` of THIS layer only — never on the job's other
-            # layers' speculative tails
-            w, st = h.result_subset(take, layer=layer_idx)
-            weights.update(w)
-            ov["fetch_wall_s"] += st.wall
-            ov["fetch_wait_s"] += h.wait_s
-            io_bytes += st.io_bytes
-        if h_m is not None:
-            ov["pred_misses"] += 1
-            extra, fs2 = h_m.result()
-            weights.update(extra)
-            io_bytes += fs2.io_bytes
-            # the fallback ran concurrently with the speculative tails: only
-            # the time actually blocked in result() is un-hidden
-            ov["fetch_wall_s"] += fs2.wall
-            ov["fetch_wait_s"] += h_m.wait_s
-        else:
-            ov["pred_hits"] += 1
-        blocked = time.perf_counter() - t0
-        # drain finished prediction jobs AFTER they served this step's
-        # coverage: their unused tails are admitted to the cache and leave
-        # the in-flight set, then the next step's prediction excludes every
-        # still-in-flight expert (no duplicate fetches) and may re-include
-        # drained residents, which become F-state no-op tasks.  The step
-        # pins are still held through the drain — its admissions must never
-        # evict a selected expert before the FFN consumes it (in
-        # device_cache mode an eviction would free the expert's slab slot
-        # under the weights this function is about to return)
-        io_bytes += self._drain(layer_idx)
-        self.engine.unpin_experts(layer_idx, ids)
+        try:
+            remaining = set(covered)
+            for h, s in pend:
+                take = [e for e in remaining if e in s]
+                if not take:
+                    continue
+                remaining.difference_update(take)
+                # blocks on `take` of THIS layer only — never on the job's
+                # other layers' speculative tails
+                w, st = h.result_subset(take, layer=layer_idx)
+                weights.update(w)
+                ov["fetch_wall_s"] += st.wall
+                ov["fetch_wait_s"] += h.wait_s
+                io_bytes += st.io_bytes
+            if h_m is not None:
+                ov["pred_misses"] += 1
+                extra, fs2 = h_m.result()
+                weights.update(extra)
+                io_bytes += fs2.io_bytes
+                # the fallback ran concurrently with the speculative tails:
+                # only the time actually blocked in result() is un-hidden
+                ov["fetch_wall_s"] += fs2.wall
+                ov["fetch_wait_s"] += h_m.wait_s
+            else:
+                ov["pred_hits"] += 1
+            # graceful degradation: a selected expert whose SPECULATIVE
+            # fetch failed is dropped by result_subset (counted in the
+            # engine's spec_drops) — re-fetch it on demand through a fresh
+            # job, which retries the whole read path.  Only a persistent
+            # fault raises from result() here (strict demand collection).
+            lost = [e for e in ids if e not in weights]
+            if lost:
+                ov["fault_refetches"] += 1
+                h_r = self.engine.prefetch_experts(
+                    layer_idx, lost, self._p_times_for(layer_idx, lost,
+                                                       batch))
+                w_r, fs_r = h_r.result()
+                weights.update(w_r)
+                io_bytes += fs_r.io_bytes
+                ov["blocking_s"] += fs_r.wall
+            blocked = time.perf_counter() - t0
+            # drain finished prediction jobs AFTER they served this step's
+            # coverage: their unused tails are admitted to the cache and
+            # leave the in-flight set, then the next step's prediction
+            # excludes every still-in-flight expert (no duplicate fetches)
+            # and may re-include drained residents, which become F-state
+            # no-op tasks.  The step pins are still held through the drain —
+            # its admissions must never evict a selected expert before the
+            # FFN consumes it (in device_cache mode an eviction would free
+            # the expert's slab slot under the weights this function is
+            # about to return)
+            io_bytes += self._drain(layer_idx)
+        finally:
+            # on the failure path too: an unreleased step pin would leak
+            # and permanently shield the expert from eviction
+            self.engine.unpin_experts(layer_idx, ids)
         self._issue_step(layer_idx, [], batch)
         return weights, io_bytes, blocked
 
@@ -549,6 +575,17 @@ class ZipServer:
         collective-traffic ledger, profiled link model, and per-layer slab
         occupancy.  ``{"enabled": False}`` without a mesh."""
         return self.engine.peer_summary()
+
+    def fault_summary(self) -> Dict[str, object]:
+        """Failure-handling telemetry: engine counters (worker restarts,
+        deadline hits, spec drops, fallback loads, failed experts), store
+        integrity counters (retries, checksum failures, quarantined
+        chunks), injected-fault firings when a :class:`FaultPlan` is
+        active, and the serving layer's demand re-fetches of failed
+        speculative work."""
+        out = self.engine.fault_summary()
+        out["fault_refetches"] = self.overlap_stats["fault_refetches"]
+        return out
 
     def _tune_depth(self):
         """Auto-tune ``cross_layer_depth`` from the observed hidden-fetch
@@ -792,7 +829,20 @@ class ZipServer:
         # the next-step prediction rides behind any misprediction demand
         # under one Algorithm-1 block schedule, getting a full decode step
         # of compute to hide under
-        weights, io_bytes, blocked_s = self._acquire_experts(layer_idx, ids, B)
+        try:
+            weights, io_bytes, blocked_s = self._acquire_experts(
+                layer_idx, ids, B)
+        except (FetchError, FetchTimeout) as exc:
+            # map the failed experts through the router's selection to the
+            # batch rows that needed them — the server retires ONLY those
+            # rows.  A timeout names no experts: the whole step is suspect.
+            failed = {e for (l, e) in getattr(exc, "failures", {})
+                      if l == layer_idx} or set(ids)
+            ti = np.asarray(top_i).reshape(B, -1)
+            rows = [b for b in range(B)
+                    if {int(v) for v in ti[b]} & failed]
+            raise StepFault(layer_idx, failed, rows or range(B), exc) \
+                from exc
         fetch_s = time.perf_counter() - t0
         t_ffn = time.perf_counter()
         if self.fused_recovery:
@@ -926,7 +976,13 @@ class ZipServer:
         io = 0
         for layer in list(self._pending):
             for h, _ in self._pending[layer]:
-                _, st = h.spec_result()
+                try:
+                    _, st = h.spec_result()
+                except FetchTimeout:
+                    # a hung speculative job must not wedge shutdown: drop
+                    # the handle (the deadline hit is already counted by
+                    # the engine) and keep draining the rest
+                    continue
                 if not getattr(h, "_drained_stats", False):
                     h._drained_stats = True
                     ov["fetch_wall_s"] += st.wall

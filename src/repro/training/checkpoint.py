@@ -65,6 +65,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
@@ -74,8 +75,16 @@ class CheckpointManager:
             host_tree = jax.tree.map(
                 lambda x: np.asarray(x) if x is not None else None, tree,
                 is_leaf=lambda x: x is None)
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, extra), daemon=True)
+
+            def write():
+                try:
+                    self._write(step, host_tree, extra)
+                except Exception as exc:
+                    # surfaced at the next wait()/save() — an async write
+                    # failure must not be a silently missing checkpoint
+                    self._error = exc
+
+            self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
         else:
             self._write(step, tree, extra)
@@ -84,6 +93,9 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            exc, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from exc
 
     def _write(self, step: int, tree: Any, extra: Optional[dict]):
         final = os.path.join(self.dir, f"step_{step:010d}")

@@ -1,0 +1,447 @@
+"""Fault-tolerance chaos tests (DESIGN.md §Failure model).
+
+Seeded, deterministic fault injection through :class:`FaultPlan`: corrupted
+and failing reads are caught by the per-chunk checksums and retried, killed
+workers are respawned by the watchdog with their in-flight work requeued,
+hung fetches hit deadlines instead of blocking forever, and a persistent
+per-expert failure fails ONLY the requests that need that expert — with
+recovered/surviving outputs bit-identical to a fault-free run.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.engine import ZipMoEEngine
+from repro.core.faults import (ChunkIntegrityError, FaultPlan, FaultRule,
+                               FetchError, FetchTimeout, StepFault)
+from repro.core.store import ExpertStore, build_store
+from repro.models import init_params
+
+POOLS = {"F": 2, "C": 2, "S": 2, "E": 2}
+
+
+@pytest.fixture(scope="module")
+def moe_setup(tmp_path_factory):
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path_factory.mktemp("store"))
+    build_store(params, cfg, d, k_shards=4)
+    return cfg, params, d
+
+
+def _engine(cfg, store, **kw):
+    kw.setdefault("L", 2)
+    kw.setdefault("pool_sizes", dict(POOLS))
+    kw.setdefault("fetch_deadline_s", 60.0)
+    return ZipMoEEngine(store, n_experts=cfg.n_experts,
+                        n_layers=cfg.n_layers, **kw)
+
+
+def _assert_bitexact(ref_store, out, layer, sel):
+    for e in sel:
+        ref = ref_store.load_group((layer, e))
+        for name, arr in out[e].items():
+            assert np.array_equal(np.asarray(arr, np.float32),
+                                  np.asarray(ref[name], np.float32)), \
+                (layer, e, name)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: parsing + determinism
+# ---------------------------------------------------------------------------
+def test_fault_plan_parse():
+    fp = FaultPlan.parse(
+        "bitflip:p=0.1;eio:count=3,after=10;worker_kill:count=1;"
+        "delay:op=decode,delay_s=0.5;seed=42")
+    assert fp.seed == 42
+    kinds = [(r.kind, r.op) for r in fp.rules]
+    assert kinds == [("bitflip", "read"), ("eio", "read"),
+                     ("worker_kill", "worker"), ("delay", "decode")]
+    assert fp.rules[1].count == 3 and fp.rules[1].after == 10
+    assert fp.rules[3].delay_s == 0.5
+    with pytest.raises(ValueError):
+        FaultPlan.parse("meteor:p=1.0")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("bitflip:explode=1")
+    with pytest.raises(ValueError):
+        FaultRule(kind="bitflip", op="warp")
+
+
+def test_fault_plan_deterministic():
+    def trace(seed):
+        fp = FaultPlan.parse(f"bitflip:p=0.5;seed={seed}")
+        return [fp.read("f", 0, bytes(16)) for _ in range(64)]
+
+    assert trace(7) == trace(7)              # same seed -> same corruption
+    assert trace(7) != trace(8)
+
+
+# ---------------------------------------------------------------------------
+# store: checksums, retries, quarantine, manifest versioning
+# ---------------------------------------------------------------------------
+def test_store_transient_bitflip_retried_bitexact(moe_setup):
+    cfg, params, d = moe_setup
+    ref = ExpertStore(d)
+    st = ExpertStore(d, faults=FaultPlan.parse("bitflip:count=2;seed=7"),
+                     retry_backoff_s=0.0)
+    assert st.verify                         # v2 manifest -> verification on
+    for e in range(3):
+        got = st.load_group((0, e))
+        want = ref.load_group((0, e))
+        for name in want:
+            assert np.array_equal(np.asarray(got[name], np.float32),
+                                  np.asarray(want[name], np.float32))
+    fs = st.fault_summary()
+    assert fs["checksum_failures"] >= 1      # corruption was caught...
+    assert fs["read_retries"] >= 1           # ...and retried clean
+    assert fs["quarantined"] == 0
+
+
+def test_store_persistent_eio_quarantines(moe_setup):
+    cfg, params, d = moe_setup
+    st = ExpertStore(d, faults=FaultPlan.parse("eio:count=100;seed=1"),
+                     max_retries=2, retry_backoff_s=0.0)
+    with pytest.raises(ChunkIntegrityError):
+        st.load_group((0, 0))
+    fs = st.fault_summary()
+    assert fs["quarantined"] >= 1 and fs["read_retries"] >= 1
+
+
+def test_manifest_version_gate(moe_setup, tmp_path):
+    cfg, params, d = moe_setup
+    man = os.path.join(d, "manifest.json")
+    doc = json.loads(open(man).read())
+    assert doc["version"] == 2 and doc["crc_algo"] == "crc32"
+
+    # a NEWER manifest format must be rejected, not half-read
+    alt = tmp_path / "newer"
+    alt.mkdir()
+    (alt / "manifest.json").write_text(
+        json.dumps({**doc, "version": 99}))
+    with pytest.raises(ValueError, match="newer than supported"):
+        ExpertStore(str(alt))
+
+    # a v1 manifest (no checksums) still loads — verification just stays off
+    v1 = json.loads(open(man).read())
+    v1.pop("version"); v1.pop("crc_algo")
+    for g in v1["groups"]:
+        for t in g["tensors"]:
+            t.pop("sm_crc", None); t.pop("e_crcs", None)
+    old = tmp_path / "v1"
+    old.mkdir()
+    (old / "manifest.json").write_text(json.dumps(v1))
+    for g in doc["groups"]:
+        os.link(os.path.join(d, g["file"]), old / g["file"])
+    st = ExpertStore(str(old))
+    assert not st.verify
+    _assert_bitexact(ExpertStore(d), {0: st.load_group((0, 0))}, 0, [0])
+    # asking for verification on a store without checksums stays off
+    assert not ExpertStore(str(old), verify=True).verify
+
+
+# ---------------------------------------------------------------------------
+# engine: chaos sweeps, deadlines, watchdog, per-expert isolation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [3, 11])
+def test_engine_chaos_sweep_bitexact(moe_setup, seed):
+    """Transient bitflips + stragglers + a worker kill: every fetch still
+    completes with bit-identical payloads and no hung result()."""
+    cfg, params, d = moe_setup
+    ref = ExpertStore(d)
+    plan = FaultPlan.parse(
+        f"bitflip:p=0.05;delay:p=0.02,delay_s=0.005;"
+        f"worker_kill:count=1,after=25;seed={seed}")
+    store = ExpertStore(d, faults=plan, retry_backoff_s=0.0)
+    eng = _engine(cfg, store, watchdog_interval_s=0.02)
+    rng = np.random.default_rng(seed)
+    try:
+        for i in range(20):
+            layer = int(i % cfg.n_layers)
+            sel = sorted(int(e) for e in rng.choice(
+                cfg.n_experts, size=cfg.top_k, replace=False))
+            out, _ = eng.fetch_experts(layer, sel)
+            _assert_bitexact(ref, out, layer, sel)
+        fs = eng.fault_summary()
+        assert fs["injected"]["total"] >= 1
+        assert fs["failed_experts"] == 0     # everything recovered
+    finally:
+        eng.shutdown()
+
+
+def test_fetch_deadline_fires(moe_setup):
+    cfg, params, d = moe_setup
+    store = ExpertStore(d, faults=FaultPlan.parse(
+        "delay:p=1.0,delay_s=30.0;seed=2"))
+    eng = _engine(cfg, store, fetch_deadline_s=0.3)
+    h = eng.prefetch_experts(0, [0, 1])
+    with pytest.raises(FetchTimeout):
+        h.result()
+    assert eng.fault_summary()["deadline_hits"] >= 1
+    # NOTE: no shutdown — the I/O worker is parked in an injected 30s
+    # sleep; daemon threads die with the process
+
+
+def test_worker_kill_watchdog_respawns(moe_setup):
+    cfg, params, d = moe_setup
+    ref = ExpertStore(d)
+    store = ExpertStore(d)
+    store.faults = FaultPlan.parse("worker_kill:count=3;seed=5")
+    eng = _engine(cfg, store, watchdog_interval_s=0.01)
+    rng = np.random.default_rng(0)
+    try:
+        for i in range(8):
+            sel = sorted(int(e) for e in rng.choice(
+                cfg.n_experts, size=cfg.top_k, replace=False))
+            out, _ = eng.fetch_experts(int(i % cfg.n_layers), sel)
+            _assert_bitexact(ref, out, int(i % cfg.n_layers), sel)
+        fs = eng.fault_summary()
+        assert fs["worker_restarts"] >= 1
+        assert fs["injected"]["worker_kill@worker"] >= 1
+        assert fs["failed_experts"] == 0
+    finally:
+        eng.shutdown()
+
+
+def _corrupt_expert(d, key, store=None):
+    """Persistently corrupt one E-chunk of `key`'s group file on disk."""
+    st = store or ExpertStore(d)
+    g = st.groups[key]
+    t = g.tensors[0]
+    path = os.path.join(d, g.file)
+    with open(path, "r+b") as f:
+        f.seek(t.e_offsets[0])
+        b = f.read(4)
+        f.seek(t.e_offsets[0])
+        f.write(bytes(x ^ 0xFF for x in b))
+
+
+def test_persistent_corruption_isolated_per_expert(moe_setup, tmp_path):
+    """On-disk corruption of ONE expert fails only that expert: the fetch
+    raises a FetchError naming it, neighbours in the same job stay
+    bit-identical, and no pins leak."""
+    cfg, params, d0 = moe_setup
+    d = str(tmp_path / "store")
+    build_store(params, cfg, d, k_shards=4)
+    bad = (1, 2)
+    _corrupt_expert(d, bad)
+    ref = ExpertStore(d0)
+    store = ExpertStore(d, max_retries=2, retry_backoff_s=0.0)
+    eng = _engine(cfg, store)
+    try:
+        with pytest.raises(FetchError) as ei:
+            eng.fetch_experts(1, [1, 2, 3])
+        assert set(ei.value.failures) == {bad}
+        fs = eng.fault_summary()
+        assert fs["store"]["quarantined"] >= 1
+        assert fs["failed_experts"] == 1
+        # the healthy experts of the SAME failed job are still fetchable
+        out, _ = eng.fetch_experts(1, [1, 3])
+        _assert_bitexact(ref, out, 1, [1, 3])
+        # and the failure released every pin (no leak shields the bad key)
+        assert eng.cache_summary()["pinned"] == 0
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# serving: graceful degradation under continuous batching (ZIPMOE_CHECK=1)
+# ---------------------------------------------------------------------------
+def _serve(cfg, params, d, *, faults=None, n_req=3, max_new=4,
+           prompt_len=4):
+    from repro.serving.server import BatchServer
+    from repro.serving.zipserve import ZipServer
+    zs = ZipServer(params, cfg, d, L=2, pool_sizes=dict(POOLS),
+                   faults=faults, fetch_deadline_s=60.0)
+    srv = BatchServer(None, cfg, max_batch=2, max_len=prompt_len + max_new,
+                      zip_server=zs, max_concurrency=2, continuous=True)
+    rng = np.random.default_rng(0)
+    for _ in range(n_req):
+        srv.submit(rng.integers(0, cfg.vocab_size, prompt_len), max_new,
+                   record_logits=True)
+    srv.run()
+    zs.drain_pending()
+    fs = zs.fault_summary()
+    pinned = zs.cache_summary()["pinned"]
+    zs.close()
+    return srv, fs, pinned
+
+
+def test_continuous_batching_chaos_bitexact(moe_setup, monkeypatch):
+    """Transient chaos (corrupted reads + a worker kill) under continuous
+    batching with the runtime concurrency checker on: every request
+    completes, and every emitted logit row is bit-identical to the
+    fault-free run."""
+    monkeypatch.setenv("ZIPMOE_CHECK", "1")
+    cfg, params, d = moe_setup
+    clean, _, _ = _serve(cfg, params, d)
+    plan = FaultPlan.parse(
+        "bitflip:p=0.02;worker_kill:count=1,after=50;seed=13")
+    chaos, fs, pinned = _serve(cfg, params, d, faults=plan)
+    assert pinned == 0
+    assert fs["injected"]["total"] >= 1
+    assert fs["store"]["checksum_failures"] >= 1 \
+        or fs["worker_restarts"] >= 1
+    assert chaos.metrics()["n_failed"] == 0
+    by_rid = {r.rid: r for r in clean.finished}
+    for r in chaos.finished:
+        c = by_rid[r.rid]
+        assert r.output == c.output
+        assert len(r.logits) == len(c.logits)
+        for a, b in zip(r.logits, c.logits):
+            assert np.array_equal(a, b)
+
+
+def test_continuous_batching_failure_isolation(moe_setup, monkeypatch,
+                                               tmp_path):
+    """A persistently corrupt expert retires ONLY the requests that route
+    to it: survivors' logits stay bit-identical to the fault-free run,
+    failed requests carry the error, and nothing leaks (KV pages all
+    freed, zero pins) under ZIPMOE_CHECK=1."""
+    monkeypatch.setenv("ZIPMOE_CHECK", "1")
+    cfg, params, d0 = moe_setup
+    clean, _, _ = _serve(cfg, params, d0, n_req=4)
+    d = str(tmp_path / "store")
+    build_store(params, cfg, d, k_shards=4)
+    _corrupt_expert(d, (3, 1))
+    chaos, fs, pinned = _serve(cfg, params, d, n_req=4)
+    m = chaos.metrics()
+    assert m["n_requests"] == 4
+    assert m["n_failed"] >= 1                # someone needed the bad expert
+    assert fs["store"]["quarantined"] >= 1
+    assert fs["failed_experts"] >= 1
+    by_rid = {r.rid: r for r in clean.finished}
+    for r in chaos.finished:
+        if r.error is not None:
+            assert "L3E1" in r.error         # names the corrupt expert
+            assert r.done is not None
+            continue
+        c = by_rid[r.rid]                    # survivor: bit-identical
+        assert r.output == c.output
+        for a, b in zip(r.logits, c.logits):
+            assert np.array_equal(a, b)
+    assert any(r.error is None for r in chaos.finished), \
+        "expected at least one surviving request"
+    # no KV pages or cache pins leaked by the failure path
+    pool = chaos.pool
+    assert len(pool._free_pages) == pool.n_pages
+    assert pinned == 0
+
+
+def test_step_fault_names_rows(moe_setup):
+    """StepFault carries the failed experts and affected batch rows."""
+    exc = FetchError({(2, 5): "boom"})
+    f = StepFault(2, {5}, [1], exc)
+    assert f.layer == 2 and f.failed_ids == {5} and f.rows == [1]
+    assert "boom" in str(f) and "layer 2" in str(f)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: combined chaos (corruption + worker kill + peer-link failure)
+# on a forced 4-device mesh, in a subprocess (conftest strips XLA_FLAGS)
+# ---------------------------------------------------------------------------
+_PRELUDE = """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np, jax
+"""
+
+_COMBINED_SCRIPT = """
+    import tempfile
+    from repro.configs import get_smoke_config
+    from repro.core.engine import ZipMoEEngine
+    from repro.core.faults import FaultPlan, FetchError
+    from repro.core.store import ExpertStore, build_store
+    from repro.launch.mesh import make_mesh
+    from repro.models import init_params
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = tempfile.mkdtemp(prefix="zipmoe_chaos_")
+    build_store(params, cfg, d, k_shards=4)
+    ref = ExpertStore(d)
+
+    # persistent on-disk corruption of one expert's first E-chunk
+    g = ref.groups[(0, 6)]
+    t = g.tensors[0]
+    import os as _os
+    with open(_os.path.join(d, g.file), "r+b") as f:
+        f.seek(t.e_offsets[0]); b = f.read(4)
+        f.seek(t.e_offsets[0]); f.write(bytes(x ^ 0xFF for x in b))
+
+    plan = FaultPlan.parse(
+        "bitflip:p=0.04;worker_kill:count=1,after=20;"
+        "peer_link:count=2;seed=9")
+    store = ExpertStore(d, faults=plan, max_retries=2, retry_backoff_s=0.0)
+    mesh = make_mesh((4,), ("ep",))
+    eng = ZipMoEEngine(store, n_experts=cfg.n_experts,
+                       n_layers=cfg.n_layers, L=2,
+                       pool_sizes={"F": 2, "P": 8, "C": 0, "S": 0, "E": 2},
+                       peer_mesh=mesh, fetch_deadline_s=60.0,
+                       watchdog_interval_s=0.02)
+    try:
+        sel = [2, 3, 4, 5]
+        eng.fetch_experts(0, sel)          # cold: admit (some land in P)
+        # warm pass: the first peer fetches hit the injected link failure
+        # and fall back to the local store path — still bit-identical
+        out, _ = eng.fetch_experts(0, sel)
+        for e in sel:
+            want = ref.load_group((0, e))
+            for name, arr in out[e].items():
+                assert np.array_equal(np.asarray(arr, np.float32),
+                                      np.asarray(want[name], np.float32))
+        # the corrupt expert fails alone; survivors stay bit-identical
+        try:
+            eng.fetch_experts(0, [5, 6, 7])
+            raise SystemExit("expected FetchError")
+        except FetchError as e:
+            assert set(e.failures) == {(0, 6)}, e.failures
+        out2, _ = eng.fetch_experts(0, [5, 7])
+        for e in (5, 7):
+            want = ref.load_group((0, e))
+            for name, arr in out2[e].items():
+                assert np.array_equal(np.asarray(arr, np.float32),
+                                      np.asarray(want[name], np.float32))
+        # churn until the injected worker kill lands
+        rng = np.random.default_rng(9)
+        for i in range(12):
+            layer = 1 + (i % (cfg.n_layers - 1))   # corrupt file is layer 0
+            s = sorted(int(e) for e in rng.choice(
+                cfg.n_experts, size=2, replace=False))
+            o, _ = eng.fetch_experts(layer, s)
+            for e in s:
+                want = ref.load_group((layer, e))
+                for name, arr in o[e].items():
+                    assert np.array_equal(np.asarray(arr, np.float32),
+                                          np.asarray(want[name],
+                                                     np.float32))
+        fs = eng.fault_summary()
+        assert fs["store"]["read_retries"] >= 1, fs
+        assert fs["store"]["quarantined"] >= 1, fs
+        assert fs["worker_restarts"] >= 1, fs
+        assert fs["peer_link_failures"] >= 1, fs
+        assert fs["injected"]["total"] >= 3, fs
+        assert eng.cache_summary()["pinned"] == 0
+    finally:
+        eng.shutdown()
+    print("CHAOS_OK")
+"""
+
+
+def test_combined_chaos_mesh_acceptance():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_PRELUDE + _COMBINED_SCRIPT)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "CHAOS_OK" in proc.stdout

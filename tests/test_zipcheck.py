@@ -275,6 +275,54 @@ def test_pin_unpin_convention():
         [f.render() for f in fs]
 
 
+def test_daemon_exc_convention():
+    fs = by_rule(findings("""
+        import threading
+
+        class W:
+            def start(self):
+                self._t1 = threading.Thread(target=self._ok_loop,
+                                            daemon=True)
+                self._t2 = threading.Thread(target=self._bad_loop,
+                                            daemon=True)
+                self._t3 = threading.Thread(target=self._waived_loop,
+                                            daemon=True)
+                # joined (non-daemon) helpers are out of scope
+                self._t4 = threading.Thread(target=self._bad_loop)
+
+            def start_local(self):
+                def local_ok():
+                    try:
+                        self._work()
+                    except Exception:
+                        self._fail()
+
+                def local_bad():
+                    self._work()
+
+                threading.Thread(target=local_ok, daemon=True).start()
+                threading.Thread(target=local_bad, daemon=True).start()
+
+            def _ok_loop(self):
+                while True:
+                    try:
+                        self._work()
+                    except Exception as exc:
+                        self._fail(exc)
+
+            def _bad_loop(self):
+                while True:
+                    self._work()
+
+            # worker-exc-routed: _work routes into the error path (fixture)
+            def _waived_loop(self):
+                while True:
+                    self._work()
+    """), "daemon-exc")
+    assert sorted(f.obj for f in fs) == ["_bad_loop", "local_bad"], \
+        [f.render() for f in fs]
+
+
 # ---------------------------------------------------------------------------
 # driver: repo self-check + baseline mechanics
 # ---------------------------------------------------------------------------

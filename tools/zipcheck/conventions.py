@@ -14,6 +14,12 @@
   ``return`` between the first pin and the last unpin, unless the unpin
   sits in a ``finally`` block.  Functions that intentionally hand the pins
   to someone else declare it: ``# pin-release: <who releases>``.
+* **daemon-exc** — a function used as a ``threading.Thread(target=...,
+  daemon=True)`` body must route exceptions somewhere structured (the
+  engine's FetchError path, a stored-and-reraised error, …): its body
+  needs a handler catching ``Exception`` — a bare daemon body dies
+  silently and the work it owned hangs forever.  Bodies whose routing
+  lives one call deeper declare it: ``# worker-exc-routed: <where>``.
 """
 from __future__ import annotations
 
@@ -149,10 +155,104 @@ def _check_pins(src: Source, fn: ast.FunctionDef, qual: str,
                 msg="return between pin() and unpin() leaks the pin"))
 
 
+def _handler_catches_broad(h: ast.ExceptHandler) -> bool:
+    if h.type is None:                     # bare except
+        return True
+    elts = h.type.elts if isinstance(h.type, ast.Tuple) else [h.type]
+    for el in elts:
+        name = el.id if isinstance(el, ast.Name) else \
+            el.attr if isinstance(el, ast.Attribute) else None
+        if name in ("Exception", "BaseException"):
+            return True
+    return False
+
+
+def _routes_exceptions(fn: ast.AST) -> bool:
+    return any(_handler_catches_broad(h)
+               for node in ast.walk(fn) if isinstance(node, ast.Try)
+               for h in node.handlers)
+
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr == "Thread"
+    return isinstance(f, ast.Name) and f.id == "Thread"
+
+
+def _thread_kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve_target(src: Source, call: ast.Call,
+                    target: ast.AST) -> Optional[ast.AST]:
+    """The FunctionDef a Thread ``target=`` refers to: a method of the
+    enclosing class (``self._loop``) or a def in an enclosing scope."""
+    name = _self_attr(target)
+    if name is not None:
+        cls = _enclosing(src, call, (ast.ClassDef,))
+        if cls is not None:
+            for n in cls.body:
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and n.name == name:
+                    return n
+        return None
+    if isinstance(target, ast.Name):
+        scope = _enclosing(src, call, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))
+        while scope is not None:
+            for n in ast.walk(scope):
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and n.name == target.id:
+                    return n
+            scope = _enclosing(src, scope, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef))
+        for n in src.tree.body:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and n.name == target.id:
+                return n
+    return None
+
+
+def _check_daemon(src: Source, findings: List[Finding]):
+    for call in ast.walk(src.tree):
+        if not (isinstance(call, ast.Call) and _is_thread_ctor(call)):
+            continue
+        daemon = _thread_kw(call, "daemon")
+        if not (isinstance(daemon, ast.Constant) and daemon.value is True):
+            continue                       # joined threads surface errors
+        target = _thread_kw(call, "target")
+        if target is None:
+            continue
+        if src.marker(call.lineno, "worker-exc-routed") is not None:
+            continue
+        fn = _resolve_target(src, call, target)
+        if fn is not None:
+            if src.def_marker(fn, "worker-exc-routed") is not None:
+                continue
+            if _routes_exceptions(fn):
+                continue
+            obj, line = fn.name, fn.lineno
+        else:
+            obj = ast.dump(target)[:40] if not isinstance(target, ast.Name) \
+                else target.id
+            line = call.lineno
+        findings.append(Finding(
+            rule="daemon-exc", path=src.rel, line=line, obj=obj,
+            msg=("daemon-thread body without exception routing — an "
+                 "uncaught error kills the worker silently and its work "
+                 "hangs; catch Exception into a structured error path "
+                 "(or waive with '# worker-exc-routed: <where>')")))
+
+
 def check(sources: Sequence[Source]) -> List[Finding]:
     findings: List[Finding] = []
     for src in sources:
         _check_codec(src, findings)
+        _check_daemon(src, findings)
         for fn in ast.walk(src.tree):
             if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue

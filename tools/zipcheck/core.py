@@ -25,6 +25,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 MARKER_NAMES = (
     "guarded-by", "holds-lock", "single-writer", "unguarded-ok",
     "host-sync-ok", "loop-ok", "pin-release", "gen-checked", "threadlocal-ok",
+    "worker-exc-routed",
 )
 _MARKER_RE = re.compile(
     r"#\s*(" + "|".join(re.escape(m) for m in MARKER_NAMES) + r")\s*:\s*([^#\n]*)")
