@@ -15,10 +15,15 @@ execution times) and single-layer vs cross-layer block schedules
 columns — the expert-weight staging tax — plus a ``bytes_occ`` column
 (resident expert bytes, the §3.4 planner's denomination);
 ``serving_real/device_slab_cache`` runs the same stack with the F pool
-as device-resident slabs (`--device-cache`), and
+as device-resident slabs (`--device-cache`),
 ``serving_real/planned_mem_budget`` replaces fixed pool sizes with
 byte-budgeted live pool planning (``--mem-budget``, 30% of the expert
-bytes, re-planned online)."""
+bytes, re-planned online), ``serving_real/{ragged_megakernel,
+device_slab_ragged}`` run the slot-indexed ragged grouped-GEMM path
+(every row carries ``pad_frac`` + ``w_copy/step`` columns — padding
+burn and per-step weight-staging copy, both of which the megakernel
+deletes), and ``serving_real/skewed_routing/*`` pins the ragged-vs-
+padded ``pad_frac`` win on a bulk+trickle routing skew."""
 from __future__ import annotations
 
 import numpy as np
@@ -115,6 +120,17 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
             # only in slab mode vs a full re-stack per hit in host mode
             ("device_slab_cache", pools,
              dict(prefetch=True, ffn_impl="grouped", device_cache=True)),
+            # slot-indexed ragged megakernel (the default ffn_impl): CSR
+            # token groups instead of pad-to-max-C — the pad_frac column
+            # drops vs the grouped rows above
+            ("ragged_megakernel", pools,
+             dict(prefetch=True, ffn_impl="ragged")),
+            # megakernel over device slabs: expert weights are read IN
+            # PLACE from the slab buffer — the w_copy/step column (the
+            # per-step gather/stack staging the grouped path pays) is
+            # zero on cache hits
+            ("device_slab_ragged", pools,
+             dict(prefetch=True, ffn_impl="ragged", device_cache=True)),
             # byte-budgeted live pool planning (§3.4 online): per-layer
             # F/C/S/E splits solved from live ranks under one global byte
             # budget instead of fixed per-layer expert counts
@@ -141,6 +157,8 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
         n_steps = max(1, len(zs.stats) // max(1, len(zs._moe_layers)))
         h2d_step = sum(s["h2d_bytes"] for s in zs.stats) / n_steps
         spl_step = sum(s["splice_s"] for s in zs.stats) / n_steps
+        wcp_step = sum(s.get("w_copy_bytes", 0) for s in zs.stats) / n_steps
+        ov = zs.overlap_summary()
         # the planner's denomination: resident expert bytes across layers
         bytes_occ = sum(zs.cache_summary()["occupancy_bytes"].values())
         rows.add(f"serving_real/{name}/mean_ttft", m["mean_ttft_s"] * 1e6, "")
@@ -151,6 +169,9 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
                  f"hit_rate={m.get('cache_hit_rate', 0.0):.3f} "
                  f"h2d_bytes/step={h2d_step:.0f} "
                  f"splice_ms/step={spl_step*1e3:.2f} "
+                 f"w_copy/step={wcp_step:.0f} "
+                 f"pad_frac={ov['pad_frac']:.3f} "
+                 f"compiles={ov['gemm_compiles']} "
                  f"bytes_occ={bytes_occ:.0f}" + extra)
         zs.close()
     # continuous vs static batching at the SAME planned byte budget: a
@@ -205,8 +226,51 @@ def run_real(rows: Rows, *, n_requests: int = 4, max_new: int = 6):
                  "profiled_p_cross_layer"):
         rows.add(f"serving_real/{name}/tpot_vs_constant_single", 0.0,
                  f"{base / max(tpots[name], 1e-12):.3f}x")
+    run_skew(rows, params, cfg, d)
     run_faults(rows, params, cfg, d)
     run_peer(rows)
+
+
+def run_skew(rows: Rows, params, cfg, d):
+    """Skewed-routing pad accounting: one bulk expert drains nearly every
+    routed token while singleton trickle experts keep max-C high — the
+    regime where pad-to-max-C tables burn GEMM rows on padding.  Builds
+    the SAME selection through both table builders and reports each
+    path's ``pad_frac`` (padded rows that carry no real token); the
+    ragged CSR row must come out strictly lower than the padded
+    baseline."""
+    from repro.serving.zipserve import ZipServer
+
+    zs = ZipServer(params, cfg, d, L=4, prefetch=False,
+                   pool_sizes={"F": 2, "C": 2, "S": 2, "E": 2})
+    try:
+        B, k = 16, cfg.top_k
+        E = min(8, cfg.n_experts)
+        ti = np.zeros((B, 1, k), np.int64)   # bulk: expert 0 drains tokens
+        for j in range(1, E):                # singleton trickle experts
+            ti[B - 1 - (j - 1) // k, 0, (j - 1) % k] = j
+        tp = np.full((B, 1, k), 1.0 / k, np.float32)
+        ids = sorted({int(e) for e in ti.reshape(-1)})
+        real = B * k                         # routed tokens per step
+        ov = zs.overlap_stats
+        p0 = ov["tokens_padded"]
+        zs._gather_by_expert(tp, ti, ids)
+        padded = ov["tokens_padded"] - p0
+        p1 = ov["tokens_padded"]
+        zs._gather_by_expert_ragged(tp, ti, ids)
+        ragged = ov["tokens_padded"] - p1
+    finally:
+        zs.close()
+    rows.add("serving_real/skewed_routing/padded_grouped/pad_frac",
+             (padded - real) / padded,
+             f"{padded} GEMM rows for {real} routed tokens "
+             f"({len(ids)} experts, bulk+trickle skew)")
+    rows.add("serving_real/skewed_routing/ragged_megakernel/pad_frac",
+             (ragged - real) / ragged,
+             f"{ragged} GEMM rows for {real} routed tokens (CSR tiles)")
+    rows.add("serving_real/skewed_routing/ragged_vs_padded_rows", 0.0,
+             f"{padded / max(ragged, 1):.2f}x fewer GEMM rows at equal "
+             "selection")
 
 
 def run_faults(rows: Rows, params, cfg, d, *, n_requests: int = 4,

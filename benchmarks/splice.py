@@ -17,10 +17,31 @@ runtime has grown, on one expert-sized bf16 tensor:
                             ndarrays — the per-step staging cost the slab
                             removes (what host mode pays on every F hit)
 
+Megakernel rungs (the slot-indexed ragged grouped-GEMM path):
+
+  gemm/take_gather_padded   per-step expert compute the OLD way (what
+                            ``ffn_impl="grouped"`` executes): a
+                            materialized ``jnp.take`` gather of the active
+                            experts out of the slab, then the padded
+                            [E,C,d]@[E,d,f] ``grouped_expert_gemm``
+  gemm/slot_indexed_ragged  ONE ``slab_gemm`` call (``ffn_impl="ragged"``)
+                            reading expert weights in place from the slab
+                            via a tile→slot vector, CSR-ragged token
+                            groups (no pad-to-max-C, no gather copy)
+  admit/fused_splice_admit  demand-miss admission as ONE aliased launch:
+                            bit-plane splice lands straight in the slot
+  admit/recover_then_put    the same admission as two launches — standalone
+                            device splice, then a donated slot write
+
 On CPU hosts the Pallas kernel runs in interpret mode, so the device rows
 understate TPU gains; the *ratio* between slab_gather and
 host_stack_upload is the architectural point: gather scales with device
-bandwidth, the host stack with PCIe/USB h2d bandwidth.
+bandwidth, the host stack with PCIe/USB h2d bandwidth.  The gemm/ rungs
+time each path's SHIPPED dispatcher (what the serving layer calls): on
+CPU that is the interpret-mode Pallas grid for the grouped path vs the
+megakernel's jitted XLA oracle — part of the megakernel's win here is
+exactly that it ships a no-grid-overhead CPU oracle; on TPU both become
+Mosaic kernels and the gap is the deleted gather copy + padded rows.
 """
 from __future__ import annotations
 
@@ -32,8 +53,10 @@ import numpy as np
 
 from benchmarks.common import Rows
 from repro.core import bitfield
-from repro.core.slab import DeviceSlabCache
-from repro.kernels.ops import recover_bf16_device, recover_bf16_host
+from repro.core.slab import DevicePlanes, DeviceSlabCache
+from repro.kernels.ops import (bucket_rows, grouped_expert_gemm,
+                               recover_bf16_device, recover_bf16_host,
+                               slab_gemm, splice_planes_device)
 
 D, F = 512, 1024            # one expert-tensor plane (bf16: 1 MiB)
 E_ACTIVE = 4                # experts gathered per decode step
@@ -92,6 +115,65 @@ def run(rows: Rows):
     rows.add("splice/gather_vs_host_stack", 0.0,
              f"{t_s / max(t_g, 1e-12):.2f}x cheaper per step "
              f"(device={jax.devices()[0].platform})")
+
+    # -- megakernel rungs: per-step expert compute -------------------------
+    # skewed routing (one bulk group + singleton trickle experts): the
+    # shape where CSR ragged tables beat pad-to-max-C
+    counts = [57, 1, 1, 1]
+    C = bucket_rows(max(counts))              # padded rows per expert
+    block_c = 8
+    tiles = [-(-c // block_c) for c in counts]
+    n_tiles = bucket_rows(sum(tiles), align=1)
+    rng2 = np.random.default_rng(1)
+    xp = jnp.asarray(rng2.standard_normal((E_ACTIVE, C, D)), bitfield.BF16)
+    xr = jnp.asarray(rng2.standard_normal((n_tiles * block_c, D)),
+                     bitfield.BF16)
+    tile_slot = np.zeros(n_tiles, np.int32)
+    t = 0
+    for s, nt in enumerate(tiles):
+        tile_slot[t:t + nt] = s
+        t += nt
+
+    def take_gather():
+        w = slab.gather("w", slots)           # materialized [E,d,f] copy
+        grouped_expert_gemm(xp, w, block_c=C, block_d=D,
+                            block_f=128).block_until_ready()
+    t_tg = _best(take_gather)
+    rows.add("gemm/take_gather_padded", t_tg * 1e6,
+             f"{E_ACTIVE * C} rows + {E_ACTIVE * D * F * 2}B gather "
+             "copy/step")
+
+    def slot_indexed():
+        slab_gemm(xr, slab.bufs["w"], tile_slot,
+                  block_c=block_c).block_until_ready()
+    t_si = _best(slot_indexed)
+    rows.add("gemm/slot_indexed_ragged", t_si * 1e6,
+             f"{n_tiles * block_c} rows, in-place slab read (zero-copy)")
+    rows.add("gemm/slot_indexed_vs_take_gather", 0.0,
+             f"{t_tg / max(t_si, 1e-12):.2f}x cheaper per step "
+             f"(skew counts={counts})")
+
+    # -- megakernel rungs: demand-miss admission ---------------------------
+    exp_d = jnp.asarray(exp.reshape(-1))
+    sm_d = jnp.asarray(sm.reshape(-1))
+
+    def fused_admit():
+        slab.put(E_ACTIVE, {"w": DevicePlanes(exp=exp_d, sm=sm_d,
+                                              shape=(D, F))})
+        slab.bufs["w"].block_until_ready()
+    t_f = _best(fused_admit)
+    rows.add("admit/fused_splice_admit", t_f * 1e6,
+             "one aliased launch: splice lands in the slot")
+
+    def two_launch():
+        w2 = splice_planes_device(exp_d, sm_d, (D, F))
+        slab.put(E_ACTIVE, {"w": w2})
+        slab.bufs["w"].block_until_ready()
+    t_2 = _best(two_launch)
+    rows.add("admit/recover_then_put", t_2 * 1e6,
+             "standalone splice + donated slot write (two launches)")
+    rows.add("admit/fused_vs_two_launch", 0.0,
+             f"{t_2 / max(t_f, 1e-12):.2f}x")
 
 
 if __name__ == "__main__":

@@ -83,7 +83,8 @@ from repro.core.cache import HierarchicalCache, LiveFlatCache, pool_summary
 from repro.core.faults import (FetchError, FetchTimeout, PeerLinkError,
                                WorkerKilled)
 from repro.core.scheduler import build_blocks
-from repro.core.slab import DeviceSlabCache, PeerRef, PeerSlabMesh, SlotRef
+from repro.core.slab import (DevicePlanes, DeviceSlabCache, PeerRef,
+                             PeerSlabMesh, SlotRef)
 from repro.core.states import CState, Task
 from repro.core.store import ExpertStore
 from repro.core.tiers import DEFAULT_STACK, PEER_STACK
@@ -373,12 +374,20 @@ class ZipMoEEngine:
         self.d2h_bytes = 0      # guarded-by: _cv
         self.splice_s = 0.0     # guarded-by: _cv
         self.splice_ops = 0     # guarded-by: _cv
+        # per-step expert-weight COPY bytes (device-side gather/stack
+        # staging the serving layer materializes for the GEMM).  The
+        # slot-indexed megakernel reads the slab in place: a fully
+        # cache-hit device-mode step must add ZERO here — the companion
+        # acceptance counter to h2d_bytes (which meters host→device only).
+        self.w_copy_bytes = 0   # guarded-by: _cv
         self._slabs: Dict[int, Optional[DeviceSlabCache]] = {}
         # live-planned slab slot counts (derived from planned F-pool BYTES);
         # fallback: mirror the F pool's expert-count capacity
         self._slab_caps: Dict[int, int] = {}
         if device_cache:
-            self.recover = self._recover_device
+            # fused demand-miss path: workers upload the planes, the splice
+            # lands straight in a slab slot at collect time (one launch)
+            self.recover = self._recover_device_planes
         else:
             self.recover = recover_fn or (
                 lambda e, sm, shape: bitfield.reconstruct_np(
@@ -620,6 +629,15 @@ class ZipMoEEngine:
         with self._cv:
             self.h2d_bytes += int(nbytes)
 
+    def count_w_copy(self, nbytes: int):
+        """Charge `nbytes` of per-step expert-weight COPY staging (the
+        serving layer's gather/stack materialization for the GEMM — device
+        OR host side).  The slot-indexed megakernel path charges nothing:
+        ``w_copy_bytes`` flat across a cache-hit step is the proof that
+        expert compute runs zero-copy out of the slab."""
+        with self._cv:
+            self.w_copy_bytes += int(nbytes)
+
     def _recover_device(self, exp, sm, shape):  # hot-path
         """Device recovery hook: upload the two u8 planes once, splice on
         device (Pallas kernel; interpret mode on CPU), return the bf16
@@ -636,6 +654,40 @@ class ZipMoEEngine:
         dt = time.perf_counter() - t0
         with self._cv:
             self.h2d_bytes += exp_np.nbytes + sm_np.nbytes
+            self.splice_s += dt
+            self.splice_ops += 1
+        return out
+
+    def _recover_device_planes(self, exp, sm, shape):  # hot-path
+        """Fused-miss recovery hook (device_cache mode): upload the two u8
+        planes and STOP — no splice, no bf16 materialisation.  The decode
+        thread's slab reconcile later lands the splice directly into a slab
+        slot via the input/output-aliased admit kernel, so a demand miss
+        costs ONE kernel launch and warms the slab as a side effect.
+        Returns a :class:`DevicePlanes` placeholder holding the uploaded
+        planes; ``_collect``/``_reconcile_slab`` resolve it to a SlotRef."""
+        import jax.numpy as jnp
+        exp_np = np.asarray(exp)    # host-sync-ok: planes arrive as host bytes
+        sm_np = (np.frombuffer(sm, np.uint8)
+                 if isinstance(sm, (bytes, bytearray))
+                 else np.asarray(sm))   # host-sync-ok: plane bytes, pre-upload
+        exp_d = jnp.asarray(exp_np.reshape(-1))
+        sm_d = jnp.asarray(sm_np.reshape(-1))
+        with self._cv:
+            self.h2d_bytes += exp_np.nbytes + sm_np.nbytes
+        return DevicePlanes(exp=exp_d, sm=sm_d, shape=tuple(shape))
+
+    def _splice_planes(self, dp: DevicePlanes):
+        """Materialise a DevicePlanes placeholder into a standalone bf16
+        device array — the fused-admit fallback whenever no slab slot can
+        take the planes (slab overflow, peer demotion, flat mode).  Charged
+        to the engine splice counters like any other device splice."""
+        from repro.kernels.ops import splice_planes_device
+        t0 = time.perf_counter()
+        out = splice_planes_device(dp.exp, dp.sm, dp.shape)
+        out.block_until_ready()     # host-sync-ok: timed splice, off hot loop
+        dt = time.perf_counter() - t0
+        with self._cv:
             self.splice_s += dt
             self.splice_ops += 1
         return out
@@ -688,7 +740,11 @@ class ZipMoEEngine:
                 # a re-plan shrink deferred by all-pinned residents can
                 # leave F transiently over the slab capacity: keep the
                 # overflow's payload host/device-array-backed (still
-                # servable) instead of asserting on a full slab
+                # servable) instead of asserting on a full slab.  Pending
+                # fused-admit planes can't stay pending — splice standalone.
+                for tidx, v in pl.full.items():
+                    if isinstance(v, DevicePlanes):
+                        pl.full[tidx] = self._splice_planes(v)
                 continue
             if names is None:
                 names = [t.name for t in
@@ -873,6 +929,11 @@ class ZipMoEEngine:
                         usable = False
                         break
                     v = v.read()
+                elif isinstance(v, DevicePlanes):
+                    # fused-admit planes demoted before any slab landed
+                    # them: splice standalone (peer rows hold bf16 bytes)
+                    v = self._splice_planes(v)
+                    pl.full[tidx] = v
                 tensors[names[tidx]] = v
             if not usable:
                 continue
@@ -1421,8 +1482,13 @@ class ZipMoEEngine:
                 "device_cache": self.device_cache,
                 "h2d_bytes": self.h2d_bytes,
                 "d2h_bytes": self.d2h_bytes + sum(s.d2h_bytes for s in slabs),
-                "splice_ms": self.splice_s * 1e3,
-                "splice_ops": self.splice_ops,
+                # fused splice-admits land inside the slabs; standalone
+                # splices on the engine — one merged ledger for both
+                "splice_ms": (self.splice_s
+                              + sum(s.splice_s for s in slabs)) * 1e3,
+                "splice_ops": (self.splice_ops
+                               + sum(s.splice_writes for s in slabs)),
+                "w_copy_bytes": self.w_copy_bytes,
                 "slab_writes": sum(s.writes for s in slabs),
                 "slab_resident": sum(len(s.slot_of) for s in slabs),
                 "slab_bytes": sum(s.nbytes() for s in slabs),
@@ -2097,6 +2163,37 @@ class ZipMoEEngine:
         if self.device_cache:
             for l in {l for l, _ in subset}:
                 self._reconcile_slab(l)
+            # fused-miss fix-up: DevicePlanes handed out above resolve to
+            # real tensors now that the reconcile ran — to the payload's
+            # fresh SlotRef when the fused admit landed the planes in a
+            # slab slot (the common case: splice and slab write were ONE
+            # launch), else to a standalone splice
+            for (l, e) in subset:
+                w = out[(l, e)]
+                if not any(isinstance(v, DevicePlanes) for v in w.values()):
+                    continue
+                g = self.store.groups[(l, e)]
+                pl = self._payload(l, e)
+                for tidx, tm in enumerate(g.tensors):
+                    if not isinstance(w[tm.name], DevicePlanes):
+                        continue
+                    v = None
+                    if pl is not None and pl.full:
+                        cand = pl.full.get(tidx)
+                        if isinstance(cand, SlotRef):
+                            if cand.valid:
+                                v = cand
+                        elif not isinstance(cand, (DevicePlanes, PeerRef,
+                                                   type(None))):
+                            v = cand   # already materialised (overflow arm)
+                    if v is None:
+                        v = self._splice_planes(w[tm.name])
+                        if pl is not None and \
+                                isinstance(pl.full.get(tidx), DevicePlanes):
+                            pl.full[tidx] = v
+                    w[tm.name] = v
+                    with self._cv:
+                        job.done_tensors[(l, e, tidx)] = v
         # release this job's own demand pins exactly once per expert (pins
         # are refcounted: a step's independent pin on the same expert, taken
         # via pin_experts, survives this release) — failed keys included,

@@ -56,6 +56,25 @@ def _slab_take(buf: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
     return jnp.take(buf, slots, axis=0)
 
 
+@dataclass
+class DevicePlanes:
+    """One tensor held as its two ZipMoE bit-planes, ALREADY on device.
+
+    The fused demand-miss path's in-flight form: the worker uploads the u8
+    planes (charged to ``h2d_bytes``) but defers the splice; at collect
+    time the decode thread lands them straight in a slab slot via the
+    aliased splice-admit kernel (one launch — no standalone spliced tensor,
+    no capacity-sized copy).  ``_sm_plane_of`` reads ``.sm`` for S-pool
+    demotions exactly as it does for host-side BitPlanes."""
+    exp: jnp.ndarray            # u8, device, flat
+    sm: jnp.ndarray             # u8, device, flat
+    shape: Tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.exp.size) + int(self.sm.size)
+
+
 @dataclass(frozen=True)
 class SlotRef:
     """Handle to one tensor of one expert inside a slab.
@@ -106,6 +125,8 @@ class DeviceSlabCache:
         self._free: List[int] = list(range(self.capacity - 1, -1, -1))
         self.gen: List[int] = [0] * self.capacity
         self.writes = 0                             # slot-write count
+        self.splice_writes = 0                      # of which fused admits
+        self.splice_s = 0.0                         # fused-admit wall time
         self.d2h_bytes = 0                          # demotion downloads
         # no locks by design: all mutation on the engine caller's (decode)
         # thread; ZIPMOE_CHECK=1 asserts that (see checkz.MutatorGuard)
@@ -126,8 +147,14 @@ class DeviceSlabCache:
     # -- mutation (decode thread only) -------------------------------------
     def put(self, expert: int, tensors: Dict[str, jnp.ndarray]
             ) -> Dict[str, SlotRef]:
-        """Write `tensors` (device arrays, one per name) into the expert's
-        slot — allocating one if needed — via donated in-place updates."""
+        """Write `tensors` (one per name) into the expert's slot —
+        allocating one if needed — via donated in-place updates.  A value
+        may be a plain device array (plain slot write) or a
+        :class:`DevicePlanes` (fused splice-admit: the bit-plane splice and
+        the slot write happen in ONE aliased kernel launch — the demand
+        miss warms the slab without ever materializing a standalone spliced
+        tensor)."""
+        from repro.kernels import ops
         assert set(tensors) == set(self.shapes), (set(tensors),
                                                   set(self.shapes))
         self._guard.check()
@@ -138,6 +165,15 @@ class DeviceSlabCache:
             self.slot_of[expert] = slot
         idx = jnp.int32(slot)
         for name, val in tensors.items():
+            if isinstance(val, DevicePlanes):
+                assert tuple(val.shape) == self.shapes[name], (name,
+                                                               val.shape)
+                t0 = time.perf_counter()
+                self.bufs[name] = ops.slab_splice_set(self.bufs[name], slot,
+                                                      val.exp, val.sm)
+                self.splice_s += time.perf_counter() - t0
+                self.splice_writes += 1
+                continue
             assert tuple(val.shape) == self.shapes[name], (name, val.shape)
             self.bufs[name] = _slab_set(self.bufs[name],
                                         idx, jnp.asarray(val, self.dtype))
@@ -171,15 +207,25 @@ class DeviceSlabCache:
 
     # -- the hot-path read -------------------------------------------------
     def gather(self, name: str, slots: Sequence[int]) -> jnp.ndarray:  # hot-path
-        """``[len(slots), *shape]`` device gather — the grouped FFN's
-        replacement for stacking host arrays.  Callers must generation-check
+        """``[len(slots), *shape]`` device gather — a MATERIALIZED copy of
+        the active experts (the pre-megakernel staging step; callers charge
+        it to ``w_copy_bytes``).  The slot-indexed ragged GEMM reads
+        ``self.bufs[name]`` in place instead (``kernels/ops.slab_gemm``)
+        and needs only :meth:`slot_vector`.  Callers must generation-check
         their SlotRefs first (conventions pass: slotref-gen)."""
         return _slab_take(self.bufs[name],
                           jnp.asarray(list(slots), jnp.int32))
 
+    def slot_vector(self, experts: Sequence[int]) -> np.ndarray:  # hot-path
+        """int32 slot index per expert — the scalar-prefetch operand of the
+        slot-indexed GEMM (no device traffic, no weight copy)."""
+        # host-sync-ok: Python-int dict reads -> host index vector
+        return np.asarray([self.slot_of[e] for e in experts], np.int32)
+
     def summary(self) -> Dict[str, object]:
         return {"layer": self.layer, "capacity": self.capacity,
                 "resident": len(self.slot_of), "writes": self.writes,
+                "splice_writes": self.splice_writes,
                 "d2h_bytes": self.d2h_bytes, "nbytes": self.nbytes()}
 
 

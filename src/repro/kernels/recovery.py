@@ -23,11 +23,22 @@ DEFAULT_BLOCK_M = 256
 DEFAULT_BLOCK_N = 512
 
 
-def _recover_kernel(exp_ref, sm_ref, out_ref):
-    e = exp_ref[...].astype(jnp.uint16)
-    s = sm_ref[...].astype(jnp.uint16)
+def splice_bf16(exp, sm):
+    """The 3-op bit splice on VREGs: (exp u8, sm u8) -> bf16.
+
+    bf16 layout ``s eeeeeeee mmmmmmm``; sm packs the sign in bit 7 and the
+    7 mantissa bits in bits 0..6.  Shared by every kernel that recovers
+    weights in-flight (this module's recovery kernel, ``moe_gemm.zip_gemm``
+    and its grouped variant, and the aliased slab splice-admit) so the bit
+    semantics live in exactly one place."""
+    e = exp.astype(jnp.uint16)
+    s = sm.astype(jnp.uint16)
     u = ((s & jnp.uint16(0x80)) << 8) | (e << 7) | (s & jnp.uint16(0x7F))
-    out_ref[...] = jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+    return jax.lax.bitcast_convert_type(u, jnp.bfloat16)
+
+
+def _recover_kernel(exp_ref, sm_ref, out_ref):
+    out_ref[...] = splice_bf16(exp_ref[...], sm_ref[...])
 
 
 def recover_bf16_2d(exp: jnp.ndarray, sm: jnp.ndarray, *,

@@ -29,3 +29,29 @@ def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Grouped expert GEMM oracle: x [E, C, d] @ w [E, d, f] -> [E, C, f]."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+def slab_gemm_ref(x: jnp.ndarray, buf: jnp.ndarray, tile_slot,
+                  block_c: int = 8) -> jnp.ndarray:
+    """Slot-indexed ragged grouped-GEMM oracle: per token tile of
+    ``block_c`` rows, multiply against the slab row named by the tile's
+    slot.  x: [T, d]; buf: [capacity, d, f]; tile_slot: [T // block_c]."""
+    T, d = x.shape
+    xt = x.reshape(T // block_c, block_c, d).astype(jnp.float32)
+    wt = jnp.take(buf, jnp.asarray(tile_slot, jnp.int32),
+                  axis=0).astype(jnp.float32)
+    out = jnp.einsum("tcd,tdf->tcf", xt, wt)
+    return out.astype(x.dtype).reshape(T, -1)
+
+
+def splice_admit_ref(buf: jnp.ndarray, exp: jnp.ndarray, sm: jnp.ndarray,
+                     slot: int) -> jnp.ndarray:
+    """Fused splice+slab-write oracle: ``buf`` with slot `slot` replaced by
+    the spliced bf16 tensor, every other slot byte-preserved."""
+    return buf.at[int(slot)].set(recover_bf16_ref(exp, sm))
+
+
+def zip_gemm_grouped_ref(x: jnp.ndarray, exp: jnp.ndarray, sm: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Batched fused recovery+GEMM oracle: splice then grouped GEMM."""
+    return moe_gemm_ref(x, recover_bf16_ref(exp, sm))

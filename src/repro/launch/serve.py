@@ -38,9 +38,13 @@ Cache knobs (§3.4):
                        --flat-capacity N; default N = sum of pool sizes)
 --delta              : δ rank-tolerance margin of the dispatch thresholds
 --device-cache       : device-resident expert slabs — the F tier lives on
-                       the accelerator, recovery splices on device, and the
-                       grouped FFN gathers weights by slab slot (zero
-                       host→device weight bytes on a cache-hit step)
+                       the accelerator, a demand miss splice-admits into a
+                       slab slot in one aliased kernel launch, and the
+                       ragged FFN reads the slab in place by slot index
+                       (zero host→device weight bytes AND zero weight-copy
+                       bytes on a cache-hit step)
+--ffn-impl           : ragged (slot-indexed megakernel, default) | grouped
+                       (padded [Ea, C, d] batch) | loop (reference)
 
 Scheduler knobs (§3.3):
 --profile-p-times    : feed Algorithm 1 *measured* per-expert grouped-GEMM
@@ -189,9 +193,15 @@ def main():
     ap.add_argument("--delta", type=int, default=1,
                     help="dispatch-threshold rank tolerance δ")
     ap.add_argument("--device-cache", action="store_true",
-                    help="device-resident expert slabs: splice on device, "
-                         "F pool holds slab slots, grouped FFN gathers by "
-                         "slot index (no per-step host re-upload)")
+                    help="device-resident expert slabs: fused splice-admit "
+                         "on device, F pool holds slab slots, the ragged "
+                         "FFN reads the slab in place by slot index (no "
+                         "per-step weight copy, no host re-upload)")
+    ap.add_argument("--ffn-impl", default="ragged",
+                    choices=["ragged", "grouped", "loop"],
+                    help="expert FFN path: slot-indexed ragged megakernel "
+                         "(default), padded grouped GEMM, or the per-token "
+                         "reference loop")
     ap.add_argument("--profile-p-times", action="store_true",
                     help="sort Algorithm-1 blocks by measured per-expert "
                          "grouped-GEMM times instead of class constants")
@@ -272,6 +282,7 @@ def main():
                    pool_sizes=pool_sizes,
                    bandwidth_gbps=args.bandwidth_gbps,
                    prefetch=not args.no_prefetch,
+                   ffn_impl=args.ffn_impl,
                    cache_mode=args.cache_mode,
                    flat_capacity=args.flat_capacity,
                    flat_policy=args.flat_policy, delta=args.delta,
@@ -345,9 +356,13 @@ def main():
     n_steps = max(1, args.max_new)
     print(f"transfer: h2d={ov['h2d_bytes']/1e6:.2f}MB "
           f"({ov['h2d_bytes']/n_steps/1e3:.1f}kB/step) "
+          f"w_copy={ov['w_copy_bytes']/1e6:.2f}MB "
           f"splice={ov['splice_ms']:.1f}ms/{ov['splice_ops']}ops "
           f"slab_writes={ov['slab_writes']} "
           f"slab_resident={ov['slab_resident']}")
+    print(f"gemm: pad_frac={ov['pad_frac']:.3f} "
+          f"(real={ov['tokens_real']} padded={ov['tokens_padded']} rows) "
+          f"compiles={ov['gemm_compiles']}")
     print_sched_telemetry(zs, args)
     zs.close()
 

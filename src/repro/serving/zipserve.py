@@ -31,20 +31,30 @@ Two beyond-loop mechanisms turn the I/O-bound sync path compute-centric
   predictions in the SAME block list — the engine's p-tiering keeps demand
   ahead of near-layer predictions ahead of far-layer ones, so the I/O
   thread sequences reconstruction across layers under one priority order.
-* **Grouped expert FFN** — instead of a Python loop over batch × top-k, the
-  step's tokens are gathered by expert into one [E_active, C, d] batch and
-  pushed through ``kernels/moe_gemm.grouped_gemm`` (interpret mode on CPU
-  hosts, Mosaic on TPU).  With ``fused_recovery=True`` the engine hands back
-  the raw bit-planes and ``zip_gemm`` splices them to bf16 on VREGs inside
-  the GEMM, skipping the recovered weight's HBM round-trip.
+* **Slot-indexed ragged grouped FFN** (``ffn_impl="ragged"``, the default) —
+  the step's tokens are CSR-concatenated by expert (each group padded only
+  to the kernel's 8-row tile, the total tile count bucketed to a fixed
+  shape rung) and pushed through ``kernels/ops.slab_gemm``: the megakernel
+  takes the WHOLE per-layer slab buffer plus a scalar-prefetched per-tile
+  slot vector and reads each expert's weights in place — no per-step
+  ``jnp.take``/``jnp.stack`` weight materialisation (``w_copy_bytes`` == 0
+  on a cache-hit device step, regression-tested) and no pad-to-max-C token
+  FLOPs (``pad_frac`` telemetry).  The padded ``ffn_impl="grouped"`` path
+  ([E_active, C, d] batch through ``moe_gemm.grouped_gemm``) and the
+  per-token ``"loop"`` oracle remain as pinned-equal fallbacks.  With
+  ``fused_recovery=True`` the engine hands back raw bit-planes and ONE
+  batched ``zip_gemm_grouped`` launch per projection splices them to bf16
+  on VREGs inside the GEMM, skipping the recovered weight's HBM round-trip.
 * **Device-resident expert slabs** (``device_cache=True``) — the F pool
-  lives on the accelerator: recovery uploads the two u8 planes once and
-  splices on device, F-admission writes the tensor into a per-layer
-  ``core/slab.DeviceSlabCache`` slot (donated in-place update), and the
-  grouped FFN gathers the step's experts by *slot index* with one
-  ``jnp.take`` per tensor instead of re-stacking host arrays — a fully
-  cache-hit decode step moves **zero** expert-weight bytes host→device
-  (``overlap_summary()['h2d_bytes']``, regression-tested).
+  lives on the accelerator: a demand miss uploads the two u8 planes once
+  and the decode thread's slab reconcile lands the bit-splice directly in
+  a ``core/slab.DeviceSlabCache`` slot through ONE input/output-aliased
+  kernel launch (fused splice-admit: recovery warms the slab as a side
+  effect), and the ragged FFN reads the slab in place by slot index — a
+  fully cache-hit decode step moves **zero** expert-weight bytes
+  host→device and stages **zero** weight-copy bytes
+  (``overlap_summary()['h2d_bytes']`` / ``['w_copy_bytes']``,
+  regression-tested).
 * **Byte-budgeted live pool planning** (``mem_budget=...``) — instead of
   fixed per-layer expert counts, one global byte budget is split across
   MoE layers by observed activity and each layer's F/C/S/E partition is
@@ -83,7 +93,8 @@ from repro.core.faults import FetchError, FetchTimeout, StepFault
 from repro.core.profiles import GemmProfiler
 from repro.core.slab import SlotRef
 from repro.core.store import ExpertStore
-from repro.kernels.ops import fused_zip_gemm, grouped_expert_gemm
+from repro.kernels.ops import (bucket_rows, fused_zip_gemm,
+                               grouped_expert_gemm, slab_gemm, zip_gemm_batch)
 from repro.models import attention as attn_lib
 from repro.models import mamba as mamba_lib
 from repro.models.layers import apply_mlp, apply_norm
@@ -125,7 +136,7 @@ class ZipServer:
                  bandwidth_gbps: Optional[float] = None,
                  use_pallas_recovery: bool = False,
                  prefetch: bool = True, prefetch_width: Optional[int] = None,
-                 ffn_impl: str = "grouped", fused_recovery: bool = False,
+                 ffn_impl: str = "ragged", fused_recovery: bool = False,
                  cache_mode: str = "hier", flat_capacity: Optional[int] = None,
                  flat_policy: str = "lru", delta: int = 1,
                  profile_p_times: bool = False, cross_layer_depth=0,
@@ -137,7 +148,7 @@ class ZipServer:
                  mesh_devices: int = 1, peer_budget: Optional[float] = None,
                  verify: Optional[bool] = None, faults=None,
                  fetch_deadline_s: Optional[float] = 120.0):
-        assert ffn_impl in ("grouped", "loop")
+        assert ffn_impl in ("ragged", "grouped", "loop")
         # "auto": start synchronous and let the observed hidden-fetch
         # fraction tune the depth online (see _tune_depth)
         self._auto_depth = cross_layer_depth == "auto"
@@ -181,7 +192,7 @@ class ZipServer:
         if fused_recovery:
             recover = _planes_recover
         elif use_pallas_recovery and not device_cache \
-                and ffn_impl != "grouped":
+                and ffn_impl == "loop":
             from repro.kernels.ops import recover_bf16_host
             recover = recover_bf16_host       # host-loop oracle needs numpy
         self.engine = ZipMoEEngine(
@@ -191,7 +202,7 @@ class ZipServer:
             flat_policy=flat_policy, delta=delta, freq_decay=freq_decay,
             device_cache=device_cache, peer_mesh=peer_mesh,
             fetch_deadline_s=fetch_deadline_s)
-        if use_pallas_recovery and not device_cache and ffn_impl == "grouped":
+        if use_pallas_recovery and not device_cache and ffn_impl != "loop":
             # the grouped GEMM consumes the spliced tensor on device — keep
             # it there instead of the historical device→host→device round
             # trip, via the engine's counting wrapper so the plane uploads
@@ -239,7 +250,11 @@ class ZipServer:
             "fetch_wait_s": 0.0,     # of which the decode thread was blocked
             "blocking_s": 0.0,       # sync / fallback fetch wall time
             "fault_refetches": 0,    # demand re-fetches of failed spec work
+            "tokens_real": 0,        # routed (token, expert) pairs per GEMM
+            "tokens_padded": 0,      # GEMM rows actually computed (w/ pads)
+            "gemm_compiles": 0,      # distinct expert-GEMM shape keys seen
         }
+        self._gemm_shapes: set = set()
 
     def close(self):
         self.engine.shutdown()
@@ -563,9 +578,14 @@ class ZipServer:
         ov = self.overlap_stats
         total = ov["fetch_wall_s"] + ov["blocking_s"]
         hidden = ov["fetch_wall_s"] - ov["fetch_wait_s"]
+        padded = ov["tokens_padded"]
         return {**ov, **self.engine.transfer_summary(),
                 "total_fetch_s": total, "hidden_fetch_s": hidden,
                 "hidden_frac": hidden / total if total > 0 else 0.0,
+                # fraction of expert-GEMM token FLOPs spent on padding rows
+                # (the ragged path's win over pad-to-max-C)
+                "pad_frac": (padded - ov["tokens_real"]) / padded
+                            if padded > 0 else 0.0,
                 "cross_layer_depth": self.cross_layer_depth,
                 "auto_depth": self._auto_depth,
                 "depth_events": list(self._depth_events)}
@@ -669,12 +689,9 @@ class ZipServer:
             y = y.at[b:b + 1].set(acc)
         return y
 
-    def _gather_by_expert(self, top_p, top_i, ids):
-        """Token->expert assignment tables for the grouped batch.
-
-        Returns (gather [Ea, C] int32 token rows, padded with B;
-                 gates [Ea, C] f32 routing weights).
-        """
+    def _assign_by_expert(self, top_p, top_i, ids):
+        """Per-expert (token row, gate) lists in ``ids`` order — the shared
+        CSR front half of both gather builders."""
         cfg = self.cfg
         ti = np.asarray(top_i)
         tp = np.asarray(top_p, np.float32)
@@ -686,15 +703,58 @@ class ZipServer:
         for b in range(B):
             for slot in range(cfg.top_k):
                 assign[row[int(ti[b, slot])]].append((b, float(tp[b, slot])))
-        C = max(1, max(len(a) for a in assign))
-        C = -(-C // 8) * 8                     # MXU sublane alignment
+        return assign, B
+
+    def _gather_by_expert(self, top_p, top_i, ids):
+        """Token->expert assignment tables for the PADDED grouped batch.
+
+        Returns (gather [Ea, C] int32 token rows, padded with B;
+                 gates [Ea, C] f32 routing weights).  C is the max group
+        size bucketed to a fixed shape rung (``bucket_rows``) so decode
+        steps reuse a handful of jit entries instead of recompiling on
+        every routing-skew change.
+        """
+        assign, B = self._assign_by_expert(top_p, top_i, ids)
+        C = bucket_rows(max(len(a) for a in assign))
         gather = np.full((len(ids), C), B, np.int32)   # B = zero-pad token
         gates = np.zeros((len(ids), C), np.float32)
         for r, a in enumerate(assign):
             for c, (b, g) in enumerate(a):
                 gather[r, c] = b
                 gates[r, c] = g
+        self.overlap_stats["tokens_real"] += sum(len(a) for a in assign)
+        self.overlap_stats["tokens_padded"] += len(ids) * C
         return gather, gates
+
+    def _gather_by_expert_ragged(self, top_p, top_i, ids, block_c: int = 8):
+        """CSR token->expert tables for the slot-indexed ragged GEMM.
+
+        Token rows are concatenated group by group (``ids`` order); each
+        group is padded only to a ``block_c``-row tile boundary (a tile
+        must not straddle experts), and the TOTAL tile count is bucketed to
+        a fixed rung.  Pad rows aim at the zero token B with gate 0 and
+        tiles past the last group at expert row 0 (any valid slot), so they
+        contribute nothing.  Returns (gather [T] int32, gates [T] f32,
+        tile_row [T/block_c] int32 rows into ``ids``).
+        """
+        assign, B = self._assign_by_expert(top_p, top_i, ids)
+        tiles = [-(-max(len(a), 1) // block_c) for a in assign]
+        n_tiles = bucket_rows(sum(tiles), align=1)
+        T = n_tiles * block_c
+        gather = np.full(T, B, np.int32)               # B = zero-pad token
+        gates = np.zeros(T, np.float32)
+        tile_row = np.zeros(n_tiles, np.int32)
+        t = 0
+        for r, a in enumerate(assign):
+            tile_row[t // block_c: t // block_c + tiles[r]] = r
+            for b, g in a:
+                gather[t] = b
+                gates[t] = g
+                t += 1
+            t = -(-t // block_c) * block_c             # next tile boundary
+        self.overlap_stats["tokens_real"] += sum(len(a) for a in assign)
+        self.overlap_stats["tokens_padded"] += T
+        return gather, gates, tile_row
 
     def _as_weight(self, v) -> jnp.ndarray:
         """One expert tensor as a device array: slab slots read in place,
@@ -725,9 +785,41 @@ class ZipServer:
             # falls through to _as_weight, whose read() asserts (a crash
             # tripwire for slot-lifecycle bugs, not a corruption)
             if all(v.slab is slab and v.valid for v in vals):
-                return slab.gather(name, [v.slot for v in vals])
+                w = slab.gather(name, [v.slot for v in vals])
+                self.engine.count_w_copy(int(w.size) * w.dtype.itemsize)
+                return w
         # host-sync-ok: fallback — host/mixed steps pay the re-upload (h2d_bytes)
-        return jnp.stack([self._as_weight(v) for v in vals])
+        w = jnp.stack([self._as_weight(v) for v in vals])
+        self.engine.count_w_copy(int(w.size) * w.dtype.itemsize)
+        return w
+
+    def _slab_sources(self, name: str, weights, ids):  # hot-path
+        """(buffer, slots) weight source for the slot-indexed ragged GEMM.
+
+        Zero-copy fast path: every selected expert's tensor is a valid
+        SlotRef into the SAME layer slab — return the slab's buffer itself
+        (read in place by the megakernel) plus the per-expert slot vector;
+        no weight bytes move, nothing is charged.  Otherwise fall back to a
+        stacked [Ea, ...] batch (charged to ``w_copy_bytes``) indexed by
+        stack row."""
+        vals = [weights[e][name] for e in ids]
+        if vals and all(isinstance(v, SlotRef) for v in vals):
+            slab = vals[0].slab
+            if all(v.slab is slab and v.valid for v in vals):
+                return (slab.bufs[name],
+                        # host-sync-ok: host slot-index vector, no transfer
+                        np.asarray([v.slot for v in vals], np.int32))
+        # host-sync-ok: fallback — mixed/host steps stage a weight copy
+        w = jnp.stack([self._as_weight(v) for v in vals])
+        self.engine.count_w_copy(int(w.size) * w.dtype.itemsize)
+        return w, np.arange(len(ids), dtype=np.int32)
+
+    def _note_gemm_shape(self, *key):
+        """Count DISTINCT expert-GEMM shape keys (jit-cache churn proxy —
+        every new key is one more compile; see ``bucket_rows``)."""
+        if key not in self._gemm_shapes:
+            self._gemm_shapes.add(key)
+            self.overlap_stats["gemm_compiles"] += 1
 
     def _ffn_grouped(self, x, top_p, top_i, weights, ids):  # hot-path
         """Gather-by-expert batched FFN on the grouped-GEMM kernel."""
@@ -741,6 +833,7 @@ class ZipServer:
             return self._stack_weights(name, weights, ids)
 
         C = xg.shape[1]
+        self._note_gemm_shape("grouped", len(ids), C)
         gg = lambda a, w: grouped_expert_gemm(
             a, w, block_c=_pick_block(C, 128), block_d=_pick_block(a.shape[-1], 512),
             block_f=_pick_block(w.shape[-1], 128))
@@ -755,9 +848,88 @@ class ZipServer:
             eout.reshape(-1, d).astype(jnp.float32))
         return comb[:B].astype(x.dtype).reshape(B, 1, d)
 
+    def _ffn_ragged(self, x, top_p, top_i, weights, ids):  # hot-path
+        """Slot-indexed ragged grouped FFN — the megakernel hot path.
+
+        Tokens ride in CSR order (per-group tile padding only, total tile
+        count bucketed); the per-tile slot vector is scalar-prefetched and
+        the kernel reads each expert's weights straight out of the slab
+        buffer — zero weight-copy bytes on the all-slab-resident fast path
+        (``_slab_sources``).  Bit-identical to ``_ffn_grouped``: per-row
+        GEMM results are blocking-invariant and the scatter-add combine
+        sees the same per-destination contribution order (group order and
+        in-group token order match; pad rows only ever touch token B)."""
+        B, _, d = x.shape
+        block_c = 8
+        gather, gates, tile_row = self._gather_by_expert_ragged(
+            top_p, top_i, ids, block_c)
+        xf = x.reshape(B, d)
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+        xg = xpad[jnp.asarray(gather)]                     # [T, d]
+        self._note_gemm_shape("ragged", gather.size)
+
+        def sg(a, src):                                    # one megakernel
+            buf, slots = src
+            return slab_gemm(a, buf, slots[tile_row], block_c=block_c,
+                             block_d=_pick_block(a.shape[-1], 512),
+                             block_f=_pick_block(buf.shape[-1], 128))
+
+        if "w_gate" in weights[ids[0]]:
+            h = jax.nn.silu(sg(xg, self._slab_sources("w_gate", weights,
+                                                      ids))) * \
+                sg(xg, self._slab_sources("w_up", weights, ids))
+        else:
+            h = jax.nn.gelu(sg(xg, self._slab_sources("w_up", weights, ids)))
+        eout = sg(h, self._slab_sources("w_down", weights, ids))   # [T, d]
+        comb = jnp.zeros((B + 1, d), jnp.float32).at[
+            jnp.asarray(gather)].add(
+            jnp.asarray(gates[:, None]) * eout.astype(jnp.float32))
+        return comb[:B].astype(x.dtype).reshape(B, 1, d)
+
     def _ffn_zip_gemm(self, x, top_p, top_i, weights, ids):
-        """Fused recovery+GEMM: expert weights stay as bit-planes; zip_gemm
-        splices them to bf16 on VREGs right before the MXU."""
+        """Fused recovery+GEMM, ONE batched launch per projection: expert
+        weights stay u8 bit-planes and ``zip_gemm_grouped`` splices them to
+        bf16 on VREGs right before the MXU, for every active expert of the
+        step at once (the historical per-expert Python loop survives as
+        ``_ffn_zip_loop``, selected by ``ffn_impl="loop"``).  Plane uploads
+        are charged to ``h2d_bytes``."""
+        B, _, d = x.shape
+        gather, gates = self._gather_by_expert(top_p, top_i, ids)
+        xf = x.reshape(B, d).astype(jnp.bfloat16)
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+        xg = xpad[jnp.asarray(gather)]                      # [Ea, C, d]
+        C = xg.shape[1]
+        self._note_gemm_shape("zip", len(ids), C)
+
+        def planes(name):
+            ps: List[BitPlanes] = [weights[e][name] for e in ids]
+            D, F = ps[0].shape
+            exp = np.stack([p.exp.reshape(D, F) for p in ps])
+            sm = np.stack([p.sm.reshape(D, F) for p in ps])
+            self.engine.count_h2d(exp.nbytes + sm.nbytes)
+            return jnp.asarray(exp), jnp.asarray(sm)
+
+        def zg(a, pl):
+            exp, sm = pl
+            return zip_gemm_batch(a, exp, sm,
+                                  block_c=_pick_block(C, 128),
+                                  block_d=_pick_block(exp.shape[1], 512),
+                                  block_f=_pick_block(exp.shape[2], 128))
+
+        if "w_gate" in weights[ids[0]]:
+            h = jax.nn.silu(zg(xg, planes("w_gate"))) * zg(xg, planes("w_up"))
+        else:
+            h = jax.nn.gelu(zg(xg, planes("w_up")))
+        eout = zg(h.astype(jnp.bfloat16), planes("w_down"))  # [Ea, C, d]
+        comb = jnp.zeros((B + 1, d), jnp.float32).at[
+            jnp.asarray(gather.reshape(-1))].add(
+            jnp.asarray(gates.reshape(-1, 1)) *
+            eout.reshape(-1, d).astype(jnp.float32))
+        return comb[:B].astype(x.dtype).reshape(B, 1, d)
+
+    def _ffn_zip_loop(self, x, top_p, top_i, weights, ids):
+        """Per-expert fused recovery+GEMM loop (pre-batching fallback,
+        pinned equal to :meth:`_ffn_zip_gemm` by tests)."""
         B, _, d = x.shape
         gather, gates = self._gather_by_expert(top_p, top_i, ids)
         xf = x.reshape(B, d).astype(jnp.bfloat16)
@@ -772,7 +944,7 @@ class ZipServer:
                 block_d=_pick_block(D, 512), block_f=_pick_block(F, 128))
 
         comb = jnp.zeros((B + 1, d), jnp.float32)
-        for r, e in enumerate(ids):
+        for r, e in enumerate(ids):   # loop-ok: validation fallback path
             w = weights[e]
             xe = xpad[gather[r]]                            # [C, d]
             if "w_gate" in w:
@@ -820,6 +992,7 @@ class ZipServer:
         # the whole re-upload on a host-mode hit)
         h2d0 = self.engine.h2d_bytes
         splice0 = self.engine.splice_s
+        wcopy0 = self.engine.w_copy_bytes
         if self.prefetch:
             # overlap the next MoE layer's reconstruction with this layer's
             # FFN and the following layers' attention compute
@@ -846,11 +1019,14 @@ class ZipServer:
         fetch_s = time.perf_counter() - t0
         t_ffn = time.perf_counter()
         if self.fused_recovery:
-            y = self._ffn_zip_gemm(x, top_p, top_i, weights, ids)
+            y = (self._ffn_zip_loop if self.ffn_impl == "loop"
+                 else self._ffn_zip_gemm)(x, top_p, top_i, weights, ids)
         elif self.ffn_impl == "loop":
             y = self._ffn_loop(x, top_p, top_i, weights)
-        else:
+        elif self.ffn_impl == "grouped":
             y = self._ffn_grouped(x, top_p, top_i, weights, ids)
+        else:
+            y = self._ffn_ragged(x, top_p, top_i, weights, ids)
         if self.profile_p_times:
             # refine the measured bucket with the *actual* expert FFN wall
             # time (EMA) — forcing the value here keeps the observation
@@ -870,6 +1046,7 @@ class ZipServer:
                            "blocked_s": blocked_s, "io_bytes": io_bytes,
                            "n_experts": len(ids),
                            "h2d_bytes": self.engine.h2d_bytes - h2d0,
+                           "w_copy_bytes": self.engine.w_copy_bytes - wcopy0,
                            "splice_s": self.engine.splice_s - splice0})
         return y
 
